@@ -1,0 +1,99 @@
+"""Competitor-like schedulers for the paper's comparisons.
+
+* ``unoptimized``   — plain nests, no pragmas (the paper's baseline).
+* ``scalehls_like`` — loop-level-only optimizer: per-node interchange when
+  the fused structure permits + pipeline/unroll/partition ladder (stage 2).
+  No loop distribution, no skewing, no split-interchange-merge — the
+  capability gap Table I attributes to single-IR frameworks.
+* ``pom``           — the full two-stage DSE (stage 1 + stage 2).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.core.cost_model import DesignReport, HlsModel
+from repro.core.dse import (DseResult, Stage1Log, _desired_inner_dims, _is_tight,
+                            _move_innermost, auto_dse, stage2)
+from repro.core.dsl import PomFunction
+from repro.core.ir import Function
+from repro.core import transforms as T
+
+
+def _fn(f) -> Function:
+    return f.fn if isinstance(f, PomFunction) else f
+
+
+@dataclass
+class SchedResult:
+    report: DesignReport
+    seconds: float
+    tiles: Dict[str, list]
+    label: str
+
+
+def unoptimized(fn) -> SchedResult:
+    fn = _fn(fn)
+    t0 = time.perf_counter()
+    rep = HlsModel().design_report(fn)
+    return SchedResult(rep, time.perf_counter() - t0,
+                       {s.name: [1] * len(s.dims) for s in fn.statements},
+                       "unoptimized")
+
+
+def scalehls_like(fn, max_parallel: int = 256) -> SchedResult:
+    """Interchange-only dependence handling + the stage-2 ladder.
+
+    ScaleHLS interchanges the *whole loop nest*: in a fused nest every
+    member statement gets the same positional permutation — which is exactly
+    why it cannot fix BICG (paper Fig. 2d): relieving one statement's
+    dependence tightens the other's.
+    """
+    fn = _fn(fn)
+    t0 = time.perf_counter()
+    from repro.core.cost_model import _fusion_groups
+    for grp in _fusion_groups(fn):
+        if not any(_is_tight(s) for s in grp):
+            continue
+        ndims = min(len(s.dims) for s in grp)
+
+        def tight_count():
+            return sum(1 for s in grp if _is_tight(s))
+
+        best = tight_count()
+        # try moving each positional level innermost, jointly for the group
+        for lvl in range(ndims - 1):
+            snaps = [(s, s.domain) for s in grp]
+            try:
+                for s in grp:
+                    order = [d for k, d in enumerate(s.dims) if k != lvl] + \
+                        [s.dims[lvl]]
+                    old = s.domain
+                    s.domain = s.domain.permute(order)
+                    if not T._legal(s):
+                        s.domain = old
+                        raise T.IllegalTransform(s.name)
+            except T.IllegalTransform:
+                for s, dom in snaps:
+                    s.domain = dom
+                continue
+            if tight_count() <= best:
+                # ScaleHLS eagerly applies the interchange even when it only
+                # *moves* the tight dependence between statements (the BICG
+                # behaviour of paper Fig. 2d)
+                best = tight_count()
+                break
+            for s, dom in snaps:
+                s.domain = dom
+    actions: list = []
+    rep = stage2(fn, HlsModel(), max_parallel, actions)
+    tiles = {s.name: [s.unrolls.get(d, 1) for d in s.dims]
+             for s in fn.statements}
+    return SchedResult(rep, time.perf_counter() - t0, tiles, "scalehls_like")
+
+
+def pom(fn, max_parallel: int = 256) -> SchedResult:
+    fn = _fn(fn)
+    res = auto_dse(fn, max_parallel=max_parallel)
+    return SchedResult(res.report, res.dse_seconds, res.tile_sizes, "pom")

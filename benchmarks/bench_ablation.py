@@ -1,0 +1,78 @@
+"""Fig. 14: impact analysis of individual scheduling primitives.
+
+Applies one primitive (family) at a time to representative benchmarks and
+reports speedup over the unoptimized baseline: LP (pipeline), LP+LU
+(pipeline+unroll+partition), LI (interchange first), LSK (skew first), and
+the full combination -- mirroring the paper's observation that different
+benchmarks need different primitives (Seidel needs skewing; 2MM needs the
+combination).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.cost_model import HlsModel
+from repro.core.dse import (_apply_parallel, _is_tight, refresh_partitions,
+                            stage1, stage2)
+from .baselines import _fn, unoptimized
+from .workloads import POLYBENCH, STENCILS
+
+
+def _lat(fn):
+    refresh_partitions(fn)
+    return HlsModel().design_report(fn).latency
+
+
+def ablate(builder, size) -> Dict[str, float]:
+    base = unoptimized(builder(size)).report.latency
+    out = {}
+
+    # LP: pipeline innermost only
+    fn = _fn(builder(size))
+    for s in fn.statements:
+        s.pipeline_at = s.dims[-1]
+        s.pipeline_ii = 1
+    out["LP"] = base / _lat(fn)
+
+    # LP+LU+AP: pipeline + unroll 16 + partition (no loop transforms)
+    fn = _fn(builder(size))
+    for s in fn.statements:
+        _apply_parallel(s, (16,))
+    out["LP+LU+AP"] = base / _lat(fn)
+
+    # LI then hardware opts: stage-1 interchange/distribution only
+    fn = _fn(builder(size))
+    stage1(fn)
+    for s in fn.statements:
+        _apply_parallel(s, (16,))
+    out["LI(+st1)+LU"] = base / _lat(fn)
+
+    # full DSE
+    fn = _fn(builder(size))
+    stage1(fn)
+    stage2(fn, HlsModel())
+    out["full"] = base / _lat(fn)
+    return out
+
+
+BENCHES = {"bicg": (POLYBENCH["bicg"], 1024),
+           "2mm": (POLYBENCH["2mm"], 512),
+           "seidel": (STENCILS["seidel"], 500),
+           "gemm": (POLYBENCH["gemm"], 1024)}
+
+
+def run() -> List[Dict]:
+    rows = []
+    for name, (builder, size) in BENCHES.items():
+        r = ablate(builder, size)
+        r["bench"] = name
+        rows.append(r)
+    return rows
+
+
+def csv_rows() -> List[str]:
+    out = []
+    for r in run():
+        parts = ";".join(f"{k}={v:.1f}x" for k, v in r.items() if k != "bench")
+        out.append(f"ablation/{r['bench']},0,{parts}")
+    return out

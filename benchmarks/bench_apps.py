@@ -1,0 +1,93 @@
+"""Table V/VI + Fig 13: image-processing pipelines and DNN conv stacks.
+
+Image apps: POM vs ScaleHLS-like on EdgeDetect / Gaussian / Blur.
+DNN apps: the paper's strategy comparison — POM runs layers sequentially
+with full-board resources per layer (resource reuse), ScaleHLS-like splits
+the board across layers for a dataflow pipeline whose latency is the
+bottleneck layer on 1/#layers resources.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.cost_model import XC7Z020, HlsModel
+from .baselines import pom, scalehls_like, unoptimized
+from .workloads import IMAGE, dnn_layers
+
+PAPER_IMAGE = {"edge_detect": (19.1, 344.0), "gaussian": (111.4, 312.0),
+               "blur": (59.3, 356.0)}   # (scalehls, pom)
+PAPER_DNN = {"vgg16": (33.6, 86.8), "resnet18": (50.8, 46.4)}
+
+
+def run_image(size: int = 2048) -> List[Dict]:
+    rows = []
+    for name, builder in IMAGE.items():
+        base = unoptimized(builder(size))
+        sh = scalehls_like(builder(size))
+        pm = pom(builder(size))
+        ps, pp = PAPER_IMAGE[name]
+        rows.append({
+            "bench": name, "size": size,
+            "pom_speedup": base.report.latency / pm.report.latency,
+            "scalehls_like_speedup": base.report.latency / sh.report.latency,
+            "pom_ii": max(nd.ii for nd in pm.report.nodes.values()),
+            "paper_pom": pp, "paper_scalehls": ps,
+            "dse_seconds": pm.seconds,
+        })
+    return rows
+
+
+def run_dnn(net: str = "resnet18", budget_frac: float = 1.0) -> Dict:
+    """Aggregate latency over the net's critical conv loops.
+
+    POM strategy: sequential layers, each DSE'd with the full resource
+    budget (resource reuse between layers) -> total = sum(per-layer
+    optimized latency).
+    ScaleHLS-like dataflow: each layer gets budget/#layers as a pipeline
+    stage; a single inference traverses every stage, so its latency is the
+    sum of per-layer latencies at the 1/L budget (paper Fig. 13: per-layer
+    parallelism degrades to ~1, hurting large-#layer nets).
+    """
+    layers = dnn_layers(net)
+    L = len(layers)
+    full = dict(XC7Z020)
+    split = {k: (v / L if k != "bram_bits" else v / L) for k, v in XC7Z020.items()}
+
+    seq_total = 0
+    base_total = 0
+    df_total = 0
+    for name, builder in layers:
+        base = unoptimized(builder())
+        base_total += base.report.latency
+        from repro.core.dse import auto_dse
+        res_full = auto_dse(builder().fn, resources=full, max_parallel=64)
+        seq_total += res_full.report.latency
+        res_split = auto_dse(builder().fn, resources=split, max_parallel=64)
+        df_total += res_split.report.latency
+
+    pom_speedup = base_total / seq_total
+    scalehls_speedup = base_total / df_total
+    ps, pp = PAPER_DNN[net]
+    return {
+        "net": net, "layers": L,
+        "pom_speedup": pom_speedup,
+        "scalehls_like_speedup": scalehls_speedup,
+        "paper_pom": pp, "paper_scalehls": ps,
+    }
+
+
+def csv_rows(image_size: int = 2048, dnn: bool = True) -> List[str]:
+    out = []
+    for r in run_image(image_size):
+        out.append(f"image/{r['bench']},{r['dse_seconds'] * 1e6:.0f},"
+                   f"pom_speedup={r['pom_speedup']:.1f}x;"
+                   f"scalehls_like={r['scalehls_like_speedup']:.1f}x;"
+                   f"paper_pom={r['paper_pom']}x")
+    if dnn:
+        for net in ("vgg16", "resnet18"):
+            r = run_dnn(net)
+            out.append(f"dnn/{net},0,pom_speedup={r['pom_speedup']:.1f}x;"
+                       f"scalehls_like={r['scalehls_like_speedup']:.1f}x;"
+                       f"paper_pom={r['paper_pom']}x;"
+                       f"paper_scalehls={r['paper_scalehls']}x")
+    return out

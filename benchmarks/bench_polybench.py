@@ -1,0 +1,60 @@
+"""Table III: Polybench at size 4096 — POM vs ScaleHLS-like vs unoptimized.
+
+Latency is the calibrated XC7Z020 HLS model (the paper's numbers are Vitis
+synthesis-report estimates, same epistemic level).  Reports speedup,
+achieved II, tile/unroll factors, parallelism degree and DSE seconds.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .baselines import pom, scalehls_like, unoptimized
+from .workloads import POLYBENCH
+
+# the paper's Table III reference numbers (speedup over unoptimized)
+PAPER_SPEEDUP = {"gemm": 575.9, "bicg": 224.0, "gesummv": 223.2,
+                 "2mm": 510.1, "3mm": 335.4}
+PAPER_SCALEHLS = {"gemm": 576.1, "bicg": 41.7, "gesummv": 199.1,
+                  "2mm": 31.0, "3mm": 40.1}
+
+
+def run(size: int = 4096) -> List[Dict]:
+    rows = []
+    for name, builder in POLYBENCH.items():
+        base = unoptimized(builder(size))
+        sh = scalehls_like(builder(size))
+        pm = pom(builder(size))
+        row = {
+            "bench": name,
+            "size": size,
+            "baseline_cycles": base.report.latency,
+            "scalehls_like_speedup": base.report.latency / sh.report.latency,
+            "pom_speedup": base.report.latency / pm.report.latency,
+            "pom_vs_scalehls": sh.report.latency / pm.report.latency,
+            "pom_ii": max(n.ii for n in pm.report.nodes.values()),
+            "scalehls_ii": max(n.ii for n in sh.report.nodes.values()),
+            "pom_parallelism": pm.report.parallelism,
+            "scalehls_parallelism": sh.report.parallelism,
+            "pom_tiles": pm.tiles,
+            "pom_dsp": pm.report.dsp,
+            "pom_feasible": pm.report.feasible,
+            "dse_seconds": pm.seconds,
+            "paper_pom_speedup": PAPER_SPEEDUP[name],
+            "paper_scalehls_speedup": PAPER_SCALEHLS[name],
+        }
+        rows.append(row)
+    return rows
+
+
+def csv_rows(size: int = 4096) -> List[str]:
+    out = []
+    for r in run(size):
+        est_us = r["baseline_cycles"] / r["pom_speedup"] / 100.0  # 100 MHz
+        out.append(
+            f"polybench/{r['bench']},{est_us:.1f},"
+            f"pom_speedup={r['pom_speedup']:.1f}x;"
+            f"scalehls_like={r['scalehls_like_speedup']:.1f}x;"
+            f"pom_ii={r['pom_ii']};par={r['pom_parallelism']:.1f};"
+            f"paper_pom={r['paper_pom_speedup']}x;"
+            f"dse_s={r['dse_seconds']:.1f}")
+    return out

@@ -1,0 +1,99 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh):
+  compute term    = HLO_flops_per_device / peak  (197 TFLOP/s bf16)
+  memory term     = HLO_bytes_per_device / HBM_bw (819 GB/s)
+  collective term = collective_bytes_per_device / link_bw (50 GB/s)
+plus the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, and fit verdict.
+
+HLO flops/bytes come from the scan-corrected extrapolation the dry-run
+records ('corrected'); collective bytes are HLO-parsed per device.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def load_cells(results_dir: str = RESULTS_DIR) -> List[Dict]:
+    cells = []
+    for p in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_row(cell: Dict) -> Optional[Dict]:
+    if cell.get("status") == "skipped":
+        return {"arch": cell["arch"], "shape": cell["shape"],
+                "mesh": cell["mesh"], "status": "skipped",
+                "reason": cell.get("reason", "")}
+    if cell.get("status") != "ok" or "corrected" not in cell:
+        return None
+    c = cell["corrected"]
+    compute_s = c["flops"] / PEAK_FLOPS
+    memory_s = c["bytes"] / HBM_BW
+    coll_bytes = sum(c.get("collectives", {}).values())
+    collective_s = coll_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = terms[dominant]
+    mf = cell.get("model_flops_per_device", 0.0)
+    # roofline fraction: useful-model-compute time over the bound term
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "status": "ok",
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "bound_s": bound,
+        "model_flops_per_device": mf,
+        "hlo_flops_per_device": c["flops"],
+        "useful_ratio": mf / c["flops"] if c["flops"] else 0.0,
+        "roofline_fraction": frac,
+        "bytes_per_device_temp": cell.get("memory", {}).get(
+            "temp_size_in_bytes", 0),
+        "fits_16gb": cell.get("fits_16gb"),
+        "collectives": c.get("collectives", {}),
+    }
+
+
+def table(results_dir: str = RESULTS_DIR, mesh: Optional[str] = "16x16") -> List[Dict]:
+    rows = []
+    for cell in load_cells(results_dir):
+        if mesh and cell.get("mesh") != mesh:
+            continue
+        r = roofline_row(cell)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def csv_rows(results_dir: str = RESULTS_DIR) -> List[str]:
+    out = []
+    for r in table(results_dir, mesh="16x16"):
+        if r["status"] == "skipped":
+            out.append(f"roofline/{r['arch']}/{r['shape']},0,skipped")
+            continue
+        out.append(
+            f"roofline/{r['arch']}/{r['shape']},{r['bound_s'] * 1e6:.1f},"
+            f"dominant={r['dominant']};compute_s={r['compute_s']:.2e};"
+            f"memory_s={r['memory_s']:.2e};collective_s={r['collective_s']:.2e};"
+            f"useful={r['useful_ratio']:.2f};"
+            f"roofline_frac={r['roofline_fraction']:.2f};"
+            f"fits16gb={r['fits_16gb']}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in csv_rows():
+        print(line)

@@ -1,0 +1,38 @@
+"""Fig. 12: problem-size scaling 32 .. 8192 (POM vs ScaleHLS-like).
+
+The paper's claim: both frameworks improve steadily up to 2048; at 4096 and
+8192 ScaleHLS degrades while POM keeps generating high-quality designs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .baselines import pom, scalehls_like, unoptimized
+from .workloads import POLYBENCH
+
+SIZES = (32, 128, 512, 2048, 4096, 8192)
+
+
+def run(benches=("gemm", "bicg")) -> List[Dict]:
+    rows = []
+    for name in benches:
+        builder = POLYBENCH[name]
+        for n in SIZES:
+            base = unoptimized(builder(n))
+            sh = scalehls_like(builder(n))
+            pm = pom(builder(n))
+            rows.append({
+                "bench": name, "size": n,
+                "pom_speedup": base.report.latency / pm.report.latency,
+                "scalehls_like_speedup": base.report.latency / sh.report.latency,
+            })
+    return rows
+
+
+def csv_rows() -> List[str]:
+    out = []
+    for r in run():
+        out.append(f"scaling/{r['bench']}/{r['size']},0,"
+                   f"pom={r['pom_speedup']:.1f}x;"
+                   f"scalehls_like={r['scalehls_like_speedup']:.1f}x")
+    return out

@@ -1,0 +1,276 @@
+"""The paper's benchmark workloads, written in POM DSL.
+
+Builders return a fresh ``PomFunction`` per call (DSE mutates schedules).
+Suites:
+  * Polybench (Table III): gemm, bicg, gesummv, mm2, mm3
+  * Stencils (Table VII):  jacobi1d, jacobi2d, heat1d, seidel
+  * Image (Table V):       edge_detect, gaussian, blur
+  * DNN (Table V/Fig 13):  vgg16 / resnet18 critical conv nests
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+from repro.core import dsl as pom
+
+
+# ---------------------------------------------------------------------------
+# Polybench
+# ---------------------------------------------------------------------------
+def gemm(n: int = 4096):
+    with pom.function("gemm") as f:
+        i, j, k = pom.var("i", 0, n), pom.var("j", 0, n), pom.var("k", 0, n)
+        A = pom.placeholder("A", (n, n))
+        B = pom.placeholder("B", (n, n))
+        C = pom.placeholder("C", (n, n))
+        pom.compute("s", [i, j, k], C(i, j) + A(i, k) * B(k, j), C(i, j))
+    return f
+
+
+def bicg(n: int = 4096):
+    with pom.function("bicg") as f:
+        i, j = pom.var("i", 0, n), pom.var("j", 0, n)
+        A = pom.placeholder("A", (n, n))
+        p = pom.placeholder("p", (n,))
+        r = pom.placeholder("r", (n,))
+        q = pom.placeholder("q", (n,))
+        s_arr = pom.placeholder("s", (n,))
+        sq = pom.compute("sq", [i, j], q(i) + A(i, j) * p(j), q(i))
+        ss = pom.compute("ss", [i, j], s_arr(j) + r(i) * A(i, j), s_arr(j))
+        ss.after(sq, 1)
+    return f
+
+
+def gesummv(n: int = 4096):
+    with pom.function("gesummv") as f:
+        i, j = pom.var("i", 0, n), pom.var("j", 0, n)
+        i2 = pom.var("i2", 0, n)
+        A = pom.placeholder("A", (n, n))
+        B = pom.placeholder("B", (n, n))
+        x = pom.placeholder("x", (n,))
+        tmp = pom.placeholder("tmp", (n,))
+        y = pom.placeholder("y", (n,))
+        s1 = pom.compute("s1", [i, j], tmp(i) + A(i, j) * x(j), tmp(i))
+        s2 = pom.compute("s2", [i, j], y(i) + B(i, j) * x(j), y(i))
+        s2.after(s1, 1)
+        s3 = pom.compute("s3", [i2], 1.5 * tmp(i2) + 1.2 * y(i2), y(i2))
+    return f
+
+
+def mm2(n: int = 4096):
+    with pom.function("mm2") as f:
+        i, j, k = pom.var("i", 0, n), pom.var("j", 0, n), pom.var("k", 0, n)
+        i2, j2, k2 = pom.var("i2", 0, n), pom.var("j2", 0, n), pom.var("k2", 0, n)
+        A = pom.placeholder("A", (n, n))
+        B = pom.placeholder("B", (n, n))
+        C = pom.placeholder("C", (n, n))
+        tmp = pom.placeholder("tmp", (n, n))
+        D = pom.placeholder("D", (n, n))
+        pom.compute("s1", [i, j, k], tmp(i, j) + A(i, k) * B(k, j), tmp(i, j))
+        pom.compute("s2", [i2, j2, k2], D(i2, j2) + tmp(i2, k2) * C(k2, j2),
+                    D(i2, j2))
+    return f
+
+
+def mm3(n: int = 4096):
+    with pom.function("mm3") as f:
+        dims = {}
+        for t in range(3):
+            for d in "ijk":
+                dims[f"{d}{t}"] = pom.var(f"{d}{t}", 0, n)
+        A = pom.placeholder("A", (n, n))
+        B = pom.placeholder("B", (n, n))
+        C = pom.placeholder("C", (n, n))
+        D = pom.placeholder("D", (n, n))
+        E = pom.placeholder("E", (n, n))
+        F = pom.placeholder("F", (n, n))
+        G = pom.placeholder("G", (n, n))
+        pom.compute("s1", [dims["i0"], dims["j0"], dims["k0"]],
+                    E(dims["i0"], dims["j0"]) + A(dims["i0"], dims["k0"]) *
+                    B(dims["k0"], dims["j0"]), E(dims["i0"], dims["j0"]))
+        pom.compute("s2", [dims["i1"], dims["j1"], dims["k1"]],
+                    F(dims["i1"], dims["j1"]) + C(dims["i1"], dims["k1"]) *
+                    D(dims["k1"], dims["j1"]), F(dims["i1"], dims["j1"]))
+        pom.compute("s3", [dims["i2"], dims["j2"], dims["k2"]],
+                    G(dims["i2"], dims["j2"]) + E(dims["i2"], dims["k2"]) *
+                    F(dims["k2"], dims["j2"]), G(dims["i2"], dims["j2"]))
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Stencils (Table VII)
+# ---------------------------------------------------------------------------
+def jacobi1d(n: int = 4096, steps: int = 100):
+    with pom.function("jacobi1d") as f:
+        t = pom.var("t", 0, steps)
+        i = pom.var("i", 1, n - 1)
+        t2 = pom.var("t2", 0, steps)
+        i2 = pom.var("i2", 1, n - 1)
+        A = pom.placeholder("A", (n,))
+        B = pom.placeholder("B", (n,))
+        s1 = pom.compute("s1", [t, i],
+                         0.33333 * (A(i - 1) + A(i) + A(i + 1)), B(i))
+        s2 = pom.compute("s2", [t2, i2], B(i2), A(i2))
+        s2.after(s1, 0)
+    return f
+
+
+def heat1d(n: int = 4096, steps: int = 100):
+    with pom.function("heat1d") as f:
+        t = pom.var("t", 0, steps)
+        i = pom.var("i", 1, n - 1)
+        t2 = pom.var("t2", 0, steps)
+        i2 = pom.var("i2", 1, n - 1)
+        A = pom.placeholder("A", (n,))
+        B = pom.placeholder("B", (n,))
+        s1 = pom.compute("s1", [t, i],
+                         0.125 * (A(i + 1) - 2.0 * A(i) + A(i - 1)) + A(i),
+                         B(i))
+        s2 = pom.compute("s2", [t2, i2], B(i2), A(i2))
+        s2.after(s1, 0)
+    return f
+
+
+def jacobi2d(n: int = 1024, steps: int = 10):
+    with pom.function("jacobi2d") as f:
+        t = pom.var("t", 0, steps)
+        i, j = pom.var("i", 1, n - 1), pom.var("j", 1, n - 1)
+        t2 = pom.var("t2", 0, steps)
+        i2, j2 = pom.var("i2", 1, n - 1), pom.var("j2", 1, n - 1)
+        A = pom.placeholder("A", (n, n))
+        B = pom.placeholder("B", (n, n))
+        s1 = pom.compute("s1", [t, i, j],
+                         0.2 * (A(i, j) + A(i, j - 1) + A(i, j + 1)
+                                + A(i + 1, j) + A(i - 1, j)), B(i, j))
+        s2 = pom.compute("s2", [t2, i2, j2], B(i2, j2), A(i2, j2))
+        s2.after(s1, 0)
+    return f
+
+
+def seidel(n: int = 1024, steps: int = 10):
+    with pom.function("seidel") as f:
+        t = pom.var("t", 0, steps)
+        i, j = pom.var("i", 1, n - 1), pom.var("j", 1, n - 1)
+        A = pom.placeholder("A", (n, n))
+        pom.compute("s", [t, i, j],
+                    0.2 * (A(i - 1, j) + A(i, j - 1) + A(i, j)
+                           + A(i, j + 1) + A(i + 1, j)), A(i, j))
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Image processing (Table V)
+# ---------------------------------------------------------------------------
+def gaussian(n: int = 4096):
+    with pom.function("gaussian") as f:
+        i, j = pom.var("i", 1, n - 1), pom.var("j", 1, n - 1)
+        img = pom.placeholder("img", (n, n))
+        out = pom.placeholder("out", (n, n))
+        pom.compute("g", [i, j],
+                    0.0625 * (img(i - 1, j - 1) + 2.0 * img(i - 1, j)
+                              + img(i - 1, j + 1) + 2.0 * img(i, j - 1)
+                              + 4.0 * img(i, j) + 2.0 * img(i, j + 1)
+                              + img(i + 1, j - 1) + 2.0 * img(i + 1, j)
+                              + img(i + 1, j + 1)), out(i, j))
+    return f
+
+
+def blur(n: int = 4096):
+    """Halide's two-pass blur: blurx then blury."""
+    with pom.function("blur") as f:
+        i, j = pom.var("i", 0, n), pom.var("j", 1, n - 1)
+        i2, j2 = pom.var("i2", 1, n - 1), pom.var("j2", 1, n - 1)
+        img = pom.placeholder("img", (n, n))
+        bx = pom.placeholder("bx", (n, n))
+        out = pom.placeholder("out", (n, n))
+        pom.compute("blurx", [i, j],
+                    0.33333 * (img(i, j - 1) + img(i, j) + img(i, j + 1)),
+                    bx(i, j))
+        pom.compute("blury", [i2, j2],
+                    0.33333 * (bx(i2 - 1, j2) + bx(i2, j2) + bx(i2 + 1, j2)),
+                    out(i2, j2))
+    return f
+
+
+def edge_detect(n: int = 4096):
+    """Gaussian smooth + gradient magnitude (two dependent 3x3 stages)."""
+    with pom.function("edge_detect") as f:
+        i, j = pom.var("i", 1, n - 1), pom.var("j", 1, n - 1)
+        i2, j2 = pom.var("i2", 2, n - 2), pom.var("j2", 2, n - 2)
+        img = pom.placeholder("img", (n, n))
+        sm = pom.placeholder("sm", (n, n))
+        out = pom.placeholder("out", (n, n))
+        pom.compute("smooth", [i, j],
+                    0.111 * (img(i - 1, j - 1) + img(i - 1, j) + img(i - 1, j + 1)
+                             + img(i, j - 1) + img(i, j) + img(i, j + 1)
+                             + img(i + 1, j - 1) + img(i + 1, j)
+                             + img(i + 1, j + 1)), sm(i, j))
+        pom.compute("grad", [i2, j2],
+                    (sm(i2 + 1, j2) - sm(i2 - 1, j2)) *
+                    (sm(i2 + 1, j2) - sm(i2 - 1, j2)) +
+                    (sm(i2, j2 + 1) - sm(i2, j2 - 1)) *
+                    (sm(i2, j2 + 1) - sm(i2, j2 - 1)), out(i2, j2))
+    return f
+
+
+# ---------------------------------------------------------------------------
+# DNN critical conv nests (Table V / Fig 13)
+# ---------------------------------------------------------------------------
+def conv_nest(name: str, oc: int, ic: int, oh: int, ow: int, kh: int = 3,
+              kw: int = 3):
+    with pom.function(name) as f:
+        o = pom.var("oc", 0, oc)
+        y = pom.var("oh", 0, oh)
+        x = pom.var("ow", 0, ow)
+        c = pom.var("ic", 0, ic)
+        r = pom.var("kh", 0, kh)
+        s = pom.var("kw", 0, kw)
+        img = pom.placeholder(f"{name}_in", (ic, oh + kh - 1, ow + kw - 1))
+        w = pom.placeholder(f"{name}_w", (oc, ic, kh, kw))
+        out = pom.placeholder(f"{name}_out", (oc, oh, ow))
+        pom.compute("conv", [o, y, x, c, r, s],
+                    out(o, y, x) + img(c, y + r, x + s) * w(o, c, r, s),
+                    out(o, y, x))
+    return f
+
+
+# (out_ch, in_ch, H) at input resolution 512 (the paper's prob. size),
+# one entry per critical conv loop (loop depth > 4)
+VGG16_CONVS: List[Tuple[int, int, int]] = (
+    [(64, 3, 512), (64, 64, 512)]
+    + [(128, 64, 256), (128, 128, 256)]
+    + [(256, 128, 128)] + [(256, 256, 128)] * 2
+    + [(512, 256, 64)] + [(512, 512, 64)] * 2
+    + [(512, 512, 32)] * 3
+)
+
+RESNET18_CONVS: List[Tuple[int, int, int]] = (
+    [(64, 3, 256)]
+    + [(64, 64, 128)] * 4
+    + [(128, 64, 64)] + [(128, 128, 64)] * 3
+    + [(256, 128, 32)] + [(256, 256, 32)] * 3
+    + [(512, 256, 16)] + [(512, 512, 16)] * 3
+)
+
+
+def dnn_layers(net: str):
+    """Yield (name, conv builder) for each critical loop of the net."""
+    table = VGG16_CONVS if net == "vgg16" else RESNET18_CONVS
+    out = []
+    for idx, (oc, ic, hw) in enumerate(table):
+        out.append((f"{net}_conv{idx}",
+                    lambda oc=oc, ic=ic, hw=hw, idx=idx:
+                    conv_nest(f"{net}_conv{idx}", oc, ic, hw, hw)))
+    return out
+
+
+POLYBENCH: Dict[str, Callable] = {
+    "gemm": gemm, "bicg": bicg, "gesummv": gesummv, "2mm": mm2, "3mm": mm3,
+}
+STENCILS: Dict[str, Callable] = {
+    "jacobi1d": jacobi1d, "jacobi2d": jacobi2d, "heat1d": heat1d,
+    "seidel": seidel,
+}
+IMAGE: Dict[str, Callable] = {
+    "edge_detect": edge_detect, "gaussian": gaussian, "blur": blur,
+}

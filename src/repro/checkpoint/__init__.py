@@ -1,0 +1,2 @@
+"""Checkpointing: async save, integrity digests, elastic restore."""
+from .manager import CheckpointManager, restore_pytree, save_pytree

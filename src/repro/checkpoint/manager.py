@@ -1,0 +1,157 @@
+"""Checkpoint manager: async save / verified restore / elastic resharding.
+
+Layout:  <dir>/step_<N>/
+            arrays.npz          flattened '/'-joined key -> ndarray
+            meta.json           step, tree structure, shapes, dtypes, digest
+         <dir>/LATEST           committed step number (written last: a crash
+                                mid-save never corrupts the restore pointer)
+
+Elastic restore: arrays are stored unsharded; ``restore`` device_puts onto
+*target* shardings, so a checkpoint written on one mesh restores onto any
+other (the elastic-scaling path).  At multi-host scale the same layout
+shards per host (each host writes its addressable slice); single-process
+here, so full arrays are written -- the manager API is host-count agnostic.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(tree, directory: str, step: int) -> str:
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f".tmp_step_{step}")
+    final = os.path.join(directory, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    with open(os.path.join(tmp, "arrays.npz"), "rb") as f:
+        digest = hashlib.sha256(f.read()).hexdigest()
+    treedef = jax.tree_util.tree_structure(tree)
+    meta = {
+        "step": step,
+        "digest": digest,
+        "treedef": str(treedef),
+        "keys": sorted(flat.keys()),
+        "time": time.time(),
+    }
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(directory, "LATEST.tmp"),
+               os.path.join(directory, "LATEST"))
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    p = os.path.join(directory, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def restore_pytree(template, directory: str, step: Optional[int] = None,
+                   shardings=None, verify: bool = True):
+    """Restore into the structure of ``template`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: matching pytree of NamedShardings for
+    elastic placement on the current mesh."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    if verify:
+        with open(os.path.join(d, "arrays.npz"), "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        if digest != meta["digest"]:
+            raise IOError(f"checkpoint {d} digest mismatch (corrupt)")
+    data = np.load(os.path.join(d, "arrays.npz"))
+
+    leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    sh_leaves = None
+    if shardings is not None:
+        sh_leaves = jax.tree_util.tree_flatten(
+            shardings, is_leaf=lambda x: hasattr(x, "mesh") or x is None)[0]
+    out = []
+    for i, (path, leaf) in enumerate(leaves_t):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = data[key]
+        arr = arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
+        if sh_leaves is not None and sh_leaves[i] is not None:
+            arr = jax.device_put(arr, sh_leaves[i])
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out), meta["step"]
+
+
+class CheckpointManager:
+    """Async checkpointing with bounded retention."""
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+
+    def save(self, tree, step: int, block: bool = False):
+        tree = jax.tree_util.tree_map(np.asarray, tree)  # snapshot off-device
+
+        def work():
+            try:
+                save_pytree(tree, self.directory, step)
+                self._gc()
+            except BaseException as e:   # surfaced on next wait()
+                self._last_error = e
+
+        self.wait()
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            if self._last_error:
+                raise self._last_error
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._last_error is not None:
+            e, self._last_error = self._last_error, None
+            raise e
+
+    def restore(self, template, step: Optional[int] = None, shardings=None):
+        return restore_pytree(template, self.directory, step, shardings)
+
+    def _gc(self):
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.directory)
+                       if d.startswith("step_"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)

@@ -1,0 +1,3 @@
+"""Per-architecture configs (assigned pool) + shape/parallelism definitions."""
+from .base import (ARCH_IDS, SHAPES, ModelConfig, ParallelConfig, ShapeConfig,
+                   all_configs, get_config, reduced, register)

@@ -1,0 +1,26 @@
+"""POM core: the paper's contribution — DSL, three-layer IR, DSE.
+
+Layers (paper Fig. 7):
+  dsl.py         — POM DSL (var/placeholder/compute + scheduling primitives)
+  depgraph.py    — dependence-graph IR (coarse + fine-grained analysis)
+  affine.py      — mini-isl (integer sets/maps, FM elimination, dependence polyhedra)
+  transforms.py  — polyhedral loop transformations (interchange/split/tile/skew/…)
+  astbuild.py    — polyhedral AST build (isl ast_build analogue)
+  loop_ir.py     — annotated loop IR (affine dialect + HLS attributes analogue)
+  backend_hls.py — synthesizable HLS C emitter
+  backend_jax.py — executable oracle (numpy interpreter)
+  backend_pallas.py — Pallas pallas_call generation from schedules
+  cost_model.py  — HLS (XC7Z020) and TPU (v5e) analytical models
+  dse.py         — two-stage DSE engine (dependence-aware + bottleneck-oriented)
+"""
+from .dsl import ComputeHandle, PomFunction, Var, compute, function, placeholder, var
+from .ir import (Placeholder, p_bfloat16, p_float32, p_float64, p_int8, p_int16,
+                 p_int32, p_int64, p_uint8, p_uint16, p_uint32, p_uint64)
+
+__all__ = [
+    "function", "var", "placeholder", "compute", "PomFunction", "ComputeHandle",
+    "Var", "Placeholder",
+    "p_int8", "p_int16", "p_int32", "p_int64",
+    "p_uint8", "p_uint16", "p_uint32", "p_uint64",
+    "p_float32", "p_float64", "p_bfloat16",
+]

@@ -1,0 +1,589 @@
+"""Mini-isl: integer sets, affine maps, and Fourier-Motzkin elimination.
+
+This module is the polyhedral substrate of POM's *polyhedral IR* layer
+(paper SS V-B).  It implements the subset of isl that POM relies on:
+
+  * ``LinExpr``    -- affine expressions over named dimensions + parameters.
+  * ``Constraint`` -- ``expr >= 0`` or ``expr == 0``.
+  * ``BasicSet``   -- a conjunction of affine constraints over an *ordered*
+                      list of dimensions (order == loop-nest order).
+  * Fourier-Motzkin elimination (rational, with gcd tightening on integer
+    bounds) for projection, emptiness tests, and per-dimension loop-bound
+    derivation (the ``ast_build`` analogue).
+  * Dependence polyhedra construction + distance/direction vector
+    extraction (used by the dependence-graph IR, paper SS V-A).
+
+All arithmetic is exact (Python ints / Fractions).  Loop bounds involving a
+coefficient > 1 are returned as (expr, divisor) pairs so the AST builder can
+emit ``floordiv``/``ceildiv`` -- exactly what isl's AST build does.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from fractions import Fraction
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+# --------------------------------------------------------------------------
+# Affine expressions
+# --------------------------------------------------------------------------
+class LinExpr:
+    """Affine expression: sum(coeff[d] * d) + const, integer coefficients."""
+
+    __slots__ = ("coeffs", "const")
+
+    def __init__(self, coeffs: Optional[Dict[str, int]] = None, const: int = 0):
+        self.coeffs: Dict[str, int] = {k: int(v) for k, v in (coeffs or {}).items() if v != 0}
+        self.const: int = int(const)
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def var(name: str, coeff: int = 1) -> "LinExpr":
+        return LinExpr({name: coeff})
+
+    @staticmethod
+    def cst(c: int) -> "LinExpr":
+        return LinExpr({}, c)
+
+    @staticmethod
+    def of(x) -> "LinExpr":
+        if isinstance(x, LinExpr):
+            return x
+        if isinstance(x, int):
+            return LinExpr.cst(x)
+        if isinstance(x, str):
+            return LinExpr.var(x)
+        raise TypeError(f"cannot build LinExpr from {x!r}")
+
+    # -- arithmetic ----------------------------------------------------------
+    def __add__(self, other) -> "LinExpr":
+        o = LinExpr.of(other)
+        c = dict(self.coeffs)
+        for k, v in o.coeffs.items():
+            c[k] = c.get(k, 0) + v
+        return LinExpr(c, self.const + o.const)
+
+    __radd__ = __add__
+
+    def __neg__(self) -> "LinExpr":
+        return LinExpr({k: -v for k, v in self.coeffs.items()}, -self.const)
+
+    def __sub__(self, other) -> "LinExpr":
+        return self + (-LinExpr.of(other))
+
+    def __rsub__(self, other) -> "LinExpr":
+        return LinExpr.of(other) + (-self)
+
+    def __mul__(self, k: int) -> "LinExpr":
+        if not isinstance(k, int):
+            raise TypeError("LinExpr may only be scaled by an int")
+        return LinExpr({d: v * k for d, v in self.coeffs.items()}, self.const * k)
+
+    __rmul__ = __mul__
+
+    # -- queries -------------------------------------------------------------
+    def coeff(self, name: str) -> int:
+        return self.coeffs.get(name, 0)
+
+    def vars(self) -> Tuple[str, ...]:
+        return tuple(self.coeffs.keys())
+
+    def is_const(self) -> bool:
+        return not self.coeffs
+
+    def substitute(self, name: str, repl: "LinExpr") -> "LinExpr":
+        c = self.coeffs.get(name, 0)
+        if c == 0:
+            return self
+        rest = LinExpr({k: v for k, v in self.coeffs.items() if k != name}, self.const)
+        return rest + repl * c
+
+    def rename(self, mapping: Dict[str, str]) -> "LinExpr":
+        return LinExpr({mapping.get(k, k): v for k, v in self.coeffs.items()}, self.const)
+
+    def eval(self, env: Dict[str, int]) -> int:
+        return self.const + sum(v * env[k] for k, v in self.coeffs.items())
+
+    def content(self) -> int:
+        """gcd of all coefficients and the constant (0 if identically zero)."""
+        g = 0
+        for v in self.coeffs.values():
+            g = math.gcd(g, abs(v))
+        return math.gcd(g, abs(self.const))
+
+    # -- hash/eq/repr ---------------------------------------------------------
+    def key(self) -> Tuple:
+        return (tuple(sorted(self.coeffs.items())), self.const)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, LinExpr) and self.key() == other.key()
+
+    def __hash__(self) -> int:
+        return hash(self.key())
+
+    def __repr__(self) -> str:
+        parts = []
+        for k in sorted(self.coeffs):
+            v = self.coeffs[k]
+            if v == 1:
+                parts.append(f"{k}")
+            elif v == -1:
+                parts.append(f"-{k}")
+            else:
+                parts.append(f"{v}*{k}")
+        if self.const or not parts:
+            parts.append(str(self.const))
+        s = " + ".join(parts).replace("+ -", "- ")
+        return s
+
+
+# --------------------------------------------------------------------------
+# Constraints
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Constraint:
+    """expr >= 0 (ineq) or expr == 0 (eq)."""
+
+    expr: LinExpr
+    is_eq: bool = False
+
+    def normalized(self) -> "Constraint":
+        g = self.expr.content()
+        if g <= 1:
+            return self
+        if self.is_eq:
+            if self.expr.const % g == 0:
+                e = LinExpr({k: v // g for k, v in self.expr.coeffs.items()},
+                            self.expr.const // g)
+                return Constraint(e, True)
+            return self  # leave: may be infeasible (caught by gcd test)
+        # inequality sum(c_i x_i) + c0 >= 0  ->  divide coeffs by g', tighten const
+        gc = 0
+        for v in self.expr.coeffs.values():
+            gc = math.gcd(gc, abs(v))
+        if gc > 1:
+            e = LinExpr({k: v // gc for k, v in self.expr.coeffs.items()},
+                        math.floor(Fraction(self.expr.const, gc)))
+            return Constraint(e, False)
+        return self
+
+    def substitute(self, name: str, repl: LinExpr) -> "Constraint":
+        return Constraint(self.expr.substitute(name, repl), self.is_eq)
+
+    def rename(self, mapping: Dict[str, str]) -> "Constraint":
+        return Constraint(self.expr.rename(mapping), self.is_eq)
+
+    def involves(self, name: str) -> bool:
+        return self.expr.coeff(name) != 0
+
+    def holds(self, env: Dict[str, int]) -> bool:
+        v = self.expr.eval(env)
+        return v == 0 if self.is_eq else v >= 0
+
+    def __repr__(self) -> str:
+        return f"{self.expr} {'==' if self.is_eq else '>='} 0"
+
+
+def ge(lhs, rhs) -> Constraint:
+    """lhs >= rhs"""
+    return Constraint(LinExpr.of(lhs) - LinExpr.of(rhs))
+
+
+def le(lhs, rhs) -> Constraint:
+    """lhs <= rhs"""
+    return Constraint(LinExpr.of(rhs) - LinExpr.of(lhs))
+
+
+def eq(lhs, rhs) -> Constraint:
+    return Constraint(LinExpr.of(lhs) - LinExpr.of(rhs), True)
+
+
+# --------------------------------------------------------------------------
+# Bounds (for AST build): expr/divisor pairs
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Bound:
+    """A loop bound:  ceil(expr/div) for lower bounds, floor(expr/div) for upper."""
+
+    expr: LinExpr
+    div: int = 1
+
+    def __repr__(self) -> str:
+        if self.div == 1:
+            return repr(self.expr)
+        return f"({self.expr})/{self.div}"
+
+
+# --------------------------------------------------------------------------
+# BasicSet
+# --------------------------------------------------------------------------
+class BasicSet:
+    """Conjunction of affine constraints over ordered dims (+ named params).
+
+    ``dims`` order is semantically meaningful: it is the loop-nest order used
+    by the AST builder.  ``params`` are symbolic constants (problem sizes).
+    """
+
+    def __init__(self, dims: Sequence[str], constraints: Iterable[Constraint] = (),
+                 params: Sequence[str] = ()):
+        self.dims: List[str] = list(dims)
+        self.params: List[str] = list(params)
+        self.constraints: List[Constraint] = [c.normalized() for c in constraints]
+
+    # -- construction helpers -------------------------------------------------
+    @staticmethod
+    def box(bounds: Dict[str, Tuple[int, int]], params: Sequence[str] = ()) -> "BasicSet":
+        """{dims : lo <= d <= hi} (inclusive)."""
+        cons = []
+        for d, (lo, hi) in bounds.items():
+            cons.append(ge(LinExpr.var(d), lo))
+            cons.append(le(LinExpr.var(d), hi))
+        return BasicSet(list(bounds.keys()), cons, params)
+
+    def copy(self) -> "BasicSet":
+        return BasicSet(self.dims, self.constraints, self.params)
+
+    def with_constraints(self, extra: Iterable[Constraint]) -> "BasicSet":
+        return BasicSet(self.dims, list(self.constraints) + list(extra), self.params)
+
+    # -- transforms ------------------------------------------------------------
+    def rename_dim(self, old: str, new: str) -> "BasicSet":
+        mapping = {old: new}
+        dims = [new if d == old else d for d in self.dims]
+        return BasicSet(dims, [c.rename(mapping) for c in self.constraints], self.params)
+
+    def substitute_dim(self, name: str, repl: LinExpr, new_dims: Sequence[str],
+                       extra: Iterable[Constraint] = ()) -> "BasicSet":
+        """Replace dim ``name`` by expression ``repl`` over ``new_dims``.
+
+        ``new_dims`` take name's position in the dim order.
+        """
+        i = self.dims.index(name)
+        dims = self.dims[:i] + list(new_dims) + self.dims[i + 1:]
+        cons = [c.substitute(name, repl) for c in self.constraints]
+        cons += list(extra)
+        return BasicSet(dims, cons, self.params)
+
+    def permute(self, order: Sequence[str]) -> "BasicSet":
+        assert sorted(order) == sorted(self.dims), (order, self.dims)
+        return BasicSet(list(order), self.constraints, self.params)
+
+    # -- FM elimination ----------------------------------------------------------
+    def project_out(self, name: str) -> "BasicSet":
+        """Rational Fourier-Motzkin elimination of ``name`` (sound for
+        emptiness / bound queries; exact on the rational relaxation)."""
+        eqs = [c for c in self.constraints if c.is_eq and c.involves(name)]
+        if eqs:
+            # use an equality to substitute name away:  a*name + rest == 0
+            c0 = eqs[0]
+            a = c0.expr.coeff(name)
+            rest = LinExpr({k: v for k, v in c0.expr.coeffs.items() if k != name},
+                           c0.expr.const)
+            out = []
+            for c in self.constraints:
+                if c is c0:
+                    continue
+                b = c.expr.coeff(name)
+                if b == 0:
+                    out.append(c)
+                    continue
+                # a*c.expr - b*(a*name + rest)  eliminates name; careful with sign of a
+                scaled = c.expr * abs(a) - (LinExpr.var(name, a) + rest) * (
+                    b if a > 0 else -b)
+                out.append(Constraint(scaled, c.is_eq).normalized())
+            dims = [d for d in self.dims if d != name]
+            return BasicSet(dims, out, self.params)
+
+        lowers, uppers, others = [], [], []
+        for c in self.constraints:
+            a = c.expr.coeff(name)
+            if a == 0:
+                others.append(c)
+            elif a > 0:
+                lowers.append((a, c.expr))   # a*name + e >= 0 -> name >= -e/a
+            else:
+                uppers.append((-a, c.expr))  # -b*name + e >= 0 -> name <= e/b
+        for (a, el) in lowers:
+            for (b, eu) in uppers:
+                # combine: b*el + a*eu >= 0 with name eliminated
+                combo = el * b + eu * a
+                combo = LinExpr({k: v for k, v in combo.coeffs.items() if k != name},
+                                combo.const)
+                others.append(Constraint(combo).normalized())
+        dims = [d for d in self.dims if d != name]
+        return BasicSet(dims, others, self.params)
+
+    def project_onto(self, keep: Sequence[str]) -> "BasicSet":
+        s = self
+        for d in list(self.dims):
+            if d not in keep:
+                s = s.project_out(d)
+        return s
+
+    # -- queries ---------------------------------------------------------------
+    def is_empty(self) -> bool:
+        """Rational emptiness + gcd infeasibility on equalities.
+
+        Conservative in the usual direction: returns True only when provably
+        empty over the rationals (or gcd-infeasible), which is exact for the
+        structured sets POM generates.
+        """
+        # gcd test on equalities
+        for c in self.constraints:
+            if c.is_eq:
+                g = 0
+                for v in c.expr.coeffs.values():
+                    g = math.gcd(g, abs(v))
+                if g and c.expr.const % g != 0:
+                    return True
+                if not c.expr.coeffs and c.expr.const != 0:
+                    return True
+            else:
+                if not c.expr.coeffs and c.expr.const < 0:
+                    return True
+        s = self
+        for d in list(s.dims) + list(s.params):
+            s = s.project_out(d)
+            for c in s.constraints:
+                if not c.expr.coeffs:
+                    if c.is_eq and c.expr.const != 0:
+                        return True
+                    if not c.is_eq and c.expr.const < 0:
+                        return True
+        return False
+
+    def bounds_of(self, name: str, inner: Sequence[str]) -> Tuple[List[Bound], List[Bound]]:
+        """Loop bounds of ``name`` in terms of outer dims/params.
+
+        Projects out the dims *inner* (nested inside ``name``), then reads the
+        lower/upper bounds on ``name``.  Returns (lowers, uppers) as Bound
+        lists; lower bound value is max(ceildiv(b.expr, b.div)), upper is
+        min(floordiv(b.expr, b.div)).
+        """
+        s = self
+        for d in inner:
+            s = s.project_out(d)
+        lowers: List[Bound] = []
+        uppers: List[Bound] = []
+        for c in s.constraints:
+            a = c.expr.coeff(name)
+            if a == 0:
+                continue
+            rest = LinExpr({k: v for k, v in c.expr.coeffs.items() if k != name},
+                           c.expr.const)
+            cons_list = [(a, rest)]
+            if c.is_eq:
+                cons_list = [(a, rest), (-a, -rest)]
+            for (aa, rr) in cons_list:
+                if aa > 0:   # aa*name + rr >= 0  ->  name >= ceil(-rr/aa)
+                    lowers.append(Bound(-rr, aa))
+                else:        # name <= floor(rr/|aa|)
+                    uppers.append(Bound(rr, -aa))
+        return dedup_bounds(lowers), dedup_bounds(uppers)
+
+    def constraints_on(self, names: Sequence[str]) -> List[Constraint]:
+        keep = set(names)
+        return [c for c in self.constraints
+                if any(k in keep for k in c.expr.vars())]
+
+    def contains(self, env: Dict[str, int]) -> bool:
+        return all(c.holds(env) for c in self.constraints)
+
+    def enumerate_points(self, param_env: Optional[Dict[str, int]] = None,
+                         limit: int = 2_000_000) -> List[Tuple[int, ...]]:
+        """Enumerate all integer points in dim order (testing oracle)."""
+        env = dict(param_env or {})
+        pts: List[Tuple[int, ...]] = []
+
+        def rec(i: int):
+            if len(pts) > limit:
+                raise RuntimeError("enumeration limit exceeded")
+            if i == len(self.dims):
+                pts.append(tuple(env[d] for d in self.dims))
+                return
+            d = self.dims[i]
+            los, ups = self.bounds_of(d, self.dims[i + 1:])
+            lo = max(ceil_div(b.expr.eval(env), b.div) for b in los) if los else None
+            up = min(floor_div(b.expr.eval(env), b.div) for b in ups) if ups else None
+            if lo is None or up is None:
+                raise RuntimeError(f"dim {d} unbounded")
+            for v in range(lo, up + 1):
+                env[d] = v
+                # guard against rational-relaxation slack: check constraints
+                ok = True
+                for c in self.constraints:
+                    if set(c.expr.vars()) <= set(self.dims[:i + 1]) | set(self.params):
+                        if not c.holds(env):
+                            ok = False
+                            break
+                if ok:
+                    rec(i + 1)
+            env.pop(d, None)
+
+        rec(0)
+        return pts
+
+    def __repr__(self) -> str:
+        return ("{ [" + ", ".join(self.dims) + "] : "
+                + " and ".join(map(repr, self.constraints)) + " }")
+
+
+def dedup_bounds(bs: List[Bound]) -> List[Bound]:
+    seen = set()
+    out = []
+    for b in bs:
+        k = (b.expr.key(), b.div)
+        if k not in seen:
+            seen.add(k)
+            out.append(b)
+    return out
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -((-a) // b)
+
+
+def floor_div(a: int, b: int) -> int:
+    return a // b
+
+
+# --------------------------------------------------------------------------
+# Dependence analysis on polyhedra
+# --------------------------------------------------------------------------
+@dataclass
+class DependenceInfo:
+    """Result of a dependence test between two access functions.
+
+    distance[k] is an int when the k-th entry of the distance vector is a
+    single constant over the whole dependence polyhedron, else None.
+    direction[k] in {'<', '=', '>', '*'} summarizes sign information.
+    ``levels`` maps each 1-based carried level to the distance vector of the
+    dependences carried at exactly that level (a polyhedron usually carries
+    dependences at several levels — e.g. Seidel carries at t, i AND j).
+    ``exists`` is False when the dependence polyhedron is empty.
+    """
+
+    exists: bool
+    distance: Tuple[Optional[int], ...] = ()
+    direction: Tuple[str, ...] = ()
+    loop_carried_level: Optional[int] = None  # outermost carried level
+    levels: Dict[int, Tuple[Optional[int], ...]] = field(default_factory=dict)
+
+    def is_uniform(self) -> bool:
+        return self.exists and all(d is not None for d in self.distance)
+
+
+def dependence_vector(domain_src: BasicSet, acc_src: Sequence[LinExpr],
+                      domain_sink: BasicSet, acc_sink: Sequence[LinExpr],
+                      shared_levels: Optional[int] = None) -> DependenceInfo:
+    """Distance/direction vectors of the dependence  src -> sink.
+
+    Both domains must have the same dim count for distance vectors to make
+    sense (POM computes them per loop nest, where src/sink are statements in
+    the same nest or the nest is compared level-wise).  ``shared_levels``
+    limits the comparison to the outermost n common loops (defaults to
+    min(#dims)).
+
+    Builds {(s, t) : acc_src(s) == acc_sink(t), s in D_src, t in D_sink,
+    s lexicographically < t (per level)} and projects onto d = t - s.
+    """
+    n = shared_levels or min(len(domain_src.dims), len(domain_sink.dims))
+    sdims = [f"__s{i}" for i in range(len(domain_src.dims))]
+    tdims = [f"__t{i}" for i in range(len(domain_sink.dims))]
+    smap = dict(zip(domain_src.dims, sdims))
+    tmap = dict(zip(domain_sink.dims, tdims))
+    cons: List[Constraint] = []
+    cons += [c.rename(smap) for c in domain_src.constraints]
+    cons += [c.rename(tmap) for c in domain_sink.constraints]
+    if len(acc_src) != len(acc_sink):
+        return DependenceInfo(False)
+    for ea, eb in zip(acc_src, acc_sink):
+        cons.append(Constraint(ea.rename(smap) - eb.rename(tmap), True))
+
+    ddims = [f"__d{i}" for i in range(n)]
+    for i in range(n):
+        cons.append(eq(LinExpr.var(ddims[i]),
+                       LinExpr.var(tdims[i]) - LinExpr.var(sdims[i])))
+
+    params = sorted(set(domain_src.params) | set(domain_sink.params))
+    full = BasicSet(sdims + tdims + ddims, cons, params)
+
+    # Lexicographic positivity: union over levels l of {d1=..=d_{l-1}=0, d_l>=1}
+    # plus the same-iteration case for intra-statement (excluded: needs >=1 somewhere).
+    distance: List[Optional[int]] = [None] * n
+    direction: List[str] = ["*"] * n
+    carried: Optional[int] = None
+    levels: Dict[int, Tuple[Optional[int], ...]] = {}
+    any_exists = False
+    for lvl in range(n):
+        lc = [eq(LinExpr.var(ddims[j]), 0) for j in range(lvl)]
+        lc.append(ge(LinExpr.var(ddims[lvl]), 1))
+        sub = full.with_constraints(lc)
+        if sub.is_empty():
+            continue
+        any_exists = True
+        if carried is None:
+            carried = lvl + 1
+        proj = sub.project_onto(ddims)
+        lvl_dist: List[Optional[int]] = [0] * lvl + [None] * (n - lvl)
+        for k in range(lvl, n):
+            los_l, ups_l = proj.bounds_of(ddims[k], [d for d in ddims[k + 1:]])
+            lo_l = _const_bound(los_l, proj.params, True)
+            up_l = _const_bound(ups_l, proj.params, False)
+            if lo_l is not None and up_l is not None and lo_l == up_l:
+                lvl_dist[k] = lo_l
+            elif lo_l is not None and lo_l >= 1:
+                lvl_dist[k] = lo_l
+            elif up_l is not None and up_l <= -1:
+                lvl_dist[k] = up_l
+        levels[lvl + 1] = tuple(lvl_dist)
+        for k in range(n):
+            los, ups = proj.bounds_of(ddims[k], [d for d in ddims[k + 1:]])
+            lo = _const_bound(los, proj.params, True)
+            up = _const_bound(ups, proj.params, False)
+            if lo is not None and up is not None and lo == up:
+                dk = lo
+            elif lo is not None and lo >= 1:
+                # non-uniform positive entry: report the *minimum* distance —
+                # the paper's convention for reductions (Fig. 8: GEMM ->
+                # (0,0,1)) and the quantity recurrence-II analysis needs.
+                dk = lo
+            elif up is not None and up <= -1:
+                dk = up
+            else:
+                dk = None
+            # merge across levels: keep if consistent
+            if distance[k] is None and direction[k] == "*":
+                distance[k] = dk
+                if dk is not None:
+                    direction[k] = "<" if dk > 0 else ("=" if dk == 0 else ">")
+                elif lo is not None and lo >= 1:
+                    direction[k] = "<"
+                elif up is not None and up <= -1:
+                    direction[k] = ">"
+                elif lo is not None and up is not None and lo == up == 0:
+                    direction[k] = "="
+                else:
+                    direction[k] = "*"
+            else:
+                if distance[k] != dk:
+                    distance[k] = None
+                    direction[k] = "*"
+    if not any_exists:
+        return DependenceInfo(False)
+    return DependenceInfo(True, tuple(distance), tuple(direction), carried,
+                          levels)
+
+
+def _const_bound(bs: List[Bound], params: Sequence[str], is_lower: bool) -> Optional[int]:
+    """Extract the tightest constant bound from a Bound list, if any."""
+    best: Optional[int] = None
+    for b in bs:
+        if b.expr.is_const():
+            v = ceil_div(b.expr.const, b.div) if is_lower else floor_div(b.expr.const, b.div)
+            if best is None:
+                best = v
+            else:
+                best = max(best, v) if is_lower else min(best, v)
+    return best

@@ -1,0 +1,229 @@
+"""Polyhedral AST build (paper SS V-B 'Construction of the polyhedral IR',
+step 3: union map -> ast_build -> for/if/block/user nodes).
+
+Statements are grouped by their ``after`` fusion spec; each group shares
+loops up to the declared level.  Loop bounds per level are derived from each
+statement's (possibly non-rectangular) domain with Fourier-Motzkin
+projection; shared loops take the union (min/max) of member bounds, and
+statements whose own bounds are strictly tighter are guarded with IfNodes --
+the same strategy isl's ast_build uses.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .affine import Bound, Constraint, LinExpr, ge, le
+from .ir import Function, Statement
+from .loop_ir import ForNode, IfNode, LoopBound, Node, ProgramAST, StmtNode
+
+
+def _program_order(fn: Function) -> List[Statement]:
+    """Registration order, but `after` targets pull their statement adjacent."""
+    order: List[Statement] = []
+    placed = set()
+
+    def place(s: Statement):
+        if s.uid in placed:
+            return
+        if s.after_spec is not None:
+            place(s.after_spec[0])
+            idx = order.index(s.after_spec[0])
+            # insert after the target and after any earlier `after` siblings
+            j = idx + 1
+            while j < len(order) and order[j].after_spec is not None \
+                    and order[j].after_spec[0] is s.after_spec[0]:
+                j += 1
+            order.insert(j, s)
+        else:
+            order.append(s)
+        placed.add(s.uid)
+
+    for s in fn.statements:
+        place(s)
+    return order
+
+
+def _share_with_prev(order: List[Statement]) -> List[int]:
+    """#loops statement i shares with statement i-1 (0 for i=0)."""
+    share = [0] * len(order)
+    for i in range(1, len(order)):
+        s = order[i]
+        if s.after_spec is not None:
+            target, lvl = s.after_spec
+            # shared levels apply if the target is anywhere earlier in the
+            # current run; we conservatively require adjacency in order.
+            if target is order[i - 1] or _in_same_run(order, i, target, share):
+                share[i] = lvl + 1
+    return share
+
+
+def _in_same_run(order, i, target, share) -> bool:
+    j = i - 1
+    while j >= 0:
+        if order[j] is target:
+            return True
+        if share[j] == 0:
+            return False
+        j -= 1
+    return False
+
+
+def build_ast(fn: Function) -> ProgramAST:
+    order = _program_order(fn)
+    share = _share_with_prev(order)
+    used_names: set = set()
+    body = _build_level(order, share, 0, {}, [], used_names)
+    return ProgramAST(body)
+
+
+def _build_level(stmts: List[Statement], share: List[int], depth: int,
+                 dim_maps: Dict[int, Dict[str, str]], outer_vars: List[str],
+                 used_names: set) -> List[Node]:
+    """Build nodes for ``stmts`` whose loops [0..depth-1] are already open."""
+    nodes: List[Node] = []
+    i = 0
+    while i < len(stmts):
+        j = i + 1
+        while j < len(stmts) and share[j] > depth:
+            j += 1
+        group = stmts[i:j]
+        gshare = list(share[i:j])
+        gshare[0] = 0
+        if len(group) == 1 and len(group[0].dims) <= depth:
+            nodes.append(_make_stmt_node(group[0], dim_maps.get(group[0].uid, {}),
+                                         outer_vars))
+        else:
+            assert all(len(s.dims) > depth for s in group), \
+                f"statement exhausted its loops but shares depth {depth}"
+            nodes.append(_make_loop(group, gshare, depth, dim_maps, outer_vars,
+                                    used_names))
+        i = j
+    return nodes
+
+
+def _make_loop(group: List[Statement], share: List[int], depth: int,
+               dim_maps: Dict[int, Dict[str, str]], outer_vars: List[str],
+               used_names: set) -> ForNode:
+    # loop variable name: first statement's dim at this depth (unique-ified)
+    base = group[0].dims[depth]
+    lv = base
+    k = 0
+    while lv in used_names:
+        k += 1
+        lv = f"{base}_{k}"
+    used_names.add(lv)
+
+    lowers: List[Bound] = []
+    uppers: List[Bound] = []
+    tight: Dict[int, Tuple[List[Bound], List[Bound]]] = {}
+    pipeline_ii: Optional[int] = None
+    unroll: Optional[int] = None
+    trips = set()
+    for s in group:
+        d = s.dims[depth]
+        dm = dict(dim_maps.get(s.uid, {}))
+        dm[d] = lv
+        dim_maps[s.uid] = dm
+        inner = s.dims[depth + 1:]
+        los, ups = s.domain.bounds_of(d, inner)
+        # rename bound expressions into loop-var space
+        ren = {sd: lvn for sd, lvn in dm.items()}
+        los = [Bound(b.expr.rename(ren), b.div) for b in los]
+        ups = [Bound(b.expr.rename(ren), b.div) for b in ups]
+        tight[s.uid] = (los, ups)
+        lowers.extend(los)
+        uppers.extend(ups)
+        if s.pipeline_at == d:
+            pipeline_ii = s.pipeline_ii if pipeline_ii is None else min(pipeline_ii, s.pipeline_ii)
+        if d in s.unrolls:
+            unroll = max(unroll or 0, s.unrolls[d])
+        tc = s.trip_counts().get(d)
+        if tc is not None:
+            trips.add(tc)
+
+    if len(group) == 1:
+        lo_bounds, hi_bounds = tight[group[0].uid]
+    else:
+        # union bounds: keep only bounds shared by all members (sound outer
+        # bound: min of lowers / max of uppers == drop non-common bounds and
+        # guard members individually).
+        lo_bounds = _common(
+            [tight[s.uid][0] for s in group]) or _widest(tight, group, True)
+        hi_bounds = _common(
+            [tight[s.uid][1] for s in group]) or _widest(tight, group, False)
+
+    node = ForNode(lv, LoopBound(lo_bounds, True), LoopBound(hi_bounds, False),
+                   [], pipeline_ii, unroll,
+                   trips.pop() if len(trips) == 1 and len(group) >= 1 else None)
+
+    body = _build_level(group, share, depth + 1, dim_maps, outer_vars + [lv],
+                        used_names)
+    # guard members whose own bounds were dropped from the union
+    guarded: List[Node] = []
+    for child in body:
+        stmts_in = _stmts_under(child)
+        guards: List[Constraint] = []
+        for s in stmts_in:
+            slo, sup = tight[s.uid]
+            for b in slo:
+                if not _bound_in(b, lo_bounds):
+                    # lv >= ceil(e/div)  ->  div*lv - e >= 0
+                    guards.append(ge(LinExpr.var(node.var) * b.div, b.expr))
+            for b in sup:
+                if not _bound_in(b, hi_bounds):
+                    guards.append(le(LinExpr.var(node.var) * b.div, b.expr))
+        if guards:
+            guarded.append(IfNode(_dedup(guards), [child]))
+        else:
+            guarded.append(child)
+    node.body = guarded
+    return node
+
+
+def _common(bound_lists: List[List[Bound]]) -> List[Bound]:
+    if not bound_lists:
+        return []
+    keys = set((b.expr.key(), b.div) for b in bound_lists[0])
+    for bl in bound_lists[1:]:
+        keys &= set((b.expr.key(), b.div) for b in bl)
+    return [b for b in bound_lists[0] if (b.expr.key(), b.div) in keys]
+
+
+def _widest(tight, group, is_lower) -> List[Bound]:
+    # fallback: constant envelope if all bounds constant, else first stmt's
+    consts = []
+    for s in group:
+        bs = tight[s.uid][0 if is_lower else 1]
+        vals = [b for b in bs if b.expr.is_const()]
+        if not vals:
+            return tight[group[0].uid][0 if is_lower else 1]
+        from .affine import ceil_div, floor_div
+        v = [ceil_div(b.expr.const, b.div) if is_lower else floor_div(b.expr.const, b.div)
+             for b in vals]
+        consts.append(max(v) if is_lower else min(v))
+    env = min(consts) if is_lower else max(consts)
+    return [Bound(LinExpr.cst(env), 1)]
+
+
+def _bound_in(b: Bound, bounds: List[Bound]) -> bool:
+    return any(b.expr == o.expr and b.div == o.div for o in bounds)
+
+
+def _dedup(guards: List[Constraint]) -> List[Constraint]:
+    out, seen = [], set()
+    for g in guards:
+        k = (g.expr.key(), g.is_eq)
+        if k not in seen:
+            seen.add(k)
+            out.append(g)
+    return out
+
+
+def _stmts_under(node: Node) -> List[Statement]:
+    from .loop_ir import walk
+    return [n.stmt for n in walk(node) if isinstance(n, StmtNode)]
+
+
+def _make_stmt_node(s: Statement, dim_map: Dict[str, str],
+                    outer_vars: List[str]) -> StmtNode:
+    return StmtNode(s, dict(dim_map))

@@ -1,0 +1,126 @@
+"""HLS C backend: annotated loop IR -> synthesizable HLS C with pragmas.
+
+The faithful output artifact of the paper (SS V-C: 'the optimized and
+annotated affine dialect is translated into synthesizable HLS code').
+Array-partition pragmas come from placeholder annotations; pipeline/unroll
+pragmas from ForNode attributes.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .affine import Bound, LinExpr
+from .ir import BinOp, Call, Const, Expr, Function, IterVal, Load, Placeholder
+from .loop_ir import ForNode, IfNode, LoopBound, Node, ProgramAST, StmtNode
+
+
+def _c_lin(e: LinExpr) -> str:
+    parts = []
+    for k in sorted(e.coeffs):
+        v = e.coeffs[k]
+        if v == 1:
+            parts.append(k)
+        elif v == -1:
+            parts.append(f"-{k}")
+        else:
+            parts.append(f"{v}*{k}")
+    if e.const or not parts:
+        parts.append(str(e.const))
+    s = " + ".join(parts).replace("+ -", "- ")
+    return s
+
+
+def _c_bound(lb: LoopBound) -> str:
+    terms = []
+    for b in lb.bounds:
+        if b.div == 1:
+            terms.append(_c_lin(b.expr))
+        elif lb.is_lower:
+            # ceil division for non-negative divisor
+            terms.append(f"(({_c_lin(b.expr)}) + {b.div - 1}) / {b.div}")
+        else:
+            terms.append(f"({_c_lin(b.expr)}) / {b.div}")
+    if len(terms) == 1:
+        return terms[0]
+    fn = "MAX" if lb.is_lower else "MIN"
+    out = terms[0]
+    for t in terms[1:]:
+        out = f"{fn}({out}, {t})"
+    return out
+
+
+def _c_expr(e: Expr, subst) -> str:
+    if isinstance(e, Const):
+        v = e.value
+        return str(int(v)) if float(v).is_integer() else repr(v)
+    if isinstance(e, IterVal):
+        return f"({_c_lin(subst(e.expr))})"
+    if isinstance(e, Load):
+        idx = "".join(f"[{_c_lin(subst(ix))}]" for ix in e.idx)
+        return f"{e.array.name}{idx}"
+    if isinstance(e, BinOp):
+        return f"({_c_expr(e.lhs, subst)} {e.op} {_c_expr(e.rhs, subst)})"
+    if isinstance(e, Call):
+        args = ", ".join(_c_expr(a, subst) for a in e.args)
+        fn = {"max": "fmax", "min": "fmin", "abs": "fabs"}.get(e.fn, e.fn)
+        return f"{fn}({args})"
+    raise TypeError(e)
+
+
+def emit_hls(fn: Function, ast: ProgramAST, top_name: str = None) -> str:
+    top = top_name or fn.name
+    lines: List[str] = []
+    args = []
+    for ph in fn.placeholders.values():
+        dims = "".join(f"[{d}]" for d in ph.shape)
+        args.append(f"{ph.dtype.c_name} {ph.name}{dims}")
+    lines.append("#include <math.h>")
+    lines.append("#define MAX(a,b) ((a)>(b)?(a):(b))")
+    lines.append("#define MIN(a,b) ((a)<(b)?(a):(b))")
+    lines.append("")
+    lines.append(f"void {top}({', '.join(args)}) {{")
+    for ph in fn.placeholders.values():
+        for dim, (factor, kind) in sorted(ph.partitions.items()):
+            lines.append(f"#pragma HLS array_partition variable={ph.name} "
+                         f"{kind} factor={factor} dim={dim + 1}")
+
+    def emit(n: Node, ind: int):
+        pad = "  " * ind
+        if isinstance(n, ProgramAST):
+            for c in n.body:
+                emit(c, ind)
+        elif isinstance(n, ForNode):
+            lo, hi = _c_bound(n.lo), _c_bound(n.hi)
+            lines.append(f"{pad}for (int {n.var} = {lo}; {n.var} <= {hi}; ++{n.var}) {{")
+            if n.pipeline_ii is not None:
+                lines.append(f"{pad}#pragma HLS pipeline II={n.pipeline_ii}")
+            if n.unroll is not None:
+                lines.append(f"{pad}#pragma HLS unroll factor={n.unroll}")
+            for c in n.body:
+                emit(c, ind + 1)
+            lines.append(f"{pad}}}")
+        elif isinstance(n, IfNode):
+            conds = " && ".join(
+                f"({_c_lin(c.expr)} {'==' if c.is_eq else '>='} 0)" for c in n.conds)
+            lines.append(f"{pad}if ({conds}) {{")
+            for c in n.body:
+                emit(c, ind + 1)
+            lines.append(f"{pad}}}")
+        elif isinstance(n, StmtNode):
+            s = n.stmt
+
+            def subst(e: LinExpr) -> LinExpr:
+                # original iters -> current dims -> loop vars
+                cur = s.subst_lin(e)
+                return cur.rename(n.dim_map)
+
+            arr, _ = s.store_access()
+            idx = "".join(f"[{_c_lin(subst(ix))}]" for ix in s.store.idx)
+            lines.append(f"{pad}{arr.name}{idx} = {_c_expr(s.body, subst)};"
+                         f"  // {s.name}")
+        else:
+            raise TypeError(n)
+
+    emit(ast, 1)
+    lines.append("}")
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,261 @@
+"""Pallas backend: lower a POM-scheduled statement to ``pl.pallas_call``.
+
+This is the TPU-native rendition of the paper's pragma semantics
+(DESIGN.md SS2):
+
+  * non-unrolled loop dims  -> the Pallas **grid** (Mosaic pipelines grid
+    steps with double-buffered VMEM windows == `#pragma HLS pipeline`),
+  * fully-unrolled dims     -> **block** dimensions computed as one vector/
+    MXU op inside the kernel (== `#pragma HLS unroll`),
+  * array partitioning      -> **BlockSpec** index maps (HBM->VMEM tiling).
+
+Two statement shapes are supported, which cover the paper's linear-algebra
+benchmarks (GEMM / 2MM / 3MM / BICG / GESUMMV):
+
+  1. *contraction*:  D(i..) = D(i..) + X(..) * Y(..)   -> jnp.dot + grid
+     accumulation over reduction grid dims,
+  2. *affine map*:   D(i..) = f(loads with block-aligned accesses)  ->
+     vectorized elementwise block computation.
+
+Anything else falls back to the (slow, exact) JAX oracle backend; the
+dedicated kernels in ``repro.kernels`` cover stencils/scans.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .affine import LinExpr
+from .ir import BinOp, Call, Const, Expr, Function, IterVal, Load, Placeholder, Statement
+from .ir import loads_of
+
+
+class PallasLowerError(Exception):
+    pass
+
+
+@dataclass
+class _ArraySpec:
+    name: str
+    shape: Tuple[int, ...]
+    block: Tuple[int, ...]
+    index_map_exprs: Tuple[LinExpr, ...]   # over grid dim names (block indices)
+
+
+def _dim_extents(stmt: Statement) -> Dict[str, int]:
+    return stmt.trip_counts()
+
+
+def _classify_dims(stmt: Statement) -> Tuple[List[str], List[str]]:
+    """(grid_dims, block_dims): block dims must be fully unrolled."""
+    trips = _dim_extents(stmt)
+    grid, block = [], []
+    for d in stmt.dims:
+        f = stmt.unrolls.get(d, 1)
+        t = trips.get(d, 1)
+        if f >= t and f > 1:
+            block.append(d)
+        elif f > 1:
+            raise PallasLowerError(f"partial unroll of {d} unsupported")
+        else:
+            grid.append(d)
+    return grid, block
+
+
+def _lower_bounds(stmt: Statement) -> Dict[str, int]:
+    out = {}
+    s = stmt.domain
+    for i, d in enumerate(s.dims):
+        los, _ = s.bounds_of(d, s.dims[i + 1:])
+        const = [b for b in los if b.expr.is_const()]
+        if not const:
+            raise PallasLowerError(f"non-constant lower bound on {d}")
+        from .affine import ceil_div
+        out[d] = max(ceil_div(b.expr.const, b.div) for b in const)
+    return out
+
+
+def _array_spec(stmt: Statement, arr: Placeholder, idx: Sequence[LinExpr],
+                grid: List[str], block: List[str],
+                trips: Dict[str, int], lbs: Dict[str, int]) -> _ArraySpec:
+    """Derive BlockSpec block shape + index_map from an affine access."""
+    blk: List[int] = []
+    imap: List[LinExpr] = []
+    for p, e in enumerate(idx):
+        # block extent along this array dim = span of e over block dims
+        span = 1
+        for d in block:
+            c = e.coeff(d)
+            if c != 0:
+                span += abs(c) * (trips[d] - 1)
+        # index map: e with block dims at their lower bound, grid dims as
+        # block indices -- each grid-dim coefficient must be a multiple of
+        # the block extent for a tile-aligned access
+        base = LinExpr.cst(e.const)
+        for d, c in e.coeffs.items():
+            if d in block:
+                base = base + LinExpr.cst(c * lbs.get(d, 0))
+            else:
+                base = base + LinExpr.var(d) * c
+        for d in grid:
+            c = base.coeff(d)
+            if c % span != 0:
+                raise PallasLowerError(
+                    f"{arr.name} dim {p}: grid stride {c} not aligned to block {span}")
+        if base.const % span != 0:
+            raise PallasLowerError(f"{arr.name} dim {p}: offset not tile-aligned")
+        imap.append(LinExpr({d: c // span for d, c in base.coeffs.items()},
+                            base.const // span))
+        blk.append(span)
+    return _ArraySpec(arr.name, arr.shape, tuple(blk), tuple(imap))
+
+
+def _match_contraction(stmt: Statement) -> Optional[Tuple[Load, Load, Load]]:
+    """D = D + X*Y  (accumulation contraction). Returns (acc, X, Y)."""
+    b = stmt.body
+    if not (isinstance(b, BinOp) and b.op == "+"):
+        return None
+    sides = [(b.lhs, b.rhs), (b.rhs, b.lhs)]
+    for acc, mulexpr in sides:
+        if (isinstance(acc, Load) and acc.array.name == stmt.store.array.name
+                and isinstance(mulexpr, BinOp) and mulexpr.op == "*"
+                and isinstance(mulexpr.lhs, Load) and isinstance(mulexpr.rhs, Load)):
+            if all((a - b_).key() == ((), 0) for a, b_ in zip(acc.idx, stmt.store.idx)):
+                return acc, mulexpr.lhs, mulexpr.rhs
+    return None
+
+
+def lower_stmt_pallas(stmt: Statement, interpret: bool = True) -> Callable:
+    """Compile one scheduled statement into a jit'd pallas_call wrapper.
+
+    Returns ``f(arrays: dict[str, jnp.ndarray]) -> jnp.ndarray`` producing the
+    updated destination array.
+    """
+    grid_dims, block_dims = _classify_dims(stmt)
+    trips = _dim_extents(stmt)
+    lbs = _lower_bounds(stmt)
+    for d in grid_dims:
+        if lbs[d] != 0:
+            raise PallasLowerError(f"grid dim {d} must start at 0")
+
+    store_arr, store_idx = stmt.store_access()
+    contraction = _match_contraction_composed(stmt)
+    if contraction is None:
+        raise PallasLowerError("statement is not a supported contraction; "
+                               "use the JAX oracle or a dedicated kernel")
+    (x_arr, x_idx), (y_arr, y_idx) = contraction
+
+    specs: Dict[str, _ArraySpec] = {}
+    order: List[Tuple[str, Tuple[LinExpr, ...]]] = []
+    for arr, idx in [(x_arr, x_idx), (y_arr, y_idx), (store_arr, store_idx)]:
+        specs[arr.name] = _array_spec(stmt, arr, idx, grid_dims, block_dims,
+                                      trips, lbs)
+        order.append((arr.name, idx))
+
+    out_spec = specs[store_arr.name]
+    # reduction grid dims: grid dims that do not appear in the store index map
+    used = set()
+    for e in out_spec.index_map_exprs:
+        used |= set(e.vars())
+    red_dims = [d for d in grid_dims if d not in used]
+
+    # contraction block dims: shared between x and y but not in store
+    store_block_vars = set()
+    for e in store_idx:
+        store_block_vars |= {d for d in e.vars() if d in block_dims}
+    x_vars = set(v for e in x_idx for v in e.vars() if v in block_dims)
+    y_vars = set(v for e in y_idx for v in e.vars() if v in block_dims)
+    k_vars = (x_vars & y_vars) - store_block_vars
+
+    def idx_fn(exprs: Tuple[LinExpr, ...]):
+        def f(*gids):
+            env = dict(zip(grid_dims, gids))
+            return tuple(
+                sum((env[d] * c for d, c in e.coeffs.items()), 0) + e.const
+                for e in exprs)
+        return f
+
+    grid = tuple(trips[d] for d in grid_dims)
+
+    def _axes(idx: Tuple[LinExpr, ...]) -> List[Optional[str]]:
+        """block dim indexing each array axis (None when axis is not blocked)."""
+        out = []
+        for e in idx:
+            bs = [d for d in e.vars() if d in block_dims]
+            out.append(bs[0] if bs else None)
+        return out
+
+    x_axes, y_axes, o_axes = _axes(x_idx), _axes(y_idx), _axes(store_idx)
+
+    def kernel(x_ref, y_ref, init_ref, o_ref):
+        if red_dims:
+            first = functools.reduce(
+                lambda a, b: a & b,
+                [pl.program_id(grid_dims.index(d)) == 0 for d in red_dims])
+
+            @pl.when(first)
+            def _init():
+                o_ref[...] = init_ref[...]
+        else:
+            o_ref[...] = init_ref[...]
+
+        xb = x_ref[...]
+        yb = y_ref[...]
+        # align axes: contract over k_vars, batch over store_block_vars
+        k_list = sorted(k_vars)
+        xc = [x_axes.index(k) for k in k_list if k in x_axes]
+        yc = [y_axes.index(k) for k in k_list if k in y_axes]
+        dn = (((tuple(xc), tuple(yc))), ((), ()))
+        acc = jax.lax.dot_general(xb, yb, dn,
+                                  preferred_element_type=jnp.float32)
+        # dot_general output axes: x free axes then y free axes; map to out
+        x_free = [a for i, a in enumerate(x_axes) if i not in xc]
+        y_free = [a for i, a in enumerate(y_axes) if i not in yc]
+        out_order = x_free + y_free
+        perm = []
+        for a in o_axes:
+            if a in out_order:
+                perm.append(out_order.index(a))
+        if len(perm) == len(out_order) and perm != list(range(len(perm))):
+            acc = jnp.transpose(acc, perm)
+        acc = acc.reshape(o_ref.shape)
+        o_ref[...] += acc.astype(o_ref.dtype)
+
+    x_spec, y_spec = specs[x_arr.name], specs[y_arr.name]
+
+    def run(arrays: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        x = jnp.asarray(arrays[x_arr.name])
+        y = jnp.asarray(arrays[y_arr.name])
+        o = jnp.asarray(arrays[store_arr.name])
+        fn = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(x_spec.block, idx_fn(x_spec.index_map_exprs)),
+                pl.BlockSpec(y_spec.block, idx_fn(y_spec.index_map_exprs)),
+                pl.BlockSpec(out_spec.block, idx_fn(out_spec.index_map_exprs)),
+            ],
+            out_specs=pl.BlockSpec(out_spec.block, idx_fn(out_spec.index_map_exprs)),
+            out_shape=jax.ShapeDtypeStruct(o.shape, o.dtype),
+            interpret=interpret,
+        )
+        return fn(x, y, o)
+
+    return run
+
+
+def _match_contraction_composed(stmt: Statement):
+    """Contraction match on *composed* (current-dim) access functions."""
+    m = _match_contraction(stmt)
+    if m is None:
+        return None
+    _, xl, yl = m
+    x_idx = tuple(stmt.subst_lin(e) for e in xl.idx)
+    y_idx = tuple(stmt.subst_lin(e) for e in yl.idx)
+    return (xl.array, x_idx), (yl.array, y_idx)

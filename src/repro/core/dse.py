@@ -1,0 +1,408 @@
+"""Two-stage design space exploration (paper SS VI).
+
+Stage 1 — *dependence-aware code transformation*: iteratively re-check
+loop-carried dependences and apply interchange / distribution /
+skew(+interchange) until no node has a tight dependence or the iteration
+bound is reached; conservatively re-fuse at the end (Fig. 10's
+split-interchange-merge).
+
+Stage 2 — *bottleneck-oriented code optimization*: estimate per-node latency,
+order data paths by latency, pick the bottleneck node of the critical path,
+and raise its parallelism degree (tile + pipeline + unroll + array
+partition) step by step until resources run out, it stops being the
+bottleneck, or max parallelism is reached (the exit mechanism of SS VI-B).
+"""
+from __future__ import annotations
+
+import copy
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .cost_model import DesignReport, HlsModel, XC7Z020
+from .depgraph import DepGraph, NodeInfo, build_depgraph
+from .ir import Function, Statement
+from . import transforms as T
+
+
+# --------------------------------------------------------------------------
+# schedule snapshot / restore (search backtracking)
+# --------------------------------------------------------------------------
+def _snapshot(stmt: Statement):
+    return (stmt.domain.copy(), dict(stmt.iter_subst), dict(stmt.unrolls),
+            stmt.pipeline_at, stmt.pipeline_ii, stmt.after_spec)
+
+
+def _restore(stmt: Statement, snap) -> None:
+    stmt.domain, subst, unrolls, pat, pii, after = snap
+    stmt.iter_subst = dict(subst)
+    stmt.unrolls = dict(unrolls)
+    stmt.pipeline_at, stmt.pipeline_ii, stmt.after_spec = pat, pii, after
+
+
+def _snapshot_fn(fn: Function):
+    return {s.uid: _snapshot(s) for s in fn.statements}, \
+        {ph.name: dict(ph.partitions) for ph in fn.placeholders.values()}
+
+
+def _restore_fn(fn: Function, snap) -> None:
+    stmts, parts = snap
+    for s in fn.statements:
+        _restore(s, stmts[s.uid])
+    for ph in fn.placeholders.values():
+        ph.partitions = dict(parts[ph.name])
+
+
+# --------------------------------------------------------------------------
+# Stage 1: dependence-aware code transformation
+# --------------------------------------------------------------------------
+@dataclass
+class Stage1Log:
+    actions: List[str] = field(default_factory=list)
+
+    def add(self, msg: str):
+        self.actions.append(msg)
+
+
+def _is_tight(stmt: Statement, threshold: int = 1) -> bool:
+    g_node = NodeInfo(stmt, _self_deps(stmt), [])
+    return bool(g_node.tight(threshold))
+
+
+def _self_deps(stmt: Statement):
+    from .transforms import self_dependences
+    return self_dependences(stmt)
+
+
+def _desired_inner_dims(stmt: Statement) -> List[str]:
+    """Dims that can be innermost without a tight carried dependence."""
+    deps = [d for d in _self_deps(stmt) if d.loop_carried_level is not None]
+    out = []
+    for k, d in enumerate(stmt.dims):
+        ok = True
+        for dep in deps:
+            for dist in dep.levels.values():
+                # this dep component would be carried at the innermost level
+                # iff every *other* dim has zero distance and this dim's
+                # entry is nonzero
+                others_zero = all(
+                    (dist[j] == 0) for j in range(len(stmt.dims)) if j != k)
+                this_nonzero = dist[k] is None or dist[k] != 0
+                if others_zero and this_nonzero:
+                    ok = False
+                    break
+            if not ok:
+                break
+        if ok:
+            out.append(d)
+    return out
+
+
+def _move_innermost(stmt: Statement, d: str) -> None:
+    order = [x for x in stmt.dims if x != d] + [d]
+    old = stmt.domain
+    stmt.domain = stmt.domain.permute(order)
+    if not T._legal(stmt):
+        stmt.domain = old
+        raise T.IllegalTransform(f"cannot move {d} innermost in {stmt.name}")
+
+
+def stage1(fn: Function, max_iters: int = 6, log: Optional[Stage1Log] = None) -> Stage1Log:
+    log = log or Stage1Log()
+    for it in range(max_iters):
+        changed = False
+        # --- conflict detection inside fusion groups -> distribution --------
+        from .cost_model import _fusion_groups
+        for grp in _fusion_groups(fn):
+            if len(grp) < 2:
+                continue
+            wants: List[Optional[str]] = []
+            for s in grp:
+                if _is_tight(s):
+                    cands = _desired_inner_dims(s)
+                    wants.append(cands[0] if cands else None)
+                else:
+                    wants.append("__keep__")
+            tight_members = [w for w in wants if w != "__keep__"]
+            if tight_members and len(grp) > 1:
+                # conflicting strategies (paper Fig. 10(1)): distribute
+                for s in grp:
+                    if s.after_spec is not None:
+                        s.after_spec = None
+                log.add(f"distribute group {[s.name for s in grp]}")
+                changed = True
+        # --- per-node transforms ------------------------------------------------
+        for s in fn.statements:
+            if not _is_tight(s):
+                continue
+            fixed = False
+            # (a) interchange: move a dependence-free dim innermost
+            for d in _desired_inner_dims(s):
+                if d == s.dims[-1]:
+                    continue
+                try:
+                    _move_innermost(s, d)
+                    if not _is_tight(s):
+                        log.add(f"interchange {s.name}: {d} -> innermost "
+                                f"(order {s.dims})")
+                        fixed = changed = True
+                        break
+                except T.IllegalTransform:
+                    continue
+            if fixed:
+                continue
+            # (b) skew(+interchange) for 2-deep bands (stencil wavefronts)
+            if len(s.dims) >= 2:
+                o, i = s.dims[-2], s.dims[-1]
+                for f in (1, 2):
+                    snap = _snapshot(s)
+                    try:
+                        T.skew(s, o, i, f, o + "_sk", i + "_sk")
+                        T.interchange(s, o + "_sk", i + "_sk")
+                        if not _is_tight(s):
+                            log.add(f"skew+interchange {s.name} f={f} "
+                                    f"(order {s.dims})")
+                            fixed = changed = True
+                            break
+                        _restore(s, snap)
+                    except T.IllegalTransform:
+                        _restore(s, snap)
+                if fixed:
+                    continue
+        if not changed:
+            break
+    # --- conservative re-fusion (paper Fig. 10(3)) -----------------------------
+    stmts = fn.statements
+    for a, b in zip(stmts, stmts[1:]):
+        if b.after_spec is None and len(a.dims) == len(b.dims):
+            ta, tb = a.trip_counts(), b.trip_counts()
+            if list(ta.values()) == list(tb.values()):
+                levels = len(a.dims)
+                if T.fuse_legal(b, a, levels) and not _is_tight(a) and not _is_tight(b):
+                    T.set_after(b, a, levels - 1)
+                    log.add(f"fuse {b.name} after {a.name} at level {levels - 1}")
+    return log
+
+
+# --------------------------------------------------------------------------
+# Stage 2: bottleneck-oriented code optimization
+# --------------------------------------------------------------------------
+@dataclass
+class DseResult:
+    report: DesignReport
+    stage1_log: Stage1Log
+    actions: List[str]
+    dse_seconds: float
+    tile_sizes: Dict[str, List[int]]     # per statement: unroll factor per dim
+
+
+def _unroll_candidates(P: int) -> List[Tuple[int, ...]]:
+    """Factor splits of P over the two innermost dims (innermost-only,
+    mixed, and outer-only — the outer-only shape parallelises independent
+    recurrence chains, e.g. BICG's row dimension)."""
+    out = [(P,)]
+    f = 2
+    while f * f <= P * 2 and f <= P:
+        if P % f == 0:
+            out.append((P // f, f))
+        f *= 2
+    if P > 1:
+        out.append((P, 1))
+    return out
+
+
+def _apply_parallel(stmt: Statement, factors: Tuple[int, ...]) -> bool:
+    """Split+unroll the innermost len(factors) dims by ``factors`` (outermost
+    factor first), pipeline the level right above the unrolled loops, and
+    cyclic-partition the touched arrays (paper Fig. 6)."""
+    dims = list(stmt.dims)
+    k = len(factors)
+    if k > len(dims):
+        return False
+    trips = stmt.trip_counts()
+    targets = dims[-k:]
+    for d, f in zip(targets, factors):
+        if f > trips.get(d, 1):
+            return False
+    # split each target dim and unroll the intra-tile loop
+    new_inner: List[str] = []
+    for d, f in zip(targets, factors):
+        if f <= 1:
+            continue
+        d0, d1 = d + "_o", d + "_u"
+        try:
+            T.split(stmt, d, f, d0, d1)
+        except T.IllegalTransform:
+            return False
+        new_inner.append(d1)
+    # move all intra-tile loops innermost (keeping relative order)
+    order = [x for x in stmt.dims if x not in new_inner] + new_inner
+    try:
+        old = stmt.domain
+        stmt.domain = stmt.domain.permute(order)
+        if not T._legal(stmt):
+            stmt.domain = old
+            return False
+    except Exception:
+        return False
+    for d1 in new_inner:
+        stmt.unrolls[d1] = stmt.trip_counts().get(d1, 1)
+    # pipeline right above the unrolled band
+    outer_dims = [x for x in stmt.dims if x not in new_inner]
+    if outer_dims:
+        stmt.pipeline_at = outer_dims[-1]
+        stmt.pipeline_ii = 1
+    return True
+
+
+def refresh_partitions(fn: Function) -> None:
+    """Derive array partitioning from every statement's current unrolls
+    (paper Fig. 6: cyclic partition factors match the unroll factors touching
+    each array dimension).  Partitions are pure derived state during DSE —
+    never mutated incrementally — so backtracking stays consistent across
+    statements sharing arrays."""
+    for ph in fn.placeholders.values():
+        ph.partitions = {}
+    for stmt in fn.statements:
+        if not stmt.unrolls:
+            continue
+        refs = [(stmt.store.array, stmt.store_access()[1])] + \
+            [(arr, idx) for arr, idx in stmt.load_accesses()]
+        for arr, idx in refs:
+            ph = fn.placeholders.get(arr.name, arr)
+            for dim_no, e in enumerate(idx):
+                f = 1
+                for d1, uf in stmt.unrolls.items():
+                    if e.coeff(d1) != 0:
+                        f *= max(uf, 1)
+                if f > 1:
+                    prev = ph.partitions.get(dim_no, (1, "cyclic"))[0]
+                    ph.partitions[dim_no] = (max(prev, min(f, 64)), "cyclic")
+    # cap total banks per array at 64 (BRAM reality: beyond that the banking
+    # costs more BRAM18s than the data): shrink the largest factor; the II
+    # model then charges the resulting port conflicts.
+    for ph in fn.placeholders.values():
+        def banks():
+            b = 1
+            for (f, _k) in ph.partitions.values():
+                b *= f
+            return b
+        while banks() > 64:
+            dim = max(ph.partitions, key=lambda d: ph.partitions[d][0])
+            f, kind = ph.partitions[dim]
+            if f <= 2:
+                ph.partitions.pop(dim)
+            else:
+                ph.partitions[dim] = (f // 2, kind)
+
+
+def stage2(fn: Function, model: Optional[HlsModel] = None,
+           max_parallel: int = 256, actions: Optional[List[str]] = None) -> DesignReport:
+    model = model or HlsModel()
+    actions = actions if actions is not None else []
+    g = build_depgraph(fn)
+    parallel_of: Dict[int, int] = {s.uid: 1 for s in fn.statements}
+    active: List[int] = [s.uid for s in fn.statements]
+    by_uid = {s.uid: s for s in fn.statements}
+
+    # give every node a baseline pipeline (innermost) before the ladder
+    for s in fn.statements:
+        if s.pipeline_at is None and s.dims:
+            s.pipeline_at = s.dims[-1]
+            s.pipeline_ii = 1
+
+    def critical_bottleneck(report: DesignReport) -> Optional[int]:
+        paths = g.paths()
+        if not paths:
+            return None
+        def path_lat(p):
+            return sum(report.nodes[by_uid[u].name].latency for u in p)
+        best = max(paths, key=path_lat)
+        cands = [u for u in best if u in active]
+        if not cands:
+            cands = [u for u in active]
+            if not cands:
+                return None
+        return max(cands, key=lambda u: report.nodes[by_uid[u].name].latency)
+
+    def _snap_node(s):
+        return _snapshot(s)
+
+    def _restore_node(s, snap):
+        _restore(s, snap)
+        refresh_partitions(fn)
+
+    refresh_partitions(fn)
+    report = model.design_report(fn)
+    # per-node schedule before any parallelization: the ladder re-applies the
+    # full factor set from this clean state at every step
+    base_snaps: Dict[int, tuple] = {}
+    guard = 0
+    while active and guard < 64:
+        guard += 1
+        uid = critical_bottleneck(report)
+        if uid is None:
+            break
+        s = by_uid[uid]
+        if uid not in base_snaps:
+            base_snaps[uid] = _snap_node(s)
+        band_cap = 1
+        for d in s.dims:
+            if d not in s.unrolls:
+                band_cap *= s.trip_counts().get(d, 1)
+        band_cap *= parallel_of[uid]
+        P = parallel_of[uid] * 2
+        if P > min(max_parallel, band_cap):
+            active.remove(uid)
+            actions.append(f"exit {s.name}: max parallelism")
+            continue
+        prev = _snap_node(s)
+        best_rep: Optional[DesignReport] = None
+        best_snap = None
+        for factors in _unroll_candidates(P):
+            _restore_node(s, base_snaps[uid])
+            if not _apply_parallel(s, tuple(factors)):
+                continue
+            refresh_partitions(fn)
+            rep = model.design_report(fn)
+            if not rep.feasible:
+                continue
+            if best_rep is None or rep.nodes[s.name].latency < best_rep.nodes[s.name].latency:
+                best_rep = rep
+                best_snap = _snap_node(s)
+        # accept when the bottleneck *node* improves without regressing the
+        # design (paper SS VI-B: optimize the bottleneck, switch when it no
+        # longer is one).
+        if (best_rep is not None
+                and best_rep.nodes[s.name].latency < report.nodes[s.name].latency
+                and best_rep.latency <= report.latency):
+            _restore_node(s, best_snap)
+            parallel_of[uid] = P
+            report = best_rep
+            actions.append(f"parallel {s.name} -> {P} "
+                           f"(lat {report.nodes[s.name].latency}, II {report.nodes[s.name].ii})")
+        else:
+            _restore_node(s, prev)
+            report = model.design_report(fn)
+            active.remove(uid)
+            actions.append(f"exit {s.name}: no feasible improvement at P={P}")
+    return report
+
+
+# --------------------------------------------------------------------------
+# entry point: f.auto_DSE()
+# --------------------------------------------------------------------------
+def auto_dse(fn: Function, target: str = "fpga", max_parallel: int = 256,
+             resources: Dict = XC7Z020) -> DseResult:
+    t0 = time.perf_counter()
+    log = stage1(fn)
+    model = HlsModel(resources)
+    actions: List[str] = []
+    report = stage2(fn, model, max_parallel, actions)
+    dt = time.perf_counter() - t0
+    tiles: Dict[str, List[int]] = {}
+    for s in fn.statements:
+        # report unroll factor per current loop dim (1 when untouched)
+        tiles[s.name] = [s.unrolls.get(d, 1) for d in s.dims]
+    return DseResult(report, log, actions, dt, tiles)

@@ -1,0 +1,297 @@
+"""Core IR shared by all POM layers: expression trees, placeholders, statements.
+
+The DSL (``dsl.py``) builds these objects; the dependence-graph IR
+(``depgraph.py``), the polyhedral transforms (``transforms.py``), the AST
+builder (``astbuild.py``) and the backends consume them.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .affine import BasicSet, Constraint, LinExpr, ge, le
+
+
+# --------------------------------------------------------------------------
+# dtypes (paper SS IV-A: int8..64, uint8..64, fp32, fp64)
+# --------------------------------------------------------------------------
+class DType:
+    def __init__(self, name: str, bits: int, is_float: bool, is_signed: bool = True):
+        self.name, self.bits, self.is_float, self.is_signed = name, bits, is_float, is_signed
+
+    def __repr__(self):
+        return self.name
+
+    @property
+    def np(self):
+        import numpy as np
+        return {
+            "p_int8": np.int8, "p_int16": np.int16, "p_int32": np.int32,
+            "p_int64": np.int64, "p_uint8": np.uint8, "p_uint16": np.uint16,
+            "p_uint32": np.uint32, "p_uint64": np.uint64,
+            "p_float32": np.float32, "p_float64": np.float64,
+            "p_bfloat16": None,  # resolved by jax backends
+        }[self.name]
+
+    @property
+    def c_name(self) -> str:
+        return {
+            "p_int8": "int8_t", "p_int16": "int16_t", "p_int32": "int32_t",
+            "p_int64": "int64_t", "p_uint8": "uint8_t", "p_uint16": "uint16_t",
+            "p_uint32": "uint32_t", "p_uint64": "uint64_t",
+            "p_float32": "float", "p_float64": "double", "p_bfloat16": "bfloat16",
+        }[self.name]
+
+
+p_int8 = DType("p_int8", 8, False)
+p_int16 = DType("p_int16", 16, False)
+p_int32 = DType("p_int32", 32, False)
+p_int64 = DType("p_int64", 64, False)
+p_uint8 = DType("p_uint8", 8, False, False)
+p_uint16 = DType("p_uint16", 16, False, False)
+p_uint32 = DType("p_uint32", 32, False, False)
+p_uint64 = DType("p_uint64", 64, False, False)
+p_float32 = DType("p_float32", 32, True)
+p_float64 = DType("p_float64", 64, True)
+p_bfloat16 = DType("p_bfloat16", 16, True)
+
+
+# --------------------------------------------------------------------------
+# Expressions
+# --------------------------------------------------------------------------
+class Expr:
+    """Base of the computation expression tree inside a ``compute``."""
+
+    def __add__(self, o): return BinOp("+", self, wrap(o))
+    def __radd__(self, o): return BinOp("+", wrap(o), self)
+    def __sub__(self, o): return BinOp("-", self, wrap(o))
+    def __rsub__(self, o): return BinOp("-", wrap(o), self)
+    def __mul__(self, o): return BinOp("*", self, wrap(o))
+    def __rmul__(self, o): return BinOp("*", wrap(o), self)
+    def __truediv__(self, o): return BinOp("/", self, wrap(o))
+    def __rtruediv__(self, o): return BinOp("/", wrap(o), self)
+    def __neg__(self): return BinOp("-", Const(0.0), self)
+
+
+@dataclass
+class Const(Expr):
+    value: float
+
+
+@dataclass
+class IterVal(Expr):
+    """An affine expression over iterators used as a *value*."""
+    expr: LinExpr
+
+
+@dataclass
+class BinOp(Expr):
+    op: str
+    lhs: Expr
+    rhs: Expr
+
+
+@dataclass
+class Call(Expr):
+    fn: str          # 'exp', 'max', 'min', 'abs', 'sqrt', 'relu', ...
+    args: Tuple[Expr, ...]
+
+
+class Load(Expr):
+    def __init__(self, array: "Placeholder", idx: Sequence[LinExpr]):
+        self.array = array
+        self.idx: Tuple[LinExpr, ...] = tuple(idx)
+
+    def __repr__(self):
+        return f"{self.array.name}[{', '.join(map(repr, self.idx))}]"
+
+
+def wrap(x) -> Expr:
+    if isinstance(x, Expr):
+        return x
+    if isinstance(x, (int, float)):
+        return Const(float(x))
+    # DSL vars / index expressions
+    from .dsl import Var, IndexExpr
+    if isinstance(x, Var):
+        return IterVal(LinExpr.var(x.name))
+    if isinstance(x, IndexExpr):
+        return IterVal(x.lin)
+    raise TypeError(f"cannot use {x!r} in a compute expression")
+
+
+def walk_expr(e: Expr):
+    yield e
+    if isinstance(e, BinOp):
+        yield from walk_expr(e.lhs)
+        yield from walk_expr(e.rhs)
+    elif isinstance(e, Call):
+        for a in e.args:
+            yield from walk_expr(a)
+
+
+def loads_of(e: Expr) -> List[Load]:
+    return [n for n in walk_expr(e) if isinstance(n, Load)]
+
+
+# --------------------------------------------------------------------------
+# Placeholder (arrays)
+# --------------------------------------------------------------------------
+class Placeholder:
+    """A named multi-dimensional array (paper SS IV-A)."""
+
+    def __init__(self, name: str, shape: Sequence[int], dtype: DType = p_float32):
+        self.name = name
+        self.shape: Tuple[int, ...] = tuple(int(s) for s in shape)
+        self.dtype = dtype
+        # HLS array-partition annotation: dim -> (factor, kind)
+        self.partitions: Dict[int, Tuple[int, str]] = {}
+
+    def __call__(self, *idx) -> Load:
+        return Load(self, [to_lin(i) for i in idx])
+
+    def __getitem__(self, idx) -> Load:
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        return Load(self, [to_lin(i) for i in idx])
+
+    def partition(self, factors, kind: str = "cyclic"):
+        """``A.partition({4,4},"cyclic")`` (paper Table II)."""
+        if isinstance(factors, dict):
+            items = factors.items()
+        else:
+            items = enumerate(factors)
+        for dim, f in items:
+            if f and f > 1:
+                self.partitions[int(dim)] = (int(f), kind)
+        return self
+
+    def __repr__(self):
+        return f"placeholder({self.name}, {self.shape}, {self.dtype})"
+
+
+def to_lin(i) -> LinExpr:
+    from .dsl import Var, IndexExpr
+    if isinstance(i, LinExpr):
+        return i
+    if isinstance(i, int):
+        return LinExpr.cst(i)
+    if isinstance(i, Var):
+        return LinExpr.var(i.name)
+    if isinstance(i, IndexExpr):
+        return i.lin
+    raise TypeError(f"bad array index {i!r}")
+
+
+# --------------------------------------------------------------------------
+# Statement (one ``compute``) and Function
+# --------------------------------------------------------------------------
+_stmt_counter = itertools.count()
+
+
+class Statement:
+    """A single ``compute``: iteration domain + body expression + store target.
+
+    ``domain.dims`` is the *current* (possibly transformed) loop order.
+    ``iter_subst`` maps each *original* iterator name to a LinExpr over the
+    current dims, so load/store index functions stay written against the
+    original iterators and are composed lazily.
+    """
+
+    def __init__(self, name: str, domain: BasicSet, body: Expr, store: Load,
+                 original_iters: Sequence[str]):
+        self.name = name
+        self.uid = next(_stmt_counter)
+        self.domain = domain
+        self.body = body
+        self.store = store
+        self.original_iters: List[str] = list(original_iters)
+        self.iter_subst: Dict[str, LinExpr] = {i: LinExpr.var(i) for i in original_iters}
+        # schedule annotations
+        self.pipeline_at: Optional[str] = None
+        self.pipeline_ii: int = 1
+        self.unrolls: Dict[str, int] = {}          # dim -> factor
+        # program order: (predecessor statement, shared-level) from `after`
+        self.after_spec: Optional[Tuple["Statement", int]] = None
+        self.function: Optional["Function"] = None
+
+    # -- composed access functions -------------------------------------------
+    def subst_lin(self, e: LinExpr) -> LinExpr:
+        out = LinExpr.cst(e.const)
+        for k, v in e.coeffs.items():
+            repl = self.iter_subst.get(k, LinExpr.var(k))
+            out = out + repl * v
+        return out
+
+    def store_access(self) -> Tuple[Placeholder, Tuple[LinExpr, ...]]:
+        return self.store.array, tuple(self.subst_lin(i) for i in self.store.idx)
+
+    def load_accesses(self) -> List[Tuple[Placeholder, Tuple[LinExpr, ...]]]:
+        return [(ld.array, tuple(self.subst_lin(i) for i in ld.idx))
+                for ld in loads_of(self.body)]
+
+    # -- info -------------------------------------------------------------------
+    @property
+    def dims(self) -> List[str]:
+        return self.domain.dims
+
+    def trip_counts(self) -> Dict[str, int]:
+        """Constant trip count per loop dim (domain must be bounded-constant
+        once outer dims are fixed; uses point counts for exactness)."""
+        out = {}
+        s = self.domain
+        for i, d in enumerate(s.dims):
+            los, ups = s.bounds_of(d, s.dims[i + 1:])
+            lo = _cbound(los, True)
+            up = _cbound(ups, False)
+            if lo is not None and up is not None:
+                out[d] = max(0, up - lo + 1)
+        return out
+
+    def reduction_dims(self) -> List[str]:
+        """Iteration dims absent from the store access (paper Fig. 8(3))."""
+        _, idx = self.store_access()
+        used = set()
+        for e in idx:
+            used |= set(e.vars())
+        return [d for d in self.dims if d not in used]
+
+    def __repr__(self):
+        return f"Statement({self.name}, dims={self.dims})"
+
+
+def _cbound(bs, is_lower):
+    from .affine import ceil_div, floor_div
+    best = None
+    for b in bs:
+        if b.expr.is_const():
+            v = ceil_div(b.expr.const, b.div) if is_lower else floor_div(b.expr.const, b.div)
+            best = v if best is None else (max(best, v) if is_lower else min(best, v))
+    return best
+
+
+class Function:
+    """A POM function: an ordered collection of computes + placeholders."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.statements: List[Statement] = []
+        self.placeholders: Dict[str, Placeholder] = {}
+
+    def add(self, stmt: Statement):
+        stmt.function = self
+        self.statements.append(stmt)
+        ph, _ = stmt.store_access()
+        self.placeholders.setdefault(ph.name, ph)
+        for arr, _ in stmt.load_accesses():
+            self.placeholders.setdefault(arr.name, arr)
+
+    def stmt(self, name: str) -> Statement:
+        for s in self.statements:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+    def __repr__(self):
+        return f"Function({self.name}, {[s.name for s in self.statements]})"

@@ -1,0 +1,95 @@
+"""Annotated loop IR -- the repo's analogue of 'MLIR affine dialect with HLS
+attributes' (paper SS V-C).
+
+Explicit loop trees with symbolic affine bounds (max/min of floor/ceil
+divisions, exactly isl-ast style) and HLS pragma attributes attached to
+``ForNode``s.  Built by ``astbuild.build_ast`` and consumed by the HLS-C,
+JAX and Pallas backends plus the cost models.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .affine import Bound, Constraint, LinExpr, ceil_div, floor_div
+from .ir import Statement
+
+
+@dataclass
+class LoopBound:
+    """max_i(ceildiv(e_i, d_i)) for lowers / min_i(floordiv(e_i, d_i)) for uppers."""
+    bounds: List[Bound]
+    is_lower: bool
+
+    def eval(self, env: Dict[str, int]) -> int:
+        vals = []
+        for b in self.bounds:
+            v = b.expr.eval(env)
+            vals.append(ceil_div(v, b.div) if self.is_lower else floor_div(v, b.div))
+        return max(vals) if self.is_lower else min(vals)
+
+    def is_constant(self) -> bool:
+        return all(b.expr.is_const() for b in self.bounds)
+
+    def const_value(self) -> int:
+        return self.eval({})
+
+
+@dataclass
+class Node:
+    pass
+
+
+@dataclass
+class ForNode(Node):
+    var: str
+    lo: LoopBound
+    hi: LoopBound                      # inclusive upper bound
+    body: List[Node] = field(default_factory=list)
+    pipeline_ii: Optional[int] = None  # pragma HLS pipeline II=<n>
+    unroll: Optional[int] = None       # pragma HLS unroll factor=<n>
+    trip: Optional[int] = None         # constant trip count if known
+
+    def trip_count(self) -> Optional[int]:
+        if self.trip is not None:
+            return self.trip
+        if self.lo.is_constant() and self.hi.is_constant():
+            return max(0, self.hi.const_value() - self.lo.const_value() + 1)
+        return None
+
+
+@dataclass
+class IfNode(Node):
+    conds: List[Constraint]
+    body: List[Node] = field(default_factory=list)
+
+
+@dataclass
+class StmtNode(Node):
+    stmt: Statement
+    # statement current-dim name -> loop variable name in the AST
+    dim_map: Dict[str, str] = field(default_factory=dict)
+
+    def cur_env(self, env: Dict[str, int]) -> Dict[str, int]:
+        return {d: env[lv] for d, lv in self.dim_map.items()}
+
+
+@dataclass
+class ProgramAST(Node):
+    body: List[Node] = field(default_factory=list)
+
+
+def walk(node: Node):
+    yield node
+    body = getattr(node, "body", None)
+    if body:
+        for ch in body:
+            yield from walk(ch)
+
+
+def for_nodes(ast: Node) -> List[ForNode]:
+    return [n for n in walk(ast) if isinstance(n, ForNode)]
+
+
+def stmt_nodes(ast: Node) -> List[StmtNode]:
+    return [n for n in walk(ast) if isinstance(n, StmtNode)]

@@ -1,0 +1,219 @@
+"""Polyhedral loop transformations (paper SS V-B, Table II).
+
+Each transform manipulates a ``Statement``'s iteration domain (an integer
+set), its loop-dim order, and its ``iter_subst`` composition map -- never the
+user-written body.  All transforms verify *legality* against the statement's
+own dependences when ``check=True``: every loop-carried dependence must stay
+lexicographically positive after the change of basis.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .affine import BasicSet, Constraint, LinExpr, dependence_vector, eq, ge, le
+from .ir import Statement
+
+
+class IllegalTransform(Exception):
+    pass
+
+
+# --------------------------------------------------------------------------
+# self-dependence helper
+# --------------------------------------------------------------------------
+def self_dependences(stmt: Statement):
+    """All data dependences of a statement onto itself (write->read,
+    write->write), in *current* dim space."""
+    deps = []
+    w_arr, w_idx = stmt.store_access()
+    # write -> read (true dep incl. reduction self-reads)
+    for arr, idx in stmt.load_accesses():
+        if arr.name != w_arr.name:
+            continue
+        info = dependence_vector(stmt.domain, list(w_idx), stmt.domain, list(idx))
+        if info.exists:
+            deps.append(info)
+        # also read -> write (anti) matters for legality
+        info2 = dependence_vector(stmt.domain, list(idx), stmt.domain, list(w_idx))
+        if info2.exists:
+            deps.append(info2)
+    # write -> write (output dep)
+    info3 = dependence_vector(stmt.domain, list(w_idx), stmt.domain, list(w_idx))
+    if info3.exists:
+        deps.append(info3)
+    return deps
+
+
+def _legal(stmt: Statement) -> bool:
+    """Exact polyhedral legality: every self-dependence pair — *defined by the
+    original program order* (lex order over ``original_iters``, recovered via
+    ``iter_subst``) — must still execute source-before-sink in the *current*
+    lexicographic order.
+
+    For each access pair we check emptiness of
+        {(s, t) : domains ∧ same-address ∧ s ≺_orig t ∧ t ⪯_cur s}
+    level by level; any non-empty cell is a reversed dependence.
+    """
+    dims = stmt.dims
+    n = len(dims)
+    orig = stmt.original_iters
+    w_arr, w_idx = stmt.store_access()
+    pairs: List[Tuple[Sequence[LinExpr], Sequence[LinExpr]]] = []
+    for arr, idx in stmt.load_accesses():
+        if arr.name == w_arr.name:
+            pairs.append((w_idx, idx))   # flow (write -> later read)
+            pairs.append((idx, w_idx))   # anti (read -> later write)
+    pairs.append((w_idx, w_idx))         # output
+
+    scopy = [f"__ls{i}" for i in range(n)]
+    tcopy = [f"__lt{i}" for i in range(n)]
+    smap = dict(zip(dims, scopy))
+    tmap = dict(zip(dims, tcopy))
+    base = ([c.rename(smap) for c in stmt.domain.constraints]
+            + [c.rename(tmap) for c in stmt.domain.constraints])
+    orig_s = [stmt.iter_subst[k].rename(smap) for k in orig]
+    orig_t = [stmt.iter_subst[k].rename(tmap) for k in orig]
+    cur_s = [LinExpr.var(v) for v in scopy]
+    cur_t = [LinExpr.var(v) for v in tcopy]
+
+    for (src, sink) in pairs:
+        acc = [Constraint(a.rename(smap) - b.rename(tmap), True)
+               for a, b in zip(src, sink)]
+        for l in range(len(orig)):
+            lexpos = [Constraint(orig_s[a] - orig_t[a], True) for a in range(l)]
+            lexpos.append(ge(orig_t[l] - orig_s[l], 1))
+            # violation: t strictly before s in current order ...
+            for m in range(n):
+                viol = [Constraint(cur_s[a] - cur_t[a], True) for a in range(m)]
+                viol.append(ge(cur_s[m] - cur_t[m], 1))
+                cell = BasicSet(scopy + tcopy, base + acc + lexpos + viol,
+                                stmt.domain.params)
+                if not cell.is_empty():
+                    return False
+            # ... or t == s in current order (non-injective schedule)
+            same = [Constraint(cur_s[a] - cur_t[a], True) for a in range(n)]
+            cell = BasicSet(scopy + tcopy, base + acc + lexpos + same,
+                            stmt.domain.params)
+            if not cell.is_empty():
+                return False
+    return True
+
+
+# --------------------------------------------------------------------------
+# transforms
+# --------------------------------------------------------------------------
+def interchange(stmt: Statement, a: str, b: str, check: bool = True) -> None:
+    dims = list(stmt.dims)
+    ia, ib = dims.index(a), dims.index(b)
+    dims[ia], dims[ib] = dims[ib], dims[ia]
+    old = stmt.domain
+    stmt.domain = stmt.domain.permute(dims)
+    if check and not _legal(stmt):
+        stmt.domain = old
+        raise IllegalTransform(f"interchange({a},{b}) violates dependences of {stmt.name}")
+
+
+def split(stmt: Statement, d: str, t: int, d0: str, d1: str, check: bool = True) -> None:
+    """d = t*d0 + d1, 0 <= d1 < t.  (paper: s.split(i, t, i0, i1))"""
+    assert t >= 1
+    repl = LinExpr.var(d0) * t + LinExpr.var(d1)
+    extra = [ge(LinExpr.var(d1), 0), le(LinExpr.var(d1), t - 1)]
+    stmt.domain = stmt.domain.substitute_dim(d, repl, [d0, d1], extra)
+    for k in list(stmt.iter_subst):
+        stmt.iter_subst[k] = stmt.iter_subst[k].substitute(d, repl)
+    # splitting never reorders iterations => always legal; check for safety
+    if check and not _legal(stmt):
+        raise IllegalTransform(f"split({d}) unexpectedly illegal on {stmt.name}")
+
+
+def tile(stmt: Statement, i: str, j: str, t1: int, t2: int,
+         i0: str, j0: str, i1: str, j1: str, check: bool = True) -> None:
+    """Tile (i, j) with (t1, t2) -> order (i0, j0, i1, j1) (paper Table II)."""
+    split(stmt, i, t1, i0, i1, check=False)
+    split(stmt, j, t2, j0, j1, check=False)
+    # current order: ... i0 i1 ... j0 j1 ... ; target: i0 j0 i1 j1 in i's slot
+    dims = [d for d in stmt.dims if d not in (i0, i1, j0, j1)]
+    pos = stmt.dims.index(i0)
+    # count non-tile dims before i0
+    before = [d for d in stmt.dims[:pos] if d not in (i0, i1, j0, j1)]
+    order = before + [i0, j0, i1, j1] + [d for d in dims if d not in before]
+    old = stmt.domain
+    stmt.domain = stmt.domain.permute(order)
+    if check and not _legal(stmt):
+        stmt.domain = old
+        raise IllegalTransform(f"tile({i},{j}) violates dependences of {stmt.name}")
+
+
+def skew(stmt: Statement, i: str, j: str, f: int, ip: str, jp: str,
+         check: bool = True) -> None:
+    """(i, j) -> (ip, jp) = (i, j + f*i): wavefront skew (paper Table II).
+
+    Substitution: i = ip, j = jp - f*ip.
+    """
+    stmt.domain = stmt.domain.rename_dim(i, ip)
+    repl_j = LinExpr.var(jp) - LinExpr.var(ip) * f
+    stmt.domain = stmt.domain.substitute_dim(j, repl_j, [jp])
+    for k in list(stmt.iter_subst):
+        e = stmt.iter_subst[k].rename({i: ip})
+        stmt.iter_subst[k] = e.substitute(j, repl_j)
+    if check and not _legal(stmt):
+        raise IllegalTransform(f"skew({i},{j},{f}) violates dependences of {stmt.name}")
+
+
+def shift(stmt: Statement, d: str, c: int, new: Optional[str] = None) -> None:
+    """d -> d' = d + c (always legal)."""
+    nd = new or d
+    if nd != d:
+        stmt.domain = stmt.domain.rename_dim(d, nd)
+        for k in list(stmt.iter_subst):
+            stmt.iter_subst[k] = stmt.iter_subst[k].rename({d: nd})
+        d = nd
+    repl = LinExpr.var(d) - c
+    stmt.domain = stmt.domain.substitute_dim(d, repl, [d])
+    for k in list(stmt.iter_subst):
+        stmt.iter_subst[k] = stmt.iter_subst[k].substitute(d, repl)
+
+
+def rename_dim(stmt: Statement, old: str, new: str) -> None:
+    stmt.domain = stmt.domain.rename_dim(old, new)
+    for k in list(stmt.iter_subst):
+        stmt.iter_subst[k] = stmt.iter_subst[k].rename({old: new})
+    if stmt.pipeline_at == old:
+        stmt.pipeline_at = new
+    if old in stmt.unrolls:
+        stmt.unrolls[new] = stmt.unrolls.pop(old)
+
+
+# --------------------------------------------------------------------------
+# fusion (program-order): s1 executes after s2 sharing levels [0..level]
+# --------------------------------------------------------------------------
+def set_after(s1: Statement, s2: Statement, level: int) -> None:
+    """paper: s1.after(s2, j) -- share loops up to and incl. position of j."""
+    s1.after_spec = (s2, level)
+
+
+def fuse_legal(s1: Statement, s2: Statement, levels: int) -> bool:
+    """Conservative fusion check: cross-statement deps (s2 -> s1) must be
+    non-negative on the first ``levels`` shared dims."""
+    w2, w2i = s2.store_access()
+    w1, w1i = s1.store_access()
+    pairs = []
+    for arr, idx in s1.load_accesses():
+        if arr.name == w2.name:
+            pairs.append((list(w2i), list(idx)))       # s2 writes -> s1 reads
+    if w1.name == w2.name:
+        pairs.append((list(w2i), list(w1i)))           # output dep
+    for arr, idx in s2.load_accesses():
+        if arr.name == w1.name:
+            pairs.append((list(idx), list(w1i)))       # anti dep s2 reads -> s1 writes
+    for src, sink in pairs:
+        info = dependence_vector(s2.domain, src, s1.domain, sink,
+                                 shared_levels=levels)
+        if not info.exists:
+            continue
+        for dist, dirn in zip(info.distance, info.direction):
+            if (dist is not None and dist < 0) or dirn == ">" or dirn == "*":
+                return False
+            if dist is not None and dist > 0 or dirn == "<":
+                break
+    return True

@@ -1,0 +1,2 @@
+"""Data pipeline."""
+from .pipeline import SyntheticLM, make_device_batch

@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, train/serve steps, ZeRO, compression,
+pipeline parallelism, fault tolerance."""

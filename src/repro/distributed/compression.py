@@ -1,0 +1,69 @@
+"""Gradient compression: blockwise int8 quantization with error feedback.
+
+The DP gradient sync is the collective-bound term of data-parallel training;
+int8 halves->quarters the bytes on the wire vs bf16/f32 all-reduce.  Error
+feedback (Seide et al. / EF-SGD) keeps the quantization residual locally and
+re-injects it next step, preserving convergence.
+
+``compressed_psum`` runs inside ``shard_map`` over the data axes: each
+replica quantizes its shard-local gradient, all-gathers the int8 payload +
+f32 block scales, and dequantize-sums locally.  Wire bytes ~= N * (1 +
+4/block) per hop vs 4N for f32 ring all-reduce.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 256
+
+
+def quantize_int8(x: jnp.ndarray, block: int = BLOCK):
+    """Blockwise symmetric int8.  Returns (q int8 (nb, block), scale f32 (nb,),
+    original shape/size)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    safe = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale, n
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, n: int,
+                    shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+def ef_quantize(g: jnp.ndarray, residual: jnp.ndarray, block: int = BLOCK):
+    """Error-feedback quantization: q = Q(g + r); r' = (g + r) - deq(q)."""
+    target = g.astype(jnp.float32) + residual
+    q, scale, n = quantize_int8(target, block)
+    deq = dequantize_int8(q, scale, n, g.shape)
+    return q, scale, (target - deq)
+
+
+def compressed_psum(g: jnp.ndarray, residual: jnp.ndarray, axis_names,
+                    block: int = BLOCK) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Inside shard_map: EF-quantize, all-gather int8, dequant-sum.
+
+    Returns (summed gradient f32, new residual)."""
+    q, scale, r_new = ef_quantize(g, residual, block)
+    qg = jax.lax.all_gather(q, axis_names, axis=0, tiled=False)
+    sg = jax.lax.all_gather(scale, axis_names, axis=0, tiled=False)
+    # qg: (world, nb, block); dequant and sum over world
+    deq = qg.astype(jnp.float32) * sg[..., None]
+    total = jnp.sum(deq, axis=0).reshape(-1)[: int(np.prod(g.shape))]
+    return total.reshape(g.shape), r_new
+
+
+def init_ef_state(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

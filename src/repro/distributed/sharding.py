@@ -1,0 +1,95 @@
+"""Logical-axis sharding rules (MaxText-style) + model-side hint hooks.
+
+Models annotate activations with *logical* axes (``shard_hint``); the
+launcher installs a ``MeshContext`` mapping logical axes to mesh axes.  With
+no context installed (unit tests, single CPU) hints are no-ops, so model
+code never depends on a mesh being present.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (None = replicated); tuples shard over several
+DEFAULT_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "kv_seq": None,
+    "kv_seq_sharded": ("model",),  # long-context decode: SP over the KV cache
+    "zero": ("data",),             # ZeRO-1 optimizer-state axis
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_cap": None,
+    "layers": None,
+    "ssm_heads": ("model",),
+    "state": None,
+}
+
+_ctx = threading.local()
+
+
+class MeshContext:
+    def __init__(self, mesh: Mesh, rules: Optional[Dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def spec(self, logical: Sequence[Optional[str]]) -> P:
+        axes = []
+        used = set()
+        for l in logical:
+            if l is None:
+                axes.append(None)
+                continue
+            m = self.rules.get(l)
+            if m is None:
+                axes.append(None)
+                continue
+            ms = tuple(a for a in m if a in self.mesh.axis_names and a not in used)
+            used |= set(ms)
+            if not ms:
+                axes.append(None)
+            elif len(ms) == 1:
+                axes.append(ms[0])
+            else:
+                axes.append(ms)
+        return P(*axes)
+
+    def sharding(self, logical: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical))
+
+
+def current() -> Optional[MeshContext]:
+    return getattr(_ctx, "mc", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[Dict] = None):
+    prev = current()
+    _ctx.mc = MeshContext(mesh, rules)
+    try:
+        with mesh:
+            yield _ctx.mc
+    finally:
+        _ctx.mc = prev
+
+
+def shard_hint(x, logical: Sequence[Optional[str]]):
+    """with_sharding_constraint against the active mesh context (no-op
+    outside one)."""
+    mc = current()
+    if mc is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, mc.sharding(logical))
+    except (ValueError, TypeError):
+        return x

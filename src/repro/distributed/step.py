@@ -1,0 +1,136 @@
+"""Jitted train / prefill / decode step builders with full shardings.
+
+``make_train_step`` wires: loss -> grads -> clip -> AdamW (+ZeRO-1 sharded
+moments) under pjit; XLA inserts the DP all-reduce (or reduce-scatter with
+ZeRO) and the TP collectives from the sharding annotations.  All builders
+return (jitted_fn, in_shardings, out_shardings) so the dry-run can lower
+with ShapeDtypeStructs only.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import decode_step, forward, init_cache, init_params, loss_fn
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from .partition import (batch_shardings, cache_logical_axes, logical_to_sharding,
+                        param_logical_axes, zero1_axes)
+from .sharding import MeshContext
+
+
+def _shapes_of(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def make_param_shardings(cfg: ModelConfig, mc: MeshContext,
+                         fsdp: bool = False):
+    logical = param_logical_axes(cfg)
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg),
+                            jax.ShapeDtypeStruct((), jax.random.key(0).dtype))
+    if fsdp:
+        logical = zero1_axes(logical, shapes, mc.mesh.shape.get("data", 1))
+    return logical_to_sharding(logical, mc, shapes), logical, shapes
+
+
+def make_opt_shardings(cfg: ModelConfig, pcfg: ParallelConfig, mc: MeshContext,
+                       logical, shapes):
+    data_size = 1
+    for ax in ("pod", "data"):
+        if ax in mc.mesh.shape:
+            data_size *= mc.mesh.shape[ax]
+    if pcfg.zero1:
+        zl = zero1_axes(logical, shapes, mc.mesh.shape.get("data", 1))
+    else:
+        zl = logical
+    m_sh = logical_to_sharding(zl, mc, shapes)
+    v_sh = logical_to_sharding(zl, mc, shapes)
+    from repro.optim.adamw import AdamWState
+    return AdamWState(NamedSharding(mc.mesh, P()), m_sh, v_sh)
+
+
+def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, mc: MeshContext,
+                    peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000):
+    """Returns (step_fn, (param_sh, opt_sh, batch_sh), (out shardings))."""
+    param_sh, logical, shapes = make_param_shardings(cfg, mc, fsdp=pcfg.fsdp)
+    opt_sh = make_opt_shardings(cfg, pcfg, mc, logical, shapes)
+    batch_sh = batch_shardings(cfg, "train", mc)
+
+    def step(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+        lr = cosine_schedule(opt.step, peak_lr=peak_lr, warmup=warmup,
+                             total=total_steps)
+        params, opt, om = adamw_update(grads, opt, params, lr=lr)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["lr"] = lr
+        return params, opt, metrics
+
+    metrics_sh = None  # replicated scalars
+    jitted = jax.jit(step,
+                     in_shardings=(param_sh, opt_sh, batch_sh),
+                     out_shardings=(param_sh, opt_sh, metrics_sh),
+                     donate_argnums=(0, 1))
+    return jitted, (param_sh, opt_sh, batch_sh)
+
+
+def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig, mc: MeshContext):
+    param_sh, _, _ = make_param_shardings(cfg, mc)
+    batch_sh = batch_shardings(cfg, "prefill", mc)
+    logits_sh = mc.sharding(("batch", "seq", "vocab"))
+
+    def prefill(params, batch):
+        logits, _ = forward(params, cfg, tokens=batch.get("tokens"),
+                            embeds=batch.get("embeds"))
+        return logits
+
+    jitted = jax.jit(prefill, in_shardings=(param_sh, batch_sh),
+                     out_shardings=logits_sh)
+    return jitted, (param_sh, batch_sh)
+
+
+def make_decode_step(cfg: ModelConfig, pcfg: ParallelConfig, mc: MeshContext,
+                     batch: int, max_seq: int, long_context: bool = False):
+    """serve_step: one new token against a KV cache of max_seq."""
+    param_sh, _, _ = make_param_shardings(cfg, mc)
+    cache_logical = cache_logical_axes(cfg, long_context=long_context)
+    cache_shapes = jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+    cache_sh = logical_to_sharding(cache_logical, mc, cache_shapes)
+    # divisibility-aware: batch=1 long-context cells replicate the batch axis
+    tok_sh = logical_to_sharding(
+        ("batch",), mc, jax.ShapeDtypeStruct((batch,), jnp.int32))
+    logits_sh = logical_to_sharding(
+        ("batch", "vocab"), mc,
+        jax.ShapeDtypeStruct((batch, cfg.padded_vocab_size), jnp.float32))
+
+    def serve_step(params, cache, token, pos):
+        return decode_step(params, cfg, cache, token, pos)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(param_sh, cache_sh, tok_sh, tok_sh),
+                     out_shardings=(logits_sh, cache_sh),
+                     donate_argnums=(1,))
+    return jitted, (param_sh, cache_sh, tok_sh)
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins for every model input (dry-run contract)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape, for_grad: bool = False) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one (arch x shape) cell -- no allocation."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        out = {"labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.frontend:
+            out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return out
+    return {"token": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((b,), jnp.int32)}

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (required so smoke tests see one device while the dry-run
+sees 512 placeholders).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with the 'pod' axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devs)} -- run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 (dryrun.py "
+            f"sets this itself)")
+    import numpy as np
+    return jax.sharding.Mesh(np.array(devs[:n]).reshape(shape), axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests/elastic restarts."""
+    import numpy as np
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.sharding.Mesh(np.array(jax.devices()[:n]).reshape(shape), axes)

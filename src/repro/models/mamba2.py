@@ -1,0 +1,125 @@
+"""Mamba2 block (SSD, scalar decay per head) -- the zamba2 backbone.
+
+POM connection: the selective-scan recurrence is the paper's tight
+loop-carried dependence; training uses the chunked kernel/oracle
+(``kernels.ssm_scan``), decode keeps (h, conv) states and does O(1) work per
+token -- which is what makes ``long_500k`` runnable for this family.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from .layers import dtype_of, rmsnorm, rmsnorm_init
+
+Params = Dict
+CONV_W = 4
+
+
+def mamba2_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    nh = cfg.ssm_heads or cfg.num_heads
+    n = cfg.ssm_state
+    pdt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": jax.random.normal(ks[0], (d, 2 * din), pdt) * d ** -0.5,
+        "conv": jax.random.normal(ks[1], (CONV_W, din), pdt) * 0.1,
+        "w_b": jax.random.normal(ks[2], (d, n), pdt) * d ** -0.5,
+        "w_c": jax.random.normal(ks[3], (d, n), pdt) * d ** -0.5,
+        "w_dt": jax.random.normal(ks[4], (d, nh), pdt) * d ** -0.5,
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "w_out": jax.random.normal(ks[5], (din, d), pdt) * din ** -0.5,
+        "norm": rmsnorm_init(din, pdt),
+    }
+
+
+def _causal_conv(xin: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv, width CONV_W. xin: (B, S, din)."""
+    pads = jnp.pad(xin, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + xin.shape[1], :] * w[i] for i in range(CONV_W))
+    return out
+
+
+def _gates(p: Params, x: jnp.ndarray, nh: int):
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ p["w_dt"].astype(jnp.float32)
+                         + p["dt_bias"])                    # (B,S,nh)
+    a = jnp.exp(-dt * jnp.exp(p["a_log"]))                  # decay in (0,1]
+    return dt, a
+
+
+def mamba2_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    b, s, d = x.shape
+    din = cfg.ssm_expand * d
+    nh = cfg.ssm_heads or cfg.num_heads
+    ph = din // nh
+    n = cfg.ssm_state
+
+    zx = x @ p["w_in"]
+    z, xin = zx[..., :din], zx[..., din:]
+    xin = jax.nn.silu(_causal_conv(xin, p["conv"]))
+
+    dt, a = _gates(p, x, nh)
+    bmat = (x @ p["w_b"]).astype(jnp.float32)               # (B,S,N), 1 group
+    cmat = (x @ p["w_c"]).astype(jnp.float32)
+    xh = xin.reshape(b, s, nh, ph) * dt[..., None].astype(xin.dtype)
+    bexp = jnp.broadcast_to(bmat[:, :, None, :], (b, s, nh, n))
+    cexp = jnp.broadcast_to(cmat[:, :, None, :], (b, s, nh, n))
+
+    if cfg.use_pallas and s % 64 == 0:
+        impl = "pallas"
+    elif cfg.unroll_inner_scans and s % 128 == 0:
+        impl = "ref_chunked"
+    else:
+        impl = "ref"
+    y, _ = ops.ssm_scan(xh, a, bexp, cexp, impl=impl)
+    y = y.reshape(b, s, din)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, O(1) state)
+# ---------------------------------------------------------------------------
+def mamba2_init_state(cfg: ModelConfig, batch: int):
+    din = cfg.ssm_expand * cfg.d_model
+    nh = cfg.ssm_heads or cfg.num_heads
+    ph = din // nh
+    return {
+        "h": jnp.zeros((batch, nh, cfg.ssm_state, ph), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_W - 1, din), jnp.float32),
+    }
+
+
+def mamba2_decode(p: Params, x: jnp.ndarray, state, cfg: ModelConfig):
+    """x: (B, 1, d) -> (out (B,1,d), new_state)."""
+    b, _, d = x.shape
+    din = cfg.ssm_expand * d
+    nh = cfg.ssm_heads or cfg.num_heads
+    ph = din // nh
+    n = cfg.ssm_state
+
+    zx = x @ p["w_in"]
+    z, xin = zx[..., :din], zx[..., din:]
+    window = jnp.concatenate([state["conv"], xin.astype(jnp.float32)], axis=1)
+    conv_out = sum(window[:, i, :] * p["conv"][i].astype(jnp.float32)
+                   for i in range(CONV_W))
+    xin1 = jax.nn.silu(conv_out)[:, None, :]                # (B,1,din)
+
+    dt, a = _gates(p, x, nh)                                # (B,1,nh)
+    bmat = (x @ p["w_b"]).astype(jnp.float32)
+    cmat = (x @ p["w_c"]).astype(jnp.float32)
+    xh = (xin1.reshape(b, nh, ph) * dt[:, 0, :, None]).astype(jnp.float32)
+
+    h = state["h"] * a[:, 0, :, None, None] + \
+        bmat[:, 0, None, :, None] * xh[:, :, None, :]
+    y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0], h).reshape(b, 1, din)
+    y = rmsnorm(p["norm"], y.astype(x.dtype), cfg.norm_eps) * jax.nn.silu(z)
+    new_state = {"h": h, "conv": window[:, 1:, :]}
+    return y @ p["w_out"], new_state

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Dispatch is the production sort/scatter formulation (no (T, E, C) one-hot
+tensors): tokens are replicated k ways, sorted by expert id, ranked within
+their expert, dropped beyond capacity, scattered into the (E, cap, d) buffer
+that the grouped matmul consumes, and combined back weighted by router
+probabilities.  Expert-parallel sharding comes from ``shard_hint`` on the
+(E, cap, d) buffers: with experts mapped to the ``model`` mesh axis, XLA
+inserts the dispatch/return all-to-alls.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_hint
+from repro.kernels import ops
+from .layers import dtype_of
+
+Params = Dict
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    pdt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * d ** -0.5,
+        "wi": jax.random.normal(ks[1], (e, d, f), pdt) * d ** -0.5,
+        "wg": jax.random.normal(ks[2], (e, d, f), pdt) * d ** -0.5,
+        "wo": jax.random.normal(ks[3], (e, f, d), pdt) * f ** -0.5,
+    }
+    if cfg.shared_expert:
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wi": jax.random.normal(kk[0], (d, f), pdt) * d ** -0.5,
+            "wg": jax.random.normal(kk[1], (d, f), pdt) * d ** -0.5,
+            "wo": jax.random.normal(kk[2], (f, d), pdt) * f ** -0.5,
+        }
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    cap = int(math.ceil(tokens * cfg.experts_per_token * cfg.capacity_factor
+                        / cfg.num_experts))
+    return max(8, -(-cap // 8) * 8)
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32)) @ p["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_ids = jax.lax.top_k(probs, k)            # (T, k)
+    if k > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(gate_ids[:, 0], e), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # --- sort-based dispatch -------------------------------------------------
+    cap = _capacity(t, cfg)
+    flat_e = gate_ids.reshape(-1)                            # (T*k,)
+    flat_g = gate_vals.reshape(-1)
+    flat_src = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e)
+    se, sg, ssrc = flat_e[order], flat_g[order], flat_src[order]
+    # rank within expert
+    starts = jnp.searchsorted(se, jnp.arange(e), side="left")  # (E,)
+    rank = jnp.arange(t * k) - starts[se]
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, e * cap)         # overflow slot
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], xf[ssrc], 0))
+    buf = buf[:-1].reshape(e, cap, d)
+    buf = shard_hint(buf, ("experts", "expert_cap", "embed"))
+
+    # --- expert computation (grouped matmuls) ---------------------------------
+    impl = "pallas" if cfg.use_pallas else "ref"
+    h = jax.nn.silu(ops.grouped_matmul(buf, p["wg"], impl=impl)) * \
+        ops.grouped_matmul(buf, p["wi"], impl=impl)
+    y = ops.grouped_matmul(h.astype(x.dtype), p["wo"], impl=impl)
+    y = shard_hint(y, ("experts", "expert_cap", "embed"))
+    yflat = jnp.concatenate([y.reshape(e * cap, d),
+                             jnp.zeros((1, d), y.dtype)], axis=0)
+
+    # --- combine --------------------------------------------------------------
+    out = jnp.zeros((t, d), jnp.float32)
+    contrib = yflat[slot].astype(jnp.float32) * \
+        (sg * keep.astype(jnp.float32))[:, None]
+    out = out.at[ssrc].add(contrib)
+    out = out.astype(x.dtype).reshape(b, s, d)
+
+    if cfg.shared_expert:
+        sp = p["shared"]
+        hs = jax.nn.silu(xf @ sp["wg"]) * (xf @ sp["wi"])
+        out = out + (hs @ sp["wo"]).reshape(b, s, d)
+    return out, aux

@@ -1,0 +1,168 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkable) + sLSTM (scalar memory,
+inherently sequential).
+
+The mLSTM recurrence  C_t = f_t C_{t-1} + i_t k_t (x) v_t  is exactly the
+``kernels.ssm_scan`` form (a=f, b=i*k, x=v, c=q) plus a normalizer scan
+(x=1), so training reuses the chunked kernel.  The sLSTM branch has a
+data-dependent scalar recurrence POM cannot chunk (documented II floor,
+DESIGN.md SS5): it runs as a lax.scan over time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from .layers import dtype_of, rmsnorm, rmsnorm_init
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = cfg.resolved_head_dim
+    pdt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": jax.random.normal(ks[0], (d, h * hd), pdt) * d ** -0.5,
+        "wk": jax.random.normal(ks[1], (d, h * hd), pdt) * d ** -0.5,
+        "wv": jax.random.normal(ks[2], (d, h * hd), pdt) * d ** -0.5,
+        "wif": jax.random.normal(ks[3], (d, 2 * h), pdt) * d ** -0.5,
+        "wo": jax.random.normal(ks[4], (h * hd, d), pdt) * d ** -0.5,
+        "wup": jax.random.normal(ks[5], (d, 2 * d), pdt) * d ** -0.5,
+        "norm": rmsnorm_init(h * hd, pdt),
+    }
+
+
+def _mlstm_qkvif(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, h, hd) * hd ** -0.5
+    v = (x @ p["wv"]).reshape(b, s, h, hd)
+    gif = (x @ p["wif"]).astype(jnp.float32).reshape(b, s, h, 2)
+    i_gate = jnp.exp(-jax.nn.softplus(-gif[..., 0]))        # sigmoid, stable
+    f_gate = jnp.exp(-jax.nn.softplus(-gif[..., 1]))
+    return q, k, v, i_gate, f_gate
+
+
+def mlstm_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    q, k, v, ig, fg = _mlstm_qkvif(p, x, cfg)
+
+    if cfg.use_pallas and s % 64 == 0:
+        impl = "pallas"
+    elif cfg.unroll_inner_scans and s % 128 == 0:
+        impl = "ref_chunked"
+    else:
+        impl = "ref"
+    bk = k.astype(jnp.float32) * ig[..., None]
+    y, _ = ops.ssm_scan(v, fg, bk, q.astype(jnp.float32), impl=impl)
+    nrm, _ = ops.ssm_scan(jnp.ones((b, s, h, 1), jnp.float32), fg, bk,
+                          q.astype(jnp.float32),
+                          impl="ref_chunked" if impl == "ref_chunked" else "ref")
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0)
+    y = y.reshape(b, s, h * hd).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    up = x @ p["wup"]
+    y = y * jax.nn.silu(up[..., :d])
+    return y @ p["wo"]
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+    }
+
+
+def mlstm_decode(p: Params, x: jnp.ndarray, state, cfg: ModelConfig):
+    b, _, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    q, k, v, ig, fg = _mlstm_qkvif(p, x, cfg)
+    q, k, v = q[:, 0], k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32)
+    ig, fg = ig[:, 0], fg[:, 0]
+    C = state["C"] * fg[..., None, None] + \
+        (ig[..., None] * k)[..., :, None] * v[..., None, :]
+    n = state["n"] * fg[..., None] + ig[..., None] * k
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32),
+                                         n))[..., None], 1.0)
+    y = (y / den).reshape(b, 1, h * hd).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    up = x @ p["wup"]
+    y = y * jax.nn.silu(up[..., :d])
+    return y @ p["wo"], {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential scalar recurrence; the documented II floor)
+# ---------------------------------------------------------------------------
+def slstm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = cfg.resolved_head_dim
+    pdt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "wz": jax.random.normal(ks[0], (d, h * hd), pdt) * d ** -0.5,
+        "wg": jax.random.normal(ks[1], (d, 3 * h), pdt) * d ** -0.5,
+        "wo": jax.random.normal(ks[2], (h * hd, d), pdt) * d ** -0.5,
+    }
+
+
+def slstm_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    z = jnp.tanh((x @ p["wz"]).astype(jnp.float32)).reshape(b, s, h, hd)
+    g = (x @ p["wg"]).astype(jnp.float32).reshape(b, s, h, 3)
+    i = jnp.exp(-jax.nn.softplus(-g[..., 0]))
+    f = jnp.exp(-jax.nn.softplus(-g[..., 1]))
+    o = jnp.exp(-jax.nn.softplus(-g[..., 2]))
+
+    def step(carry, inp):
+        c, n = carry
+        zt, it, ft, ot = inp
+        c = ft[..., None] * c + it[..., None] * zt
+        n = ft * n + it
+        y = ot[..., None] * c / jnp.maximum(n[..., None], 1.0)
+        return (c, n), y
+
+    c0 = jnp.zeros((b, h, hd), jnp.float32)
+    n0 = jnp.zeros((b, h), jnp.float32)
+    (_, _), ys = jax.lax.scan(
+        step, (c0, n0),
+        (jnp.moveaxis(z, 1, 0), jnp.moveaxis(i, 1, 0),
+         jnp.moveaxis(f, 1, 0), jnp.moveaxis(o, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h * hd).astype(x.dtype)
+    return y @ p["wo"]
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    return {"c": jnp.zeros((batch, h, hd), jnp.float32),
+            "n": jnp.zeros((batch, h), jnp.float32)}
+
+
+def slstm_decode(p: Params, x: jnp.ndarray, state, cfg: ModelConfig):
+    b, _, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    z = jnp.tanh((x @ p["wz"]).astype(jnp.float32)).reshape(b, h, hd)
+    g = (x @ p["wg"]).astype(jnp.float32).reshape(b, h, 3)
+    i = jnp.exp(-jax.nn.softplus(-g[..., 0]))
+    f = jnp.exp(-jax.nn.softplus(-g[..., 1]))
+    o = jnp.exp(-jax.nn.softplus(-g[..., 2]))
+    c = f[..., None] * state["c"] + i[..., None] * z
+    n = f * state["n"] + i
+    y = (o[..., None] * c / jnp.maximum(n[..., None], 1.0))
+    y = y.reshape(b, 1, h * hd).astype(x.dtype)
+    return y @ p["wo"], {"c": c, "n": n}

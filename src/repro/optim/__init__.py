@@ -1,0 +1,3 @@
+"""Optimizers (built in-repo: no optax dependency)."""
+from .adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+from .schedule import cosine_schedule

@@ -1,0 +1,66 @@
+"""AdamW with global-norm clipping and configurable state dtype.
+
+State dtype matters at scale: 400B-param models cannot afford 8 bytes/param
+of f32 (m, v) per chip; ``state_dtype='bfloat16'`` halves it (the v moment
+keeps f32 by default for stability -- ``second_dtype`` overrides).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params, state_dtype: str = "float32",
+               second_dtype: Optional[str] = None) -> AdamWState:
+    dt1 = jnp.dtype(state_dtype)
+    dt2 = jnp.dtype(second_dtype or "float32")
+    m = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, dt1), params)
+    v = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, dt2), params)
+    return AdamWState(jnp.zeros((), jnp.int32), m, v)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 max_grad_norm: float = 1.0) -> Tuple[Any, AdamWState, Dict]:
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        mn = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vn = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mh = mn / b1c
+        vh = vn / b2c
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), mn.astype(m.dtype), vn.astype(v.dtype)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = jax.tree_util.tree_leaves(state.v)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    newp = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    newm = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    newv = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return newp, AdamWState(step, newm, newv), {"grad_norm": gnorm}

@@ -1,0 +1,153 @@
+"""Tests for the two-stage DSE engine against the paper's claims.
+
+  * BICG (Fig. 2/10): stage 1 must distribute the conflicting fused loop,
+    interchange the q-statement, and re-fuse; the final II must be small
+    (paper: II=2 vs ScaleHLS 43).
+  * GEMM: bottleneck-oriented stage 2 must raise parallelism with II=1.
+  * Seidel: needs skewing; plain interchange cannot fix it.
+  * Semantics: DSE-transformed programs still compute correct results.
+"""
+import numpy as np
+import pytest
+
+from repro.core import dsl as pom
+from repro.core.astbuild import build_ast
+from repro.core.backend_jax import compile_jax
+from repro.core.cost_model import HlsModel
+from repro.core.depgraph import build_depgraph
+from repro.core.dse import auto_dse, stage1, _is_tight
+
+
+def make_bicg(n=32, fuse=True):
+    with pom.function("bicg") as f:
+        i, j = pom.var("i", 0, n), pom.var("j", 0, n)
+        A = pom.placeholder("A", (n, n))
+        p = pom.placeholder("p", (n,))
+        r = pom.placeholder("r", (n,))
+        q = pom.placeholder("q", (n,))
+        s_arr = pom.placeholder("s", (n,))
+        sq = pom.compute("sq", [i, j], q(i) + A(i, j) * p(j), q(i))
+        ss = pom.compute("ss", [i, j], s_arr(j) + r(i) * A(i, j), s_arr(j))
+        if fuse:
+            ss.after(sq, 1)
+    return f, sq, ss
+
+
+def make_gemm(n=32):
+    with pom.function("gemm") as f:
+        i, j, k = pom.var("i", 0, n), pom.var("j", 0, n), pom.var("k", 0, n)
+        A = pom.placeholder("A", (n, n))
+        B = pom.placeholder("B", (n, n))
+        C = pom.placeholder("C", (n, n))
+        s = pom.compute("s", [i, j, k], A(i, j) + B(i, k) * C(k, j), A(i, j))
+    return f, s
+
+
+def make_seidel(n=16):
+    with pom.function("seidel") as f:
+        i, j = pom.var("i", 1, n - 1), pom.var("j", 1, n - 1)
+        A = pom.placeholder("A", (n, n))
+        s = pom.compute("s", [i, j],
+                        0.2 * (A(i - 1, j) + A(i, j - 1) + A(i, j)
+                               + A(i, j + 1) + A(i + 1, j)), A(i, j))
+    return f, s
+
+
+def test_bicg_stage1_split_interchange_merge():
+    f, sq, ss = make_bicg()
+    assert _is_tight(sq.stmt)          # q[i] dep carried at inner j
+    assert not _is_tight(ss.stmt)      # s[j] dep carried at outer i
+    log = stage1(f.fn)
+    msgs = " | ".join(log.actions)
+    assert "distribute" in msgs
+    assert "interchange sq" in msgs
+    # after stage 1, no tight dependences remain
+    assert not _is_tight(sq.stmt)
+    assert not _is_tight(ss.stmt)
+    # sq now iterates (j, i)
+    assert sq.stmt.dims == ["j", "i"]
+    # and semantics are preserved
+    n = 32
+    rng = np.random.default_rng(0)
+    a, pv, rv = rng.normal(size=(n, n)), rng.normal(size=n), rng.normal(size=n)
+    ast = build_ast(f.fn)
+    out = compile_jax(f.fn, ast)({"A": a, "p": pv, "r": rv,
+                                  "q": np.zeros(n), "s": np.zeros(n)})
+    np.testing.assert_allclose(out["q"], a @ pv, rtol=1e-12)
+    np.testing.assert_allclose(out["s"], rv @ a, rtol=1e-12)
+
+
+def test_bicg_full_dse_small_ii():
+    f, sq, ss = make_bicg()
+    res = auto_dse(f.fn)
+    assert res.report.feasible
+    for name, node in res.report.nodes.items():
+        assert node.ii <= 4, f"{name} II={node.ii} (paper: 2)"
+    # parallelism must beat the ScaleHLS-like level of ~3 (paper: 16)
+    assert res.report.parallelism >= 8
+    assert res.dse_seconds < 120
+
+
+def test_gemm_dse_ii1_and_parallelism():
+    f, s = make_gemm()
+    res = auto_dse(f.fn)
+    assert res.report.feasible
+    node = res.report.nodes["s"]
+    assert node.ii <= 2
+    assert res.report.parallelism >= 16     # paper: 32 on 4096, smaller probs scale
+    # reduction loop k must not be innermost after stage 1
+    assert s.stmt.dims[-1] not in ("k",)
+
+
+def test_gemm_dse_semantics():
+    n = 16
+    f, s = make_gemm(n)
+    auto_dse(f.fn, max_parallel=16)
+    rng = np.random.default_rng(1)
+    b, c = rng.normal(size=(n, n)), rng.normal(size=(n, n))
+    ast = build_ast(f.fn)
+    out = compile_jax(f.fn, ast)({"A": np.zeros((n, n)), "B": b, "C": c})
+    np.testing.assert_allclose(out["A"], b @ c, rtol=1e-12)
+
+
+def test_seidel_needs_skewing():
+    f, s = make_seidel()
+    assert _is_tight(s.stmt)
+    log = stage1(f.fn)
+    msgs = " | ".join(log.actions)
+    assert "skew" in msgs
+    assert not _is_tight(s.stmt)
+
+
+def test_seidel_dse_semantics():
+    n = 12
+    f, s = make_seidel(n)
+    auto_dse(f.fn, max_parallel=8)
+    rng = np.random.default_rng(2)
+    a0 = rng.normal(size=(n, n))
+    # reference: plain sequential sweep
+    ref = a0.copy()
+    for i in range(1, n - 1):
+        for j in range(1, n - 1):
+            ref[i, j] = 0.2 * (ref[i - 1, j] + ref[i, j - 1] + ref[i, j]
+                               + ref[i, j + 1] + ref[i + 1, j])
+    ast = build_ast(f.fn)
+    out = compile_jax(f.fn, ast)({"A": a0.copy()})
+    np.testing.assert_allclose(out["A"], ref, rtol=1e-12)
+
+
+def test_unoptimized_baseline_cycles_bicg_calibration():
+    """Table IV: unoptimized BICG at 4096 = 234,889,217 cycles (+-20%)."""
+    f, sq, ss = make_bicg(4096, fuse=True)
+    model = HlsModel()
+    rep = model.design_report(f.fn)
+    assert 0.5 * 234_889_217 < rep.latency < 2.0 * 234_889_217
+
+
+def test_dse_beats_baseline_by_large_factor():
+    f, _, _ = make_bicg(256)
+    base = HlsModel().design_report(f.fn).latency
+    f2, _, _ = make_bicg(256)
+    res = auto_dse(f2.fn)
+    assert base / res.report.latency > 20, \
+        f"speedup only {base / res.report.latency:.1f}x"
