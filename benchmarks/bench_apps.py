@@ -12,7 +12,7 @@ from typing import Dict, List
 
 from repro.core.cost_model import XC7Z020, HlsModel
 from .baselines import pom, scalehls_like, unoptimized
-from .workloads import IMAGE, dnn_layers
+from .workloads import IMAGE, conv_nest, conv_table
 
 PAPER_IMAGE = {"edge_detect": (19.1, 344.0), "gaussian": (111.4, 312.0),
                "blur": (59.3, 356.0)}   # (scalehls, pom)
@@ -48,22 +48,32 @@ def run_dnn(net: str = "resnet18", budget_frac: float = 1.0) -> Dict:
     sum of per-layer latencies at the 1/L budget (paper Fig. 13: per-layer
     parallelism degrades to ~1, hurting large-#layer nets).
     """
-    layers = dnn_layers(net)
-    L = len(layers)
+    table = conv_table(net)
+    L = len(table)
     full = dict(XC7Z020)
     split = {k: (v / L if k != "bram_bits" else v / L) for k, v in XC7Z020.items()}
 
+    # real nets repeat layer shapes ([(512, 512, 32)] * 3, ...); DSE results
+    # depend only on the shape, so evaluate each distinct shape once
     seq_total = 0
     base_total = 0
     df_total = 0
-    for name, builder in layers:
-        base = unoptimized(builder())
-        base_total += base.report.latency
-        from repro.core.dse import auto_dse
-        res_full = auto_dse(builder().fn, resources=full, max_parallel=64)
-        seq_total += res_full.report.latency
-        res_split = auto_dse(builder().fn, resources=split, max_parallel=64)
-        df_total += res_split.report.latency
+    memo = {}
+    for idx, (oc, ic, hw) in enumerate(table):
+        key = (oc, ic, hw)
+        if key not in memo:
+            def builder():
+                return conv_nest(f"{net}_conv{idx}", oc, ic, hw, hw)
+            base = unoptimized(builder())
+            from repro.core.dse import auto_dse
+            res_full = auto_dse(builder().fn, resources=full, max_parallel=64)
+            res_split = auto_dse(builder().fn, resources=split, max_parallel=64)
+            memo[key] = (base.report.latency, res_full.report.latency,
+                         res_split.report.latency)
+        b, s, d = memo[key]
+        base_total += b
+        seq_total += s
+        df_total += d
 
     pom_speedup = base_total / seq_total
     scalehls_speedup = base_total / df_total

@@ -1,0 +1,147 @@
+"""DSE-speed suite: measures what the incremental engine buys, per workload.
+
+For each workload the suite runs ``auto_dse`` twice on fresh builds:
+
+  * **baseline** — every cache disabled (``repro.core.caching.disabled()``
+    + ``HlsModel(cache=False)``), i.e. the pre-incremental engine;
+  * **incremental** — caches enabled, started cold
+    (``caching.clear_all()``), so no state leaks between workloads.
+
+and reports wall-seconds plus two evaluation counters:
+
+  * ``full_node_evals`` — per-node cost computations that performed a fresh
+    recurrence-II/dependence analysis (every node computation in the
+    baseline engine is one of these);
+  * ``analysis_evals`` — all fresh full-cost analyses run by the engine:
+    self-dependence derivations, legality checks, trip-count (FM bound)
+    derivations, and the recurrence-II computations above.  This is the
+    suite's headline "cost-model evaluation count": it counts exactly the
+    polyhedral work the pre-PR engine redid from scratch per candidate.
+
+Counters, unlike wall time, are stable on shared hardware; both engines
+must produce identical action logs and DesignReports (checked here and in
+``tests/test_incremental_dse.py``).
+
+The ``conv_stack`` workload mirrors ``bench_apps.run_dnn``'s per-layer
+pattern (unoptimized report + full-budget DSE + split-budget DSE over a
+ResNet-style stack with repeated layer shapes) — the exact load that made
+the ``image`` suite too slow for fast mode before this engine existed.
+
+Emits ``BENCH_dse_speed.json`` next to the repo root for snapshot diffing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Tuple
+
+from repro.core import caching
+from repro.core.cost_model import XC7Z020, HlsModel
+from repro.core.dse import auto_dse
+
+from .workloads import bicg, conv_nest, gemm, mm3
+
+# ResNet18-style critical-layer sub-stack (out_ch, in_ch, H=W) with the
+# repetition pattern real nets have; sized to keep the suite fast.
+CONV_STACK: List[Tuple[int, int, int]] = (
+    [(64, 3, 32)] + [(64, 64, 16)] * 4 + [(128, 64, 8)] + [(128, 128, 8)] * 3
+)
+
+
+def _conv_builders() -> List[Callable]:
+    return [
+        (lambda oc=oc, ic=ic, hw=hw, i=i:
+         conv_nest(f"conv{i}", oc, ic, hw, hw).fn)
+        for i, (oc, ic, hw) in enumerate(CONV_STACK)
+    ]
+
+
+def _run_workload(builders: List[Callable], max_parallel: int,
+                  dnn_style: bool) -> Dict:
+    """One engine pass over a workload's functions; returns measurements."""
+    half = {k: v / 2 for k, v in XC7Z020.items()}
+    t0 = time.perf_counter()
+    full_evals = 0
+    actions: List[List[str]] = []
+    latencies: List[int] = []
+    for build in builders:
+        runs = [(XC7Z020, True)]
+        if dnn_style:
+            runs = [(XC7Z020, False), (XC7Z020, True), (half, True)]
+        for resources, do_dse in runs:
+            fn = build()
+            model = HlsModel(resources, cache=caching.ENABLED)
+            if do_dse:
+                res = auto_dse(fn, max_parallel=max_parallel,
+                               resources=resources, model=model)
+                actions.append(list(res.actions))
+                latencies.append(res.report.latency)
+            else:
+                latencies.append(model.design_report(fn).latency)
+            full_evals += model.stats.full_node_evals
+    seconds = time.perf_counter() - t0
+    c = caching.COUNTS
+    analysis = (c["selfdep_evals"] + c["legal_evals"] + c["trip_evals"]
+                + full_evals)
+    return {"seconds": seconds, "full_node_evals": full_evals,
+            "analysis_evals": analysis, "actions": actions,
+            "latencies": latencies}
+
+
+def measure(name: str, builders: List[Callable], max_parallel: int = 256,
+            dnn_style: bool = False) -> Dict:
+    caching.clear_all()
+    caching.reset_counts()
+    with caching.disabled():
+        base = _run_workload(builders, max_parallel, dnn_style)
+    caching.clear_all()
+    caching.reset_counts()
+    inc = _run_workload(builders, max_parallel, dnn_style)
+    identical = (base["actions"] == inc["actions"]
+                 and base["latencies"] == inc["latencies"])
+    return {
+        "workload": name,
+        "baseline_seconds": round(base["seconds"], 3),
+        "incremental_seconds": round(inc["seconds"], 3),
+        "wall_speedup": round(base["seconds"] / max(inc["seconds"], 1e-9), 2),
+        "baseline_full_node_evals": base["full_node_evals"],
+        "incremental_full_node_evals": inc["full_node_evals"],
+        "baseline_analysis_evals": base["analysis_evals"],
+        "incremental_analysis_evals": inc["analysis_evals"],
+        "analysis_eval_reduction": round(
+            base["analysis_evals"] / max(inc["analysis_evals"], 1), 2),
+        "identical_results": identical,
+    }
+
+
+def run_all() -> List[Dict]:
+    suites = [
+        ("gemm", [lambda: gemm(512).fn], 256, False),
+        ("bicg", [lambda: bicg(512).fn], 256, False),
+        ("3mm", [lambda: mm3(256).fn], 256, False),
+        ("conv_stack", _conv_builders(), 64, True),
+    ]
+    return [measure(name, builders, mp, dnn)
+            for name, builders, mp, dnn in suites]
+
+
+def csv_rows() -> List[str]:
+    rows = run_all()
+    snap = {"suite": "dse_speed", "results": rows}
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_dse_speed.json")
+    with open(path, "w") as fh:
+        json.dump(snap, fh, indent=2)
+    out = []
+    for r in rows:
+        out.append(
+            f"dse_speed/{r['workload']},{r['incremental_seconds'] * 1e6:.0f},"
+            f"wall_speedup={r['wall_speedup']}x;"
+            f"analysis_evals={r['baseline_analysis_evals']}->"
+            f"{r['incremental_analysis_evals']}"
+            f"({r['analysis_eval_reduction']}x);"
+            f"full_node_evals={r['baseline_full_node_evals']}->"
+            f"{r['incremental_full_node_evals']};"
+            f"identical={r['identical_results']}")
+    return out

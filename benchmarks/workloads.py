@@ -253,9 +253,14 @@ RESNET18_CONVS: List[Tuple[int, int, int]] = (
 )
 
 
+def conv_table(net: str) -> List[Tuple[int, int, int]]:
+    """(out_ch, in_ch, H=W) per critical conv loop of ``net``."""
+    return VGG16_CONVS if net == "vgg16" else RESNET18_CONVS
+
+
 def dnn_layers(net: str):
     """Yield (name, conv builder) for each critical loop of the net."""
-    table = VGG16_CONVS if net == "vgg16" else RESNET18_CONVS
+    table = conv_table(net)
     out = []
     for idx, (oc, ic, hw) in enumerate(table):
         out.append((f"{net}_conv{idx}",

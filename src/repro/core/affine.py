@@ -29,9 +29,16 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 # Affine expressions
 # --------------------------------------------------------------------------
 class LinExpr:
-    """Affine expression: sum(coeff[d] * d) + const, integer coefficients."""
+    """Affine expression: sum(coeff[d] * d) + const, integer coefficients.
 
-    __slots__ = ("coeffs", "const")
+    Instances are immutable by convention (no method mutates ``coeffs`` or
+    ``const`` after construction); ``key()`` is therefore computed once and
+    cached, and ``interned()`` hash-conses equal expressions onto a single
+    canonical instance so schedule signatures and composed access functions
+    share storage across DSE candidates.
+    """
+
+    __slots__ = ("coeffs", "const", "_key")
 
     def __init__(self, coeffs: Optional[Dict[str, int]] = None, const: int = 0):
         self.coeffs: Dict[str, int] = {k: int(v) for k, v in (coeffs or {}).items() if v != 0}
@@ -112,9 +119,25 @@ class LinExpr:
             g = math.gcd(g, abs(v))
         return math.gcd(g, abs(self.const))
 
+    def interned(self) -> "LinExpr":
+        """Canonical shared instance for this expression's value."""
+        k = self.key()
+        e = _INTERN.get(k)
+        if e is None:
+            if len(_INTERN) >= _INTERN_MAX:
+                _INTERN.clear()
+            _INTERN[k] = self
+            return self
+        return e
+
     # -- hash/eq/repr ---------------------------------------------------------
     def key(self) -> Tuple:
-        return (tuple(sorted(self.coeffs.items())), self.const)
+        try:
+            return self._key
+        except AttributeError:
+            k = (tuple(sorted(self.coeffs.items())), self.const)
+            self._key = k
+            return k
 
     def __eq__(self, other) -> bool:
         return isinstance(other, LinExpr) and self.key() == other.key()
@@ -136,6 +159,12 @@ class LinExpr:
             parts.append(str(self.const))
         s = " + ".join(parts).replace("+ -", "- ")
         return s
+
+
+# hash-consing table for LinExpr.interned(); cleared when full so long-lived
+# processes building many programs don't accumulate expressions forever
+_INTERN: Dict[Tuple, "LinExpr"] = {}
+_INTERN_MAX = 200_000
 
 
 # --------------------------------------------------------------------------
@@ -180,6 +209,9 @@ class Constraint:
     def holds(self, env: Dict[str, int]) -> bool:
         v = self.expr.eval(env)
         return v == 0 if self.is_eq else v >= 0
+
+    def key(self) -> Tuple:
+        return (self.expr.key(), self.is_eq)
 
     def __repr__(self) -> str:
         return f"{self.expr} {'==' if self.is_eq else '>='} 0"
@@ -230,6 +262,22 @@ class BasicSet:
         self.dims: List[str] = list(dims)
         self.params: List[str] = list(params)
         self.constraints: List[Constraint] = [c.normalized() for c in constraints]
+        self._key: Optional[Tuple] = None
+
+    def key(self) -> Tuple:
+        """Structural signature: dim order + params + constraint *multiset*.
+
+        All set transforms build fresh BasicSets (no in-place mutation), so
+        the key is computed once per instance.  The constraint list is
+        sorted: two sets describing the same polyhedron in the same dim
+        order get the same key even if constraint order differs, and every
+        bound/dependence query derives max/min over constraints and is thus
+        order-independent.
+        """
+        if self._key is None:
+            self._key = (tuple(self.dims), tuple(self.params),
+                         tuple(sorted(c.key() for c in self.constraints)))
+        return self._key
 
     # -- construction helpers -------------------------------------------------
     @staticmethod
@@ -449,6 +497,40 @@ def floor_div(a: int, b: int) -> int:
 
 
 # --------------------------------------------------------------------------
+# Name-canonical structural keys (cross-statement memoization)
+# --------------------------------------------------------------------------
+class NameCanon:
+    """Maps names to dense ids in first-seen order, producing structural keys
+    that are invariant under dim/param renaming.  Two statements that differ
+    only in iterator names (3MM's s1/s2/s3, repeated conv layers) therefore
+    share one cache entry for every polyhedral query, since all query
+    results (distances, directions, legality, trip counts) are positional.
+    """
+
+    __slots__ = ("ids",)
+
+    def __init__(self):
+        self.ids: Dict[str, int] = {}
+
+    def id(self, name: str) -> int:
+        i = self.ids.get(name)
+        if i is None:
+            i = len(self.ids)
+            self.ids[name] = i
+        return i
+
+    def expr(self, e: LinExpr) -> Tuple:
+        return (tuple(sorted((self.id(k), v) for k, v in e.coeffs.items())),
+                e.const)
+
+    def set_key(self, s: "BasicSet") -> Tuple:
+        dims = tuple(self.id(d) for d in s.dims)
+        params = tuple(self.id(p) for p in s.params)
+        cons = tuple(sorted((self.expr(c.expr), c.is_eq) for c in s.constraints))
+        return (dims, params, cons)
+
+
+# --------------------------------------------------------------------------
 # Dependence analysis on polyhedra
 # --------------------------------------------------------------------------
 @dataclass
@@ -474,6 +556,10 @@ class DependenceInfo:
         return self.exists and all(d is not None for d in self.distance)
 
 
+_DEPVEC_CACHE: Dict[Tuple, DependenceInfo] = {}
+_DEPVEC_CACHE_MAX = 200_000
+
+
 def dependence_vector(domain_src: BasicSet, acc_src: Sequence[LinExpr],
                       domain_sink: BasicSet, acc_sink: Sequence[LinExpr],
                       shared_levels: Optional[int] = None) -> DependenceInfo:
@@ -487,8 +573,34 @@ def dependence_vector(domain_src: BasicSet, acc_src: Sequence[LinExpr],
 
     Builds {(s, t) : acc_src(s) == acc_sink(t), s in D_src, t in D_sink,
     s lexicographically < t (per level)} and projects onto d = t - s.
+
+    Memoized under a *name-canonical* key: the result is positional
+    (distance/direction/level tuples), so any two queries that are equal
+    after renaming dims/params share one entry.  The returned
+    DependenceInfo is a shared read-only instance.
     """
     n = shared_levels or min(len(domain_src.dims), len(domain_sink.dims))
+    from . import caching
+    key = None
+    if caching.ENABLED:
+        c = NameCanon()
+        key = (c.set_key(domain_src), tuple(c.expr(e) for e in acc_src),
+               c.set_key(domain_sink), tuple(c.expr(e) for e in acc_sink), n)
+        hit = _DEPVEC_CACHE.get(key)
+        if hit is not None:
+            return hit
+    info = _dependence_vector_compute(domain_src, acc_src, domain_sink,
+                                      acc_sink, n)
+    if key is not None:
+        if len(_DEPVEC_CACHE) >= _DEPVEC_CACHE_MAX:
+            _DEPVEC_CACHE.clear()
+        _DEPVEC_CACHE[key] = info
+    return info
+
+
+def _dependence_vector_compute(domain_src: BasicSet, acc_src: Sequence[LinExpr],
+                               domain_sink: BasicSet, acc_sink: Sequence[LinExpr],
+                               n: int) -> DependenceInfo:
     sdims = [f"__s{i}" for i in range(len(domain_src.dims))]
     tdims = [f"__t{i}" for i in range(len(domain_sink.dims))]
     smap = dict(zip(domain_src.dims, sdims))

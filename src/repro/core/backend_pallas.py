@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import functools
 import math
+import os
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -131,12 +132,52 @@ def _match_contraction(stmt: Statement) -> Optional[Tuple[Load, Load, Load]]:
     return None
 
 
-def lower_stmt_pallas(stmt: Statement, interpret: bool = True) -> Callable:
+def _interpret_default() -> bool:
+    """Default for ``interpret``: the POM_PALLAS_INTERPRET env toggle
+    (truthy unless set to 0/false — interpret mode is the safe default on
+    hosts without a TPU; flip it off to compile with Mosaic)."""
+    return os.environ.get("POM_PALLAS_INTERPRET", "1").lower() not in (
+        "0", "false", "no")
+
+
+# (stmt uid, schedule signature, array shapes/dtypes, interpret) -> runner
+_LOWER_CACHE: Dict[Tuple, Callable] = {}
+_LOWER_CACHE_MAX = 1024
+
+
+def lower_stmt_pallas(stmt: Statement, interpret: Optional[bool] = None) -> Callable:
     """Compile one scheduled statement into a jit'd pallas_call wrapper.
 
     Returns ``f(arrays: dict[str, jnp.ndarray]) -> jnp.ndarray`` producing the
     updated destination array.
+
+    Lowerings are memoized on (statement schedule signature, array
+    shapes/dtypes, interpret flag), and the returned runner builds its
+    ``pl.pallas_call`` once per observed output shape/dtype — repeated
+    ``run()`` calls reuse the compiled callable instead of rebuilding it.
+    ``interpret=None`` defers to the ``POM_PALLAS_INTERPRET`` env toggle.
     """
+    if interpret is None:
+        interpret = _interpret_default()
+    from . import caching
+    key = None
+    if caching.ENABLED:
+        arrays_sig = tuple((a.name, a.shape, a.dtype.name) for a in
+                           [stmt.store.array] + [ld.array
+                                                 for ld in loads_of(stmt.body)])
+        key = (stmt.schedule_signature(), arrays_sig, interpret)
+        hit = _LOWER_CACHE.get(key)
+        if hit is not None:
+            return hit
+    run = _lower_stmt_pallas_compute(stmt, interpret)
+    if key is not None:
+        if len(_LOWER_CACHE) >= _LOWER_CACHE_MAX:
+            _LOWER_CACHE.clear()
+        _LOWER_CACHE[key] = run
+    return run
+
+
+def _lower_stmt_pallas_compute(stmt: Statement, interpret: bool) -> Callable:
     grid_dims, block_dims = _classify_dims(stmt)
     trips = _dim_extents(stmt)
     lbs = _lower_bounds(stmt)
@@ -229,23 +270,35 @@ def lower_stmt_pallas(stmt: Statement, interpret: bool = True) -> Callable:
 
     x_spec, y_spec = specs[x_arr.name], specs[y_arr.name]
 
+    # one pallas_call per observed output shape/dtype; repeated run() calls
+    # (the common case in autotuning sweeps) reuse the built callable
+    call_cache: Dict[Tuple, Callable] = {}
+
+    def _call_for(shape: Tuple[int, ...], dtype) -> Callable:
+        ck = (shape, jnp.dtype(dtype).name)
+        fn = call_cache.get(ck)
+        if fn is None:
+            fn = pl.pallas_call(
+                kernel,
+                grid=grid,
+                in_specs=[
+                    pl.BlockSpec(x_spec.block, idx_fn(x_spec.index_map_exprs)),
+                    pl.BlockSpec(y_spec.block, idx_fn(y_spec.index_map_exprs)),
+                    pl.BlockSpec(out_spec.block, idx_fn(out_spec.index_map_exprs)),
+                ],
+                out_specs=pl.BlockSpec(out_spec.block,
+                                       idx_fn(out_spec.index_map_exprs)),
+                out_shape=jax.ShapeDtypeStruct(shape, dtype),
+                interpret=interpret,
+            )
+            call_cache[ck] = fn
+        return fn
+
     def run(arrays: Dict[str, jnp.ndarray]) -> jnp.ndarray:
         x = jnp.asarray(arrays[x_arr.name])
         y = jnp.asarray(arrays[y_arr.name])
         o = jnp.asarray(arrays[store_arr.name])
-        fn = pl.pallas_call(
-            kernel,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec(x_spec.block, idx_fn(x_spec.index_map_exprs)),
-                pl.BlockSpec(y_spec.block, idx_fn(y_spec.index_map_exprs)),
-                pl.BlockSpec(out_spec.block, idx_fn(out_spec.index_map_exprs)),
-            ],
-            out_specs=pl.BlockSpec(out_spec.block, idx_fn(out_spec.index_map_exprs)),
-            out_shape=jax.ShapeDtypeStruct(o.shape, o.dtype),
-            interpret=interpret,
-        )
-        return fn(x, y, o)
+        return _call_for(o.shape, o.dtype)(x, y, o)
 
     return run
 

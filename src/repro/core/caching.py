@@ -1,0 +1,88 @@
+"""Global switch + counters for POM's incremental-evaluation layer.
+
+Every memoization cache in the analysis/search stack (composed accesses and
+trip counts in ``ir.py``, ``self_dependences``/``_legal`` in
+``transforms.py``, ``DepGraph.paths`` in ``depgraph.py``, per-node and
+whole-design cost reports in ``cost_model.py``, partition contributions in
+``dse.py``, kernel lowering in ``backend_pallas.py``) consults
+``caching.ENABLED``.  Disabling it restores the pre-incremental engine
+exactly: all results are recomputed from scratch on every query.
+
+Cache keys are *structural signatures* recomputed from the current schedule
+state on every lookup — never version counters — so a cache can return a
+stale value only if two different schedule states produce the same
+signature, which the signature definitions rule out by construction.  This
+is what makes cached and uncached runs bit-for-bit identical (asserted by
+``tests/test_incremental_dse.py``).
+
+``COUNTS`` tracks evaluation/hit counters for the polyhedral layer; the
+cost-model layer keeps its own per-model ``CostStats`` (a shared model can
+be handed to ``auto_dse`` to read them back).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Dict
+
+ENABLED: bool = True
+
+COUNTS: Dict[str, int] = {
+    "selfdep_evals": 0, "selfdep_hits": 0,
+    "legal_evals": 0, "legal_hits": 0,
+    "trip_evals": 0, "trip_hits": 0,
+    "access_evals": 0, "access_hits": 0,
+}
+
+
+def set_enabled(value: bool) -> None:
+    global ENABLED
+    ENABLED = bool(value)
+
+
+def reset_counts() -> None:
+    for k in COUNTS:
+        COUNTS[k] = 0
+
+
+def clear_all() -> None:
+    """Empty every process-global memo table (benchmark hygiene: measure a
+    workload from a cold cache).  Per-statement / per-model caches die with
+    their owning objects and need no clearing here."""
+    import sys
+
+    from .affine import _DEPVEC_CACHE, _INTERN
+    from .ir import _TRIP_CANON_CACHE
+    from .transforms import _LEGAL_CACHE
+    from .cost_model import _REC_II_CACHE
+    _DEPVEC_CACHE.clear()
+    _INTERN.clear()
+    _TRIP_CANON_CACHE.clear()
+    _LEGAL_CACHE.clear()
+    _REC_II_CACHE.clear()
+    # don't *import* the pallas backend (pulls in jax) just to clear it
+    pallas = sys.modules.get("repro.core.backend_pallas")
+    if pallas is not None:
+        pallas._LOWER_CACHE.clear()
+
+
+@contextmanager
+def disabled():
+    """Run a block with every incremental cache bypassed (baseline engine)."""
+    global ENABLED
+    prev = ENABLED
+    ENABLED = False
+    try:
+        yield
+    finally:
+        ENABLED = prev
+
+
+@contextmanager
+def enabled():
+    global ENABLED
+    prev = ENABLED
+    ENABLED = True
+    try:
+        yield
+    finally:
+        ENABLED = prev

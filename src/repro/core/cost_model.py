@@ -12,6 +12,31 @@ Two targets:
 * ``TpuModel`` — TPU v5e: three-term roofline (MXU/VPU compute, HBM memory,
   ICI collectives) + VMEM capacity constraint.  Used when the DSE targets
   Pallas kernel schedules and mesh shardings.
+
+Incremental evaluation (the DSE hot loop)
+-----------------------------------------
+``HlsModel`` memoizes at two granularities, both behind
+``repro.core.caching.ENABLED`` and the per-model ``cache`` flag:
+
+* **per-node**: ``node_report(stmt, group)`` is a pure function of
+  (statement schedule signature, the schedule signatures of its fusion
+  group, the partition state of every array the group touches).  The cache
+  key is exactly that tuple, so when stage 2 mutates one node only that
+  node — plus statements sharing a mutated array's partitions — miss the
+  cache; everything else returns its previous ``NodeReport`` unchanged.
+  This *is* the dirty-set: dirtiness is detected structurally by key
+  mismatch rather than tracked imperatively, which makes staleness
+  impossible by construction.
+* **whole-design**: ``design_report(fn)`` keys on all statement signatures
+  plus all partition states; stage-2 backtracking revisits earlier design
+  points constantly (every rejected ladder rung restores the previous
+  schedule), turning those re-evaluations into dictionary hits.
+
+Invariant (tested): with caching on or off, ``design_report`` returns
+bit-identical latencies/resources and ``auto_dse`` produces identical
+action logs.  ``HlsModel.stats`` counts evaluations vs hits; the
+``bench_dse_speed`` suite and the perf smoke test are built on those
+counters because they are stable across machines, unlike wall time.
 """
 from __future__ import annotations
 
@@ -107,16 +132,95 @@ class DesignReport:
         return max(n.parallelism for n in self.nodes.values())
 
 
-class HlsModel:
-    """Latency + resource estimator over the scheduled Function."""
+@dataclass
+class CostStats:
+    """Evaluation counters (cache-hit bookkeeping for benchmarks/tests).
 
-    def __init__(self, resources: Dict = XC7Z020):
+    ``node_evals`` counts per-node report computations (including cheap
+    re-aggregations where only a shared array's partitions changed);
+    ``full_node_evals`` counts the expensive ones — recurrence-II polyhedral
+    analyses actually computed rather than served from cache, plus
+    unpipelined (fully sequential) node computations, which have no cached
+    decomposition.  In the uncached engine every node computation is full.
+    """
+    node_evals: int = 0          # per-node report computations
+    node_cache_hits: int = 0
+    full_node_evals: int = 0     # fresh recurrence analyses + sequential nodes
+    design_evals: int = 0        # design_report calls
+    design_cache_hits: int = 0   # ... served entirely from cache
+
+
+# name-canonical (schedule, pipeline pos, unrolls, body latency) -> II;
+# shared across models: two structurally identical candidate schedules have
+# the same recurrence II regardless of which statement/layer produced them
+_REC_II_CACHE: Dict[Tuple, int] = {}
+
+
+class HlsModel:
+    """Latency + resource estimator over the scheduled Function.
+
+    ``cache=False`` forces the pre-incremental behavior (every report fully
+    recomputed); the default follows ``repro.core.caching.ENABLED``.
+    Reports returned from the cache are shared instances — treat them as
+    read-only.
+    """
+
+    def __init__(self, resources: Dict = XC7Z020, cache: Optional[bool] = None):
         self.resources = dict(resources)
+        self._cache_flag = cache
+        self._node_cache: Dict[Tuple, NodeReport] = {}
+        self._design_cache: Dict[Tuple, DesignReport] = {}
+        self._expr_cache: Dict[int, ExprStats] = {}   # uid -> body stats
+        self.stats = CostStats()
+
+    def _caching(self) -> bool:
+        from . import caching
+        return caching.ENABLED if self._cache_flag is None else self._cache_flag
+
+    @staticmethod
+    def _partition_sig(stmts: Sequence[Statement]) -> Tuple:
+        """Signature of the partition state of every array the statements
+        touch (the only placeholder state the cost model reads)."""
+        arrays: Dict[str, Placeholder] = {}
+        for s in stmts:
+            arr, _ = s.store_access()
+            arrays.setdefault(arr.name, _find_ph([s], arr.name) or arr)
+            for a, _ in s.load_accesses():
+                arrays.setdefault(a.name, _find_ph([s], a.name) or a)
+        return tuple(sorted((n, tuple(sorted(ph.partitions.items())))
+                            for n, ph in arrays.items()))
 
     # -- per statement ---------------------------------------------------------
     def node_report(self, stmt: Statement, group: Sequence[Statement] = ()) -> NodeReport:
         group = list(group) or [stmt]
-        st = expr_stats(stmt.body)
+        if not self._caching():
+            self.stats.node_evals += 1
+            return self._node_report_compute(stmt, group)
+        key = (stmt.uid, stmt.schedule_signature(),
+               tuple(s.schedule_signature() for s in group),
+               self._partition_sig(group))
+        hit = self._node_cache.get(key)
+        if hit is not None:
+            self.stats.node_cache_hits += 1
+            return hit
+        self.stats.node_evals += 1
+        r = self._node_report_compute(stmt, group)
+        self._node_cache[key] = r
+        return r
+
+    def _expr_stats(self, stmt: Statement) -> ExprStats:
+        """expr_stats of the (immutable) body, cached per statement."""
+        if not self._caching():
+            return expr_stats(stmt.body)
+        st = self._expr_cache.get(stmt.uid)
+        if st is None:
+            st = expr_stats(stmt.body)
+            self._expr_cache[stmt.uid] = st
+        return st
+
+    def _node_report_compute(self, stmt: Statement,
+                             group: Sequence[Statement]) -> NodeReport:
+        st = self._expr_stats(stmt)
         trips = stmt.trip_counts()
         dims = stmt.dims
         n = len(dims)
@@ -135,6 +239,7 @@ class HlsModel:
 
         if p is None:
             # fully sequential: every iteration costs its critical path
+            self.stats.full_node_evals += 1
             seq_trip = 1
             for d in dims:
                 t = trips.get(d, 1)
@@ -171,6 +276,43 @@ class HlsModel:
     # -- II ---------------------------------------------------------------------
     def _achieved_ii(self, stmt: Statement, group: Sequence[Statement], p: int,
                      unrolls: Dict[str, int], st: ExprStats) -> int:
+        ii_rec = self._recurrence_ii(stmt, p, unrolls, st)
+        ii_mem = self._memory_ii(stmt, group)
+        return max(ii_rec, ii_mem)
+
+    def _recurrence_ii(self, stmt: Statement, p: int,
+                       unrolls: Dict[str, int], st: ExprStats) -> int:
+        """Recurrence-constrained II — the polyhedral half of the II model.
+
+        Memoized under a name-canonical key (domain + composed accesses +
+        pipeline position + per-dim unroll factors + body latency): this is
+        the *full* cost evaluation of a node; everything else in
+        ``node_report`` is cheap arithmetic.  ``stats.full_node_evals``
+        counts the misses."""
+        if self._caching():
+            from .affine import NameCanon
+            c = NameCanon()
+            w_arr, w_idx = stmt.store_access()
+            key = (c.set_key(stmt.domain),
+                   tuple(c.expr(e) for e in w_idx),
+                   tuple((arr.name == w_arr.name, tuple(c.expr(e) for e in idx))
+                         for arr, idx in stmt.load_accesses()),
+                   p, tuple(unrolls.get(d, 1) for d in stmt.dims),
+                   stmt.pipeline_ii, st.latency)
+            hit = _REC_II_CACHE.get(key)
+            if hit is not None:
+                return hit
+            self.stats.full_node_evals += 1
+            ii = self._recurrence_ii_compute(stmt, p, unrolls, st)
+            if len(_REC_II_CACHE) >= 100_000:
+                _REC_II_CACHE.clear()
+            _REC_II_CACHE[key] = ii
+            return ii
+        self.stats.full_node_evals += 1
+        return self._recurrence_ii_compute(stmt, p, unrolls, st)
+
+    def _recurrence_ii_compute(self, stmt: Statement, p: int,
+                               unrolls: Dict[str, int], st: ExprStats) -> int:
         dims = stmt.dims
         band = dims[p:]
         trips = stmt.trip_counts()
@@ -220,11 +362,15 @@ class HlsModel:
                         ii_rec = max(ii_rec, chain)
                     continue
                 ii_rec = max(ii_rec, math.ceil(chain / flat))
+        return ii_rec
 
+    def _memory_ii(self, stmt: Statement, group: Sequence[Statement]) -> int:
         # memory-port II (dual-port BRAM banks per partitioned array),
         # shared across fused statements in the same pipelined body.
         # A ref only multiplies by the unroll factors of dims that appear in
         # its index (replicas hitting the same address broadcast).
+        # Pure dict arithmetic over memoized composed accesses — recomputed
+        # on every (cheap) node re-aggregation when partitions change.
         ii_mem = 1
         arrays: Dict[str, int] = {}
         for s in group:
@@ -245,10 +391,27 @@ class HlsModel:
                 for (f, _kind) in ph.partitions.values():
                     banks *= f
             ii_mem = max(ii_mem, math.ceil(accesses / (2 * banks)))
-        return max(ii_rec, ii_mem)
+        return ii_mem
 
     # -- whole design -------------------------------------------------------------
     def design_report(self, fn: Function) -> DesignReport:
+        self.stats.design_evals += 1
+        use_cache = self._caching()
+        key = None
+        if use_cache:
+            key = (tuple(s.schedule_signature() for s in fn.statements),
+                   tuple(sorted((ph.name, tuple(sorted(ph.partitions.items())))
+                                for ph in fn.placeholders.values())))
+            hit = self._design_cache.get(key)
+            if hit is not None:
+                self.stats.design_cache_hits += 1
+                return hit
+        rep = self._design_report_compute(fn)
+        if use_cache:
+            self._design_cache[key] = rep
+        return rep
+
+    def _design_report_compute(self, fn: Function) -> DesignReport:
         groups = _fusion_groups(fn)
         nodes: Dict[str, NodeReport] = {}
         dsp = lut = 0

@@ -53,6 +53,10 @@ class DepGraph:
     nodes: Dict[int, NodeInfo] = field(default_factory=dict)
     # coarse edges: (src uid, dst uid, array name)
     edges: List[Tuple[int, int, str]] = field(default_factory=list)
+    # memoized maximal paths: the coarse topology depends only on which
+    # arrays each statement reads/writes, which no schedule transform ever
+    # changes — so the DFS result is computed at most once per graph
+    _paths_cache: Optional[List[List[int]]] = field(default=None, repr=False)
 
     def node(self, s: Statement) -> NodeInfo:
         return self.nodes[s.uid]
@@ -62,6 +66,9 @@ class DepGraph:
 
     def paths(self) -> List[List[int]]:
         """All maximal data paths via DFS (paper Fig. 8(1) step 4)."""
+        from . import caching
+        if caching.ENABLED and self._paths_cache is not None:
+            return self._paths_cache
         indeg = {u: 0 for u in self.nodes}
         for (_, d, _) in self.edges:
             indeg[d] = indeg.get(d, 0) + 1
@@ -82,6 +89,7 @@ class DepGraph:
 
         for r in roots:
             dfs(r, [r], {r})
+        self._paths_cache = out
         return out
 
 

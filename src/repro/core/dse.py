@@ -11,6 +11,31 @@ order data paths by latency, pick the bottleneck node of the critical path,
 and raise its parallelism degree (tile + pipeline + unroll + array
 partition) step by step until resources run out, it stops being the
 bottleneck, or max parallelism is reached (the exit mechanism of SS VI-B).
+
+Incremental evaluation
+----------------------
+The search loop is memoization-friendly by design and relies on the
+signature-keyed caches in ``ir.py`` / ``transforms.py`` /
+``cost_model.py`` (toggle: ``repro.core.caching``):
+
+* every candidate schedule is identified by its statements' structural
+  ``schedule_signature()``s — signatures are recomputed from live state on
+  each lookup, so snapshot/restore backtracking can never observe a stale
+  cached value;
+* a stage-2 candidate mutates ONE node, so ``design_report`` re-costs only
+  that node plus statements sharing a repartitioned array (dirty set =
+  cache-key mismatch), then re-aggregates the cheap design totals;
+* rejected rungs restore the previous schedule, which is a whole-design
+  cache hit; ``DepGraph.paths()`` is computed once because schedule
+  transforms never change the coarse producer/consumer topology;
+* ``refresh_partitions`` combines per-statement partition *contributions*
+  memoized on (iter_subst, unrolls), so a single-statement mutation only
+  recomputes that statement's contribution before the cheap max-merge.
+
+Invariants (asserted by ``tests/test_incremental_dse.py``): cached and
+uncached runs produce identical ``DesignReport`` numbers and identical
+action logs on every workload; measured counts live in
+``HlsModel.stats`` / ``DseResult.cost_stats``.
 """
 from __future__ import annotations
 
@@ -20,7 +45,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .cost_model import DesignReport, HlsModel, XC7Z020
+from .cost_model import CostStats, DesignReport, HlsModel, XC7Z020
 from .depgraph import DepGraph, NodeInfo, build_depgraph
 from .ir import Function, Statement
 from . import transforms as T
@@ -195,6 +220,7 @@ class DseResult:
     actions: List[str]
     dse_seconds: float
     tile_sizes: Dict[str, List[int]]     # per statement: unroll factor per dim
+    cost_stats: Optional["CostStats"] = None   # model eval/hit counters
 
 
 def _unroll_candidates(P: int) -> List[Tuple[int, ...]]:
@@ -225,14 +251,16 @@ def _apply_parallel(stmt: Statement, factors: Tuple[int, ...]) -> bool:
     for d, f in zip(targets, factors):
         if f > trips.get(d, 1):
             return False
-    # split each target dim and unroll the intra-tile loop
+    # split each target dim and unroll the intra-tile loop; strip-mining
+    # never reorders iterations (bijective, lex-order-preserving), so the
+    # ladder skips the redundant legality check the user-facing DSL keeps
     new_inner: List[str] = []
     for d, f in zip(targets, factors):
         if f <= 1:
             continue
         d0, d1 = d + "_o", d + "_u"
         try:
-            T.split(stmt, d, f, d0, d1)
+            T.split(stmt, d, f, d0, d1, check=False)
         except T.IllegalTransform:
             return False
         new_inner.append(d1)
@@ -256,29 +284,49 @@ def _apply_parallel(stmt: Statement, factors: Tuple[int, ...]) -> bool:
     return True
 
 
+def _partition_contribution(stmt: Statement) -> List[Tuple]:
+    """This statement's cyclic-partition demands as ordered
+    ``(array, dim_no, capped_factor)`` triples — a pure function of
+    (iter_subst, unrolls), memoized on that signature so a candidate
+    evaluation only recomputes the mutated statement's contribution."""
+    from . import caching
+    key = None
+    if caching.ENABLED:
+        key = (stmt.subst_signature(), tuple(sorted(stmt.unrolls.items())))
+        hit = stmt._part_cache.get(key)
+        if hit is not None:
+            return hit
+    contrib: List[Tuple] = []
+    refs = [(stmt.store.array, stmt.store_access()[1])] + \
+        [(arr, idx) for arr, idx in stmt.load_accesses()]
+    for arr, idx in refs:
+        for dim_no, e in enumerate(idx):
+            f = 1
+            for d1, uf in stmt.unrolls.items():
+                if e.coeff(d1) != 0:
+                    f *= max(uf, 1)
+            if f > 1:
+                contrib.append((arr, dim_no, min(f, 64)))
+    if key is not None:
+        stmt._part_cache[key] = contrib
+    return contrib
+
+
 def refresh_partitions(fn: Function) -> None:
     """Derive array partitioning from every statement's current unrolls
     (paper Fig. 6: cyclic partition factors match the unroll factors touching
     each array dimension).  Partitions are pure derived state during DSE —
-    never mutated incrementally — so backtracking stays consistent across
-    statements sharing arrays."""
+    recombined from per-statement memoized contributions on every call —
+    so backtracking stays consistent across statements sharing arrays."""
     for ph in fn.placeholders.values():
         ph.partitions = {}
     for stmt in fn.statements:
         if not stmt.unrolls:
             continue
-        refs = [(stmt.store.array, stmt.store_access()[1])] + \
-            [(arr, idx) for arr, idx in stmt.load_accesses()]
-        for arr, idx in refs:
+        for arr, dim_no, f in _partition_contribution(stmt):
             ph = fn.placeholders.get(arr.name, arr)
-            for dim_no, e in enumerate(idx):
-                f = 1
-                for d1, uf in stmt.unrolls.items():
-                    if e.coeff(d1) != 0:
-                        f *= max(uf, 1)
-                if f > 1:
-                    prev = ph.partitions.get(dim_no, (1, "cyclic"))[0]
-                    ph.partitions[dim_no] = (max(prev, min(f, 64)), "cyclic")
+            prev = ph.partitions.get(dim_no, (1, "cyclic"))[0]
+            ph.partitions[dim_no] = (max(prev, f), "cyclic")
     # cap total banks per array at 64 (BRAM reality: beyond that the banking
     # costs more BRAM18s than the data): shrink the largest factor; the II
     # model then charges the resulting port conflicts.
@@ -394,10 +442,14 @@ def stage2(fn: Function, model: Optional[HlsModel] = None,
 # entry point: f.auto_DSE()
 # --------------------------------------------------------------------------
 def auto_dse(fn: Function, target: str = "fpga", max_parallel: int = 256,
-             resources: Dict = XC7Z020) -> DseResult:
+             resources: Dict = XC7Z020,
+             model: Optional[HlsModel] = None) -> DseResult:
+    """Run both DSE stages.  Pass an ``HlsModel`` to control caching
+    (``HlsModel(cache=False)`` reproduces the pre-incremental engine) or to
+    read back ``model.stats`` evaluation counters afterwards."""
     t0 = time.perf_counter()
     log = stage1(fn)
-    model = HlsModel(resources)
+    model = model or HlsModel(resources)
     actions: List[str] = []
     report = stage2(fn, model, max_parallel, actions)
     dt = time.perf_counter() - t0
@@ -405,4 +457,4 @@ def auto_dse(fn: Function, target: str = "fpga", max_parallel: int = 256,
     for s in fn.statements:
         # report unroll factor per current loop dim (1 when untouched)
         tiles[s.name] = [s.unrolls.get(d, 1) for d in s.dims]
-    return DseResult(report, log, actions, dt, tiles)
+    return DseResult(report, log, actions, dt, tiles, model.stats)

@@ -197,6 +197,15 @@ class Statement:
     ``iter_subst`` maps each *original* iterator name to a LinExpr over the
     current dims, so load/store index functions stay written against the
     original iterators and are composed lazily.
+
+    Incremental evaluation: the mutable schedule state is exactly
+    ``(domain, iter_subst, unrolls, pipeline_at, pipeline_ii, after_spec)``
+    — the body/store never change after construction — so
+    ``schedule_signature()`` (and the dependence-relevant projection
+    ``dep_signature()``) fully determine every derived analysis.  The
+    per-statement caches below are keyed on those signatures, recomputed
+    from current state on each lookup, so restoring a snapshot or mutating
+    a schedule can never serve a stale entry.
     """
 
     def __init__(self, name: str, domain: BasicSet, body: Expr, store: Load,
@@ -215,6 +224,29 @@ class Statement:
         # program order: (predecessor statement, shared-level) from `after`
         self.after_spec: Optional[Tuple["Statement", int]] = None
         self.function: Optional["Function"] = None
+        # signature-keyed memo tables (see class docstring)
+        self._trip_cache: Dict[Tuple, Dict[str, int]] = {}
+        self._acc_cache: Dict[Tuple, Tuple] = {}
+        self._selfdep_cache: Dict[Tuple, list] = {}
+        self._legal_cache: Dict[Tuple, bool] = {}
+        self._part_cache: Dict[Tuple, list] = {}
+
+    # -- schedule signatures ----------------------------------------------------
+    def subst_signature(self) -> Tuple:
+        """Signature of the change-of-basis map (with the domain, determines
+        dependences, legality, and composed access functions)."""
+        return tuple(sorted((k, v.key()) for k, v in self.iter_subst.items()))
+
+    def dep_signature(self) -> Tuple:
+        return (self.uid, self.domain.key(), self.subst_signature())
+
+    def schedule_signature(self) -> Tuple:
+        """Cheap structural signature of the full schedule state."""
+        after = (None if self.after_spec is None
+                 else (self.after_spec[0].uid, self.after_spec[1]))
+        return (self.uid, self.domain.key(), self.subst_signature(),
+                tuple(sorted(self.unrolls.items())),
+                self.pipeline_at, self.pipeline_ii, after)
 
     # -- composed access functions -------------------------------------------
     def subst_lin(self, e: LinExpr) -> LinExpr:
@@ -224,12 +256,34 @@ class Statement:
             out = out + repl * v
         return out
 
+    def _composed_accesses(self) -> Tuple:
+        """(store_access, load_accesses) composed through iter_subst, memoized
+        on the substitution signature; LinExprs are interned."""
+        from . import caching
+        if not caching.ENABLED:
+            caching.COUNTS["access_evals"] += 1
+            return ((self.store.array,
+                     tuple(self.subst_lin(i) for i in self.store.idx)),
+                    [(ld.array, tuple(self.subst_lin(i) for i in ld.idx))
+                     for ld in loads_of(self.body)])
+        key = self.subst_signature()
+        hit = self._acc_cache.get(key)
+        if hit is not None:
+            caching.COUNTS["access_hits"] += 1
+            return hit
+        caching.COUNTS["access_evals"] += 1
+        store = (self.store.array,
+                 tuple(self.subst_lin(i).interned() for i in self.store.idx))
+        loads = [(ld.array, tuple(self.subst_lin(i).interned() for i in ld.idx))
+                 for ld in loads_of(self.body)]
+        self._acc_cache[key] = (store, loads)
+        return store, loads
+
     def store_access(self) -> Tuple[Placeholder, Tuple[LinExpr, ...]]:
-        return self.store.array, tuple(self.subst_lin(i) for i in self.store.idx)
+        return self._composed_accesses()[0]
 
     def load_accesses(self) -> List[Tuple[Placeholder, Tuple[LinExpr, ...]]]:
-        return [(ld.array, tuple(self.subst_lin(i) for i in ld.idx))
-                for ld in loads_of(self.body)]
+        return list(self._composed_accesses()[1])
 
     # -- info -------------------------------------------------------------------
     @property
@@ -238,7 +292,38 @@ class Statement:
 
     def trip_counts(self) -> Dict[str, int]:
         """Constant trip count per loop dim (domain must be bounded-constant
-        once outer dims are fixed; uses point counts for exactness)."""
+        once outer dims are fixed; uses point counts for exactness).
+
+        Memoized on the domain signature — the FM projections this runs are
+        a DSE hot path (re-queried for every candidate schedule)."""
+        from . import caching
+        if not caching.ENABLED:
+            caching.COUNTS["trip_evals"] += 1
+            return self._trip_counts_compute()
+        key = self.domain.key()
+        hit = self._trip_cache.get(key)
+        if hit is not None:
+            caching.COUNTS["trip_hits"] += 1
+            return dict(hit)
+        # cross-statement reuse: trip counts are positional, so domains equal
+        # modulo renaming (3MM's nests, repeated conv layers) share one entry
+        from .affine import NameCanon
+        ckey = NameCanon().set_key(self.domain)
+        counts = _TRIP_CANON_CACHE.get(ckey)
+        if counts is None:
+            caching.COUNTS["trip_evals"] += 1
+            out = self._trip_counts_compute()
+            if len(_TRIP_CANON_CACHE) >= _TRIP_CANON_CACHE_MAX:
+                _TRIP_CANON_CACHE.clear()
+            _TRIP_CANON_CACHE[ckey] = tuple(out.get(d) for d in self.domain.dims)
+        else:
+            caching.COUNTS["trip_hits"] += 1
+            out = {d: t for d, t in zip(self.domain.dims, counts)
+                   if t is not None}
+        self._trip_cache[key] = out
+        return dict(out)
+
+    def _trip_counts_compute(self) -> Dict[str, int]:
         out = {}
         s = self.domain
         for i, d in enumerate(s.dims):
@@ -259,6 +344,11 @@ class Statement:
 
     def __repr__(self):
         return f"Statement({self.name}, dims={self.dims})"
+
+
+# name-canonical domain key -> per-dim trip counts (None = unbounded)
+_TRIP_CANON_CACHE: Dict[Tuple, Tuple] = {}
+_TRIP_CANON_CACHE_MAX = 100_000
 
 
 def _cbound(bs, is_lower):

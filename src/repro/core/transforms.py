@@ -23,7 +23,30 @@ class IllegalTransform(Exception):
 # --------------------------------------------------------------------------
 def self_dependences(stmt: Statement):
     """All data dependences of a statement onto itself (write->read,
-    write->write), in *current* dim space."""
+    write->write), in *current* dim space.
+
+    Memoized per statement on (domain, iter_subst) signature: the result is
+    a pure function of those plus the immutable body accesses, so stage-1
+    tightness checks, the II model, and depgraph construction stop
+    re-deriving identical dependence polyhedra.  The returned list is
+    shared — callers must treat it as read-only.
+    """
+    from . import caching
+    if not caching.ENABLED:
+        caching.COUNTS["selfdep_evals"] += 1
+        return _self_dependences_compute(stmt)
+    key = (stmt.domain.key(), stmt.subst_signature())
+    hit = stmt._selfdep_cache.get(key)
+    if hit is not None:
+        caching.COUNTS["selfdep_hits"] += 1
+        return hit
+    caching.COUNTS["selfdep_evals"] += 1
+    deps = _self_dependences_compute(stmt)
+    stmt._selfdep_cache[key] = deps
+    return deps
+
+
+def _self_dependences_compute(stmt: Statement):
     deps = []
     w_arr, w_idx = stmt.store_access()
     # write -> read (true dep incl. reduction self-reads)
@@ -53,7 +76,57 @@ def _legal(stmt: Statement) -> bool:
     For each access pair we check emptiness of
         {(s, t) : domains ∧ same-address ∧ s ≺_orig t ∧ t ⪯_cur s}
     level by level; any non-empty cell is a reversed dependence.
+
+    Memoized twice: per statement on the (domain, iter_subst) signature (the
+    stage-2 ladder replays the same split/permute sequences from per-node
+    base snapshots), and globally under a *name-canonical* key so that
+    statements identical modulo dim/array renaming (3MM's three matmuls,
+    repeated conv layers) share one legality verdict.
     """
+    from . import caching
+    if not caching.ENABLED:
+        caching.COUNTS["legal_evals"] += 1
+        return _legal_compute(stmt)
+    key = (stmt.domain.key(), stmt.subst_signature())
+    hit = stmt._legal_cache.get(key)
+    if hit is not None:
+        caching.COUNTS["legal_hits"] += 1
+        return hit
+    ckey = _legal_canon_key(stmt)
+    ok = _LEGAL_CACHE.get(ckey)
+    if ok is None:
+        caching.COUNTS["legal_evals"] += 1
+        ok = _legal_compute(stmt)
+        if len(_LEGAL_CACHE) >= 100_000:
+            _LEGAL_CACHE.clear()
+        _LEGAL_CACHE[ckey] = ok
+    else:
+        caching.COUNTS["legal_hits"] += 1
+    stmt._legal_cache[key] = ok
+    return ok
+
+
+_LEGAL_CACHE: dict = {}
+
+
+def _legal_canon_key(stmt: Statement) -> tuple:
+    """Name-canonical key over everything ``_legal_compute`` reads: the
+    domain, the original->current substitution (in original-iterator order),
+    and the composed store/load access functions (a load only matters
+    through whether it aliases the store array)."""
+    from .affine import NameCanon
+    c = NameCanon()
+    dkey = c.set_key(stmt.domain)
+    subst = tuple(c.expr(stmt.iter_subst[k]) for k in stmt.original_iters)
+    w_arr, w_idx = stmt.store_access()
+    store_key = tuple(c.expr(e) for e in w_idx)
+    loads_key = tuple((arr.name == w_arr.name,
+                       tuple(c.expr(e) for e in idx))
+                      for arr, idx in stmt.load_accesses())
+    return (dkey, subst, store_key, loads_key)
+
+
+def _legal_compute(stmt: Statement) -> bool:
     dims = stmt.dims
     n = len(dims)
     orig = stmt.original_iters

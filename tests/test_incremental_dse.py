@@ -1,0 +1,158 @@
+"""Cache coherence + invalidation tests for the incremental DSE engine.
+
+Coherence: for every workload in ``benchmarks/workloads.py``, a fully
+cached ``auto_dse`` run must be *bit-for-bit* identical to a fresh run with
+every cache disabled — same stage-1 log, same stage-2 action log, same
+per-node latencies/IIs/resources, same design totals, same tile sizes.
+
+Invalidation: every schedule mutation (split / interchange / skew /
+unroll / pipeline / `after`) must change the statement's schedule
+signature, and partition mutations must re-key the cost model's node
+reports, so no cache can serve a stale entry.
+"""
+import pytest
+
+from benchmarks import workloads
+from repro.core import caching
+from repro.core import transforms as T
+from repro.core.cost_model import HlsModel
+from repro.core.dse import auto_dse, refresh_partitions
+
+# every entry of workloads.POLYBENCH / STENCILS / IMAGE plus a conv nest,
+# at sizes small enough to keep the suite quick (DSE cost is dominated by
+# polyhedral ops, which are extent-independent)
+CASES = {
+    "gemm": lambda: workloads.gemm(24),
+    "bicg": lambda: workloads.bicg(24),
+    "gesummv": lambda: workloads.gesummv(24),
+    "2mm": lambda: workloads.mm2(16),
+    "3mm": lambda: workloads.mm3(16),
+    "jacobi1d": lambda: workloads.jacobi1d(48, 4),
+    "jacobi2d": lambda: workloads.jacobi2d(10, 3),
+    "heat1d": lambda: workloads.heat1d(48, 4),
+    "seidel": lambda: workloads.seidel(10, 3),
+    "edge_detect": lambda: workloads.edge_detect(14),
+    "gaussian": lambda: workloads.gaussian(14),
+    "blur": lambda: workloads.blur(14),
+    "conv": lambda: workloads.conv_nest("conv", 8, 4, 6, 6),
+}
+
+
+def _node_tuple(n):
+    return (n.name, n.latency, n.ii, n.depth, n.dsp, n.lut, n.parallelism,
+            n.trip_product, n.flops)
+
+
+def _report_tuple(rep):
+    return (rep.latency, rep.dsp, rep.lut, rep.ff, rep.bram_bits,
+            rep.feasible,
+            tuple(sorted(_node_tuple(n) for n in rep.nodes.values())))
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_cached_and_uncached_dse_identical(name):
+    build = CASES[name]
+    with caching.disabled():
+        res_u = auto_dse(build().fn, max_parallel=16,
+                         model=HlsModel(cache=False))
+    caching.clear_all()
+    res_c = auto_dse(build().fn, max_parallel=16, model=HlsModel())
+
+    assert res_u.stage1_log.actions == res_c.stage1_log.actions
+    assert res_u.actions == res_c.actions
+    assert res_u.tile_sizes == res_c.tile_sizes
+    assert _report_tuple(res_u.report) == _report_tuple(res_c.report)
+
+
+def test_schedule_signature_changes_on_every_transform():
+    f = workloads.gemm(16)
+    s = f.fn.stmt("s")
+    seen = {s.schedule_signature()}
+
+    T.split(s, "k", 4, "k0", "k1")
+    sig = s.schedule_signature()
+    assert sig not in seen
+    seen.add(sig)
+
+    T.interchange(s, "i", "j")
+    sig = s.schedule_signature()
+    assert sig not in seen
+    seen.add(sig)
+
+    s.unrolls["k1"] = 4
+    sig = s.schedule_signature()
+    assert sig not in seen
+    seen.add(sig)
+
+    s.pipeline_at, s.pipeline_ii = "k0", 2
+    sig = s.schedule_signature()
+    assert sig not in seen
+    seen.add(sig)
+
+
+def test_schedule_signature_changes_on_skew_and_after():
+    f = workloads.seidel(10, 3)
+    s = f.fn.stmt("s")
+    sig0 = s.schedule_signature()
+    T.skew(s, "i", "j", 1, "i_sk", "j_sk")
+    assert s.schedule_signature() != sig0
+
+    f2 = workloads.bicg(16)
+    sq, ss = f2.fn.stmt("sq"), f2.fn.stmt("ss")
+    sig_ss = ss.schedule_signature()
+    ss.after_spec = None
+    assert ss.schedule_signature() != sig_ss
+    T.set_after(ss, sq, 0)
+    assert ss.schedule_signature() not in (sig_ss, None)
+
+
+def test_partition_mutation_busts_node_cache():
+    f = workloads.gemm(16)
+    s = f.fn.stmt("s")
+    s.pipeline_at, s.pipeline_ii = s.dims[-1], 1
+    model = HlsModel()
+    r1 = model.node_report(s)
+    evals = model.stats.node_evals
+    # same state: served from cache
+    assert model.node_report(s) is r1
+    assert model.stats.node_evals == evals
+    # partition mutation re-keys the entry
+    f.fn.placeholders["A"].partitions = {0: (4, "cyclic")}
+    r2 = model.node_report(s)
+    assert model.stats.node_evals == evals + 1
+    # and the recomputed values agree with a fresh uncached model
+    with caching.disabled():
+        fresh = HlsModel(cache=False).node_report(s)
+    assert _node_tuple(r2) == _node_tuple(fresh)
+
+
+def test_schedule_mutation_busts_trip_and_dependence_caches():
+    f = workloads.gemm(16)
+    s = f.fn.stmt("s")
+    trips0 = s.trip_counts()
+    deps0 = T.self_dependences(s)
+    T.split(s, "k", 4, "k0", "k1")
+    trips1 = s.trip_counts()
+    assert trips1 != trips0 and trips1["k0"] == 4 and trips1["k1"] == 4
+    deps1 = T.self_dependences(s)
+    assert deps1 is not deps0
+    assert len(deps1[0].distance) == len(s.dims)
+    # uncached recomputation agrees
+    with caching.disabled():
+        assert s.trip_counts() == trips1
+
+
+def test_refresh_partitions_incremental_matches_scratch():
+    f = workloads.mm2(16)
+    s1 = f.fn.stmt("s1")
+    s1.unrolls = {"k": 4}
+    refresh_partitions(f.fn)
+    cached = {n: dict(ph.partitions) for n, ph in f.fn.placeholders.items()}
+    with caching.disabled():
+        refresh_partitions(f.fn)
+        scratch = {n: dict(ph.partitions) for n, ph in f.fn.placeholders.items()}
+    assert cached == scratch
+    # mutating one statement's unrolls changes the derived partitions
+    s1.unrolls = {"k": 8}
+    refresh_partitions(f.fn)
+    assert {n: dict(ph.partitions) for n, ph in f.fn.placeholders.items()} != cached

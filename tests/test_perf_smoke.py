@@ -1,0 +1,43 @@
+"""Perf smoke test: guards the incremental engine's evaluation counts.
+
+Count-based (not wall-time) so it is stable on shared CI hardware.  The
+budgets are the measured incremental baseline (~81 analysis evaluations /
+19 full-node evaluations for the 3MM ladder) with ~50% headroom; the
+pre-incremental engine needs 915 analysis evaluations, so a regression
+that silently disables or mis-keys a cache trips this immediately.
+
+Marked ``perf_smoke`` so it can be deselected with ``-m "not perf_smoke"``.
+"""
+import pytest
+
+from benchmarks.workloads import mm3
+from repro.core import caching
+from repro.core.cost_model import HlsModel
+from repro.core.dse import auto_dse
+
+pytestmark = pytest.mark.perf_smoke
+
+# measured incremental baseline: 81 analysis / 19 full-node evals
+ANALYSIS_EVAL_BUDGET = 125
+FULL_NODE_EVAL_BUDGET = 30
+
+
+def test_3mm_ladder_eval_counts_stay_incremental():
+    caching.clear_all()
+    caching.reset_counts()
+    model = HlsModel()
+    res = auto_dse(mm3(64).fn, model=model)
+    assert res.report.feasible
+
+    c = caching.COUNTS
+    analysis = (c["selfdep_evals"] + c["legal_evals"] + c["trip_evals"]
+                + model.stats.full_node_evals)
+    assert model.stats.full_node_evals <= FULL_NODE_EVAL_BUDGET, (
+        f"full-node cost evaluations regressed: "
+        f"{model.stats.full_node_evals} > {FULL_NODE_EVAL_BUDGET}")
+    assert analysis <= ANALYSIS_EVAL_BUDGET, (
+        f"analysis evaluations regressed: {analysis} > "
+        f"{ANALYSIS_EVAL_BUDGET} (pre-incremental engine: ~915)")
+    # caches must actually be getting hits, not just low traffic
+    assert model.stats.node_cache_hits + model.stats.design_cache_hits > 0
+    assert c["selfdep_hits"] > 0 and c["trip_hits"] > c["trip_evals"]
