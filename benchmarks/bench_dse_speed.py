@@ -1,5 +1,11 @@
 """DSE-speed suite: measures what the incremental engine buys, per workload.
 
+``auto_dse`` is the pipeline entry point for search (its two stages run
+as ``pipeline.PassManager`` passes with counter-neutral per-stage
+verifiers), so this suite measures the full pipeline-routed engine; the
+evaluation counts below are unchanged from the pre-pipeline engine by
+construction.
+
 For each workload the suite runs ``auto_dse`` twice on fresh builds:
 
   * **baseline** — every cache disabled (``repro.core.caching.disabled()``

@@ -1,16 +1,19 @@
 """Quickstart: the paper's Fig. 4-6 flow — GEMM in POM DSL, scheduled three
 ways, validated, and emitted as HLS C + run via the Pallas backend.
 
+Everything lowers through the three-level pass pipeline
+(``repro.core.compile``): DSL → Graph IR → polyhedral IR → annotated loop
+IR → backend, with a verifier at every stage boundary.  Set
+``POM_DUMP_IR=graph|poly|loops|backend|all`` to watch the IR between
+passes.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+from repro.core import compile
 from repro.core import dsl as pom
-from repro.core.astbuild import build_ast
-from repro.core.backend_jax import compile_jax
-from repro.core.backend_pallas import lower_stmt_pallas
 from repro.core.cost_model import HlsModel
-from repro.core.dse import auto_dse
 
 
 def build_gemm(n):
@@ -29,9 +32,9 @@ def main():
     a, b = rng.normal(size=(n, n)), rng.normal(size=(n, n))
     want = a @ b
 
-    # 1. unscheduled: execute via the JAX oracle backend
+    # 1. unscheduled: compile to the executable JAX oracle backend
     f, s = build_gemm(n)
-    run = compile_jax(f.fn, build_ast(f.fn))
+    run = compile(f, target="jax")
     out = run({"A": a, "B": b, "C": np.zeros((n, n))})
     assert np.allclose(out["C"], want)
     base = HlsModel().design_report(f.fn).latency
@@ -44,20 +47,18 @@ def main():
     s.unroll("i1", 4)
     s.unroll("j1", 4)
     f.fn.placeholders["A"].partition({0: 4, 1: 4}, "cyclic")
-    run = compile_jax(f.fn, build_ast(f.fn))
-    out = run({"A": a, "B": b, "C": np.zeros((n, n))})
+    out = compile(f, target="jax")({"A": a, "B": b, "C": np.zeros((n, n))})
     assert np.allclose(out["C"], want)
     lat = HlsModel().design_report(f.fn).latency
     print(f"[2] manual schedule OK   ({base / lat:.1f}x vs baseline)")
     print("    generated HLS C (head):")
-    for line in f.codegen("hls").splitlines()[:12]:
+    for line in compile(f, target="hls").splitlines()[:12]:
         print("      " + line)
 
-    # 3. automatic DSE (paper SS VI)
+    # 3. automatic DSE (paper SS VI) — the search runs as pipeline passes
     f, s = build_gemm(n)
     res = f.auto_DSE()
-    run = compile_jax(f.fn, build_ast(f.fn))
-    out = run({"A": a, "B": b, "C": np.zeros((n, n))})
+    out = compile(f, target="jax")({"A": a, "B": b, "C": np.zeros((n, n))})
     assert np.allclose(out["C"], want)
     print(f"[3] auto-DSE OK          ({base / res.report.latency:.1f}x, "
           f"II={max(nd.ii for nd in res.report.nodes.values())}, "
@@ -76,10 +77,10 @@ def main():
     s.unroll("j1", 8)
     s.unroll("k1", 8)
     s.pipeline("k0", 1)
-    pallas_run = lower_stmt_pallas(s.stmt, interpret=True)
+    pallas_run = compile(f, target="pallas", interpret=True)
     got = pallas_run({"A": a.astype(np.float32), "B": b.astype(np.float32),
                       "C": np.zeros((n, n), np.float32)})
-    assert np.allclose(np.asarray(got), want, atol=1e-3)
+    assert np.allclose(np.asarray(got["C"]), want, atol=1e-3)
     print("[4] POM schedule -> pl.pallas_call (BlockSpec grid) OK")
 
 

@@ -1,25 +1,33 @@
-"""POM core: the paper's contribution — DSL, three-layer IR, DSE.
+"""POM core: the paper's contribution — DSL, three-level IR, DSE.
 
-Layers (paper Fig. 7):
+Layers (paper Fig. 7), top to bottom:
   dsl.py         — POM DSL (var/placeholder/compute + scheduling primitives)
-  depgraph.py    — dependence-graph IR (coarse + fine-grained analysis)
+  graph_ir.py    — Graph IR: dataflow graph of compute ops (fusion / DCE /
+                   CSE sharing at graph level)
+  ir.py          — polyhedral IR (statements: domains + accesses + schedules)
+  depgraph.py    — dependence-graph analysis (coarse + fine-grained)
   affine.py      — mini-isl (integer sets/maps, FM elimination, dependence polyhedra)
   transforms.py  — polyhedral loop transformations (interchange/split/tile/skew/…)
   astbuild.py    — polyhedral AST build (isl ast_build analogue)
   loop_ir.py     — annotated loop IR (affine dialect + HLS attributes analogue)
-  backend_hls.py — synthesizable HLS C emitter
-  backend_jax.py — executable oracle (numpy interpreter)
-  backend_pallas.py — Pallas pallas_call generation from schedules
+  pipeline.py    — PassManager spine: named passes, per-stage verifiers,
+                   POM_DUMP_IR debugging, the `compile(fn, target=...)` entry
+  backend_hls.py — synthesizable HLS C emitter (lowering pass)
+  backend_jax.py — executable oracle (numpy interpreter, lowering pass)
+  backend_pallas.py — Pallas pallas_call generation (lowering pass)
   cost_model.py  — HLS (XC7Z020) and TPU (v5e) analytical models
-  dse.py         — two-stage DSE engine (dependence-aware + bottleneck-oriented)
+  dse.py         — two-stage DSE engine, run as pipeline passes
 """
 from .dsl import ComputeHandle, PomFunction, Var, compute, function, placeholder, var
 from .ir import (Placeholder, p_bfloat16, p_float32, p_float64, p_int8, p_int16,
                  p_int32, p_int64, p_uint8, p_uint16, p_uint32, p_uint64)
+from .pipeline import PassManager, VerifyError, compile
 
+# NOTE: `compile` is importable explicitly (`from repro.core import compile`)
+# but deliberately left out of __all__ so `import *` never shadows the builtin.
 __all__ = [
     "function", "var", "placeholder", "compute", "PomFunction", "ComputeHandle",
-    "Var", "Placeholder",
+    "Var", "Placeholder", "PassManager", "VerifyError",
     "p_int8", "p_int16", "p_int32", "p_int64",
     "p_uint8", "p_uint16", "p_uint32", "p_uint64",
     "p_float32", "p_float64", "p_bfloat16",

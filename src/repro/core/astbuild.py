@@ -18,28 +18,66 @@ from .loop_ir import ForNode, IfNode, LoopBound, Node, ProgramAST, StmtNode
 
 
 def _program_order(fn: Function) -> List[Statement]:
-    """Registration order, but `after` targets pull their statement adjacent."""
-    order: List[Statement] = []
-    placed = set()
+    """Registration order, but `after` targets pull their statement adjacent.
 
-    def place(s: Statement):
+    A placed statement's `after` children form a consecutive run right
+    behind it; a new child is inserted at the end of that run.  The order
+    is kept as a linked list with a per-target insertion-point memo, so
+    placement is O(1) amortized instead of the old ``order.index`` +
+    ``list.insert`` pair (quadratic on wide functions).
+    """
+    nxt: Dict[int, Optional[Statement]] = {}
+    placed: set = set()
+    first: List[Optional[Statement]] = [None]
+    last: List[Optional[Statement]] = [None]
+    # target uid -> node after which its next `after` child is inserted
+    # (the end of the target's consecutive child run); dropped whenever an
+    # insertion for a different target lands inside that run.
+    ins: Dict[int, Statement] = {}
+
+    def run_end(target: Statement) -> Statement:
+        p = ins.get(target.uid)
+        if p is not None:
+            return p
+        p = target
+        while True:
+            q = nxt[p.uid]
+            if q is None or q.after_spec is None or q.after_spec[0] is not target:
+                return p
+            p = q
+
+    def place(s: Statement) -> None:
         if s.uid in placed:
             return
-        if s.after_spec is not None:
-            place(s.after_spec[0])
-            idx = order.index(s.after_spec[0])
-            # insert after the target and after any earlier `after` siblings
-            j = idx + 1
-            while j < len(order) and order[j].after_spec is not None \
-                    and order[j].after_spec[0] is s.after_spec[0]:
-                j += 1
-            order.insert(j, s)
-        else:
-            order.append(s)
         placed.add(s.uid)
+        if s.after_spec is None:
+            if last[0] is None:
+                first[0] = s
+            else:
+                nxt[last[0].uid] = s
+            nxt[s.uid] = None
+            last[0] = s
+            return
+        target = s.after_spec[0]
+        place(target)
+        p = run_end(target)
+        q = nxt[p.uid]
+        nxt[s.uid] = q
+        nxt[p.uid] = s
+        ins[target.uid] = s
+        if q is None:
+            last[0] = s
+        elif q.after_spec is not None and q.after_spec[0] is not target:
+            # s broke the consecutive child run of q's target at p
+            ins.pop(q.after_spec[0].uid, None)
 
     for s in fn.statements:
         place(s)
+    order: List[Statement] = []
+    node = first[0]
+    while node is not None:
+        order.append(node)
+        node = nxt[node.uid]
     return order
 
 

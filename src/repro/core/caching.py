@@ -66,6 +66,27 @@ def clear_all() -> None:
 
 
 @contextmanager
+def counting_paused():
+    """Run a block without perturbing the evaluation counters.
+
+    The pipeline's per-stage verifiers re-run legality / dependence /
+    bound queries that the search has (in the cached engine) already
+    computed; the counters exist to measure *candidate-evaluation* work,
+    so verification must not shift them.  Counter state is snapshotted and
+    restored; cache contents are untouched.  Each verifier runs *after*
+    the stage that issues its queries (and search candidates always differ
+    structurally from stage-boundary schedules), so verifier-warmed
+    entries are never what turns a later genuine evaluation into a hit.
+    """
+    snap = dict(COUNTS)
+    try:
+        yield
+    finally:
+        COUNTS.clear()
+        COUNTS.update(snap)
+
+
+@contextmanager
 def disabled():
     """Run a block with every incremental cache bypassed (baseline engine)."""
     global ENABLED

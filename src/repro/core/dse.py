@@ -1,5 +1,11 @@
 """Two-stage design space exploration (paper SS VI).
 
+``auto_dse`` runs both stages as passes of the ``pipeline.PassManager``
+(graph build/verify → stage 1 → poly verify → stage 2 → poly verify), so
+DSE candidates are evaluated against pipeline stages — the cost model is
+the stage-2 evaluator handed in through the pipeline context — and the
+per-stage verifiers re-check every search result.
+
 Stage 1 — *dependence-aware code transformation*: iteratively re-check
 loop-carried dependences and apply interchange / distribution /
 skew(+interchange) until no node has a tight dependence or the iteration
@@ -85,6 +91,10 @@ def _restore_fn(fn: Function, snap) -> None:
 @dataclass
 class Stage1Log:
     actions: List[str] = field(default_factory=list)
+    # fusion specs *created* by stage 1 (consumer, producer, level) — the
+    # poly verifier dependence-checks exactly these (user-authored `after`
+    # specs define program semantics and are not re-fusion transforms)
+    fused: List[Tuple[str, str, int]] = field(default_factory=list)
 
     def add(self, msg: str):
         self.actions.append(msg)
@@ -207,6 +217,7 @@ def stage1(fn: Function, max_iters: int = 6, log: Optional[Stage1Log] = None) ->
                 if T.fuse_legal(b, a, levels) and not _is_tight(a) and not _is_tight(b):
                     T.set_after(b, a, levels - 1)
                     log.add(f"fuse {b.name} after {a.name} at level {levels - 1}")
+                    log.fused.append((b.name, a.name, levels - 1))
     return log
 
 
@@ -444,17 +455,36 @@ def stage2(fn: Function, model: Optional[HlsModel] = None,
 def auto_dse(fn: Function, target: str = "fpga", max_parallel: int = 256,
              resources: Dict = XC7Z020,
              model: Optional[HlsModel] = None) -> DseResult:
-    """Run both DSE stages.  Pass an ``HlsModel`` to control caching
+    """Run both DSE stages as a ``pipeline.PassManager`` pipeline:
+
+        build graph → verify graph → CSE classes → lower to poly
+        → stage 1 → verify poly → stage 2 → verify poly
+
+    The per-stage verifiers run counter-paused, so evaluation counts (and
+    therefore the DSE-speed benchmarks) are identical to driving the two
+    stages directly.  Pass an ``HlsModel`` to control caching
     (``HlsModel(cache=False)`` reproduces the pre-incremental engine) or to
     read back ``model.stats`` evaluation counters afterwards."""
+    from .pipeline import (BuildGraph, GraphCSE, LowerToPoly, PassManager,
+                           PipelineContext, Stage1DSE, Stage2DSE, VerifyGraph,
+                           VerifyPoly)
     t0 = time.perf_counter()
-    log = stage1(fn)
     model = model or HlsModel(resources)
-    actions: List[str] = []
-    report = stage2(fn, model, max_parallel, actions)
+    ctx = PipelineContext(fn=fn, target=target,
+                          options={"max_parallel": max_parallel,
+                                   "model": model})
+    # CSE classification only (warm=()): grouping feeds the dump/debug
+    # surface while the name-canonical memos themselves are populated on
+    # first use, keeping the engines' evaluation counts untouched.
+    PassManager([BuildGraph(), VerifyGraph(), GraphCSE(warm=()),
+                 LowerToPoly(), Stage1DSE(), VerifyPoly(),
+                 Stage2DSE(), VerifyPoly()]).run(ctx)
+    log = ctx.records["stage1"]
+    report = ctx.records["stage2"]["report"]
+    actions = ctx.records["stage2"]["actions"]
     dt = time.perf_counter() - t0
     tiles: Dict[str, List[int]] = {}
-    for s in fn.statements:
+    for s in ctx.fn.statements:
         # report unroll factor per current loop dim (1 when untouched)
         tiles[s.name] = [s.unrolls.get(d, 1) for d in s.dims]
     return DseResult(report, log, actions, dt, tiles, model.stats)

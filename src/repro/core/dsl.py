@@ -112,20 +112,20 @@ class PomFunction:
         return ComputeHandle(self.fn.stmt(name))
 
     def auto_DSE(self, target: str = "fpga", **kw):
-        """paper: f.auto_DSE("PATH") -- run the two-stage DSE engine."""
+        """paper: f.auto_DSE("PATH") -- run the two-stage DSE engine
+        (itself a PassManager pipeline, see ``pipeline``/``dse``)."""
         from .dse import auto_dse
         return auto_dse(self.fn, target=target, **kw)
 
     def codegen(self, backend: str = "hls", **kw):
-        from .astbuild import build_ast
-        ast = build_ast(self.fn)
-        if backend == "hls":
-            from .backend_hls import emit_hls
-            return emit_hls(self.fn, ast, **kw)
-        if backend == "jax":
-            from .backend_jax import compile_jax
-            return compile_jax(self.fn, ast, **kw)
-        raise ValueError(backend)
+        """Lower through the three-level pass pipeline to ``backend``
+        (``"hls"``, ``"jax"``, or ``"pallas"``)."""
+        from .pipeline import compile
+        return compile(self.fn, target=backend, **kw)
+
+    def compile(self, target: str = "hls", **kw):
+        """Alias of ``codegen`` matching the pipeline entry-point name."""
+        return self.codegen(target, **kw)
 
     def __repr__(self):
         return f"PomFunction({self.fn.name})"

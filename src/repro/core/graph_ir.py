@@ -1,0 +1,330 @@
+"""Graph IR — the top layer of POM's three-level IR (paper §V, Fig. 7).
+
+A dataflow graph of compute ops built from the DSL: nodes are ``compute``
+statements, edges are producer→consumer relations through the arrays they
+store/load.  Optimizations that the paper performs "at a suitable
+abstraction level" on this layer:
+
+  * **dead-op elimination** — ops whose results can never reach a live
+    output are dropped before any polyhedral work is spent on them;
+  * **op fusion** — producer/consumer pairs whose dependences permit it are
+    annotated with an ``after`` fusion spec (checked by
+    ``transforms.fuse_legal``), so the polyhedral layer builds one shared
+    loop nest;
+  * **common-subexpression sharing** — structurally identical ops (equal
+    modulo iterator/array renaming, detected with ``affine.NameCanon``)
+    are grouped into sharing classes that feed the name-canonical memo
+    tables of the incremental engine: one polyhedral analysis per class,
+    cache hits for every other member.
+
+The layer below is the polyhedral IR (``ir.Function`` + ``transforms``);
+``GraphIR.to_function()`` lowers into it.  ``pipeline.PassManager`` wires
+the layers together and verifies each boundary.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .ir import (BinOp, Call, Const, Expr, Function, IterVal, Load, Statement,
+                 walk_expr)
+
+
+class GraphError(Exception):
+    """Raised when a GraphIR is malformed (caught by the graph verifier)."""
+
+
+@dataclass
+class GraphOp:
+    """One compute op: a statement plus its dataflow context."""
+    stmt: Statement
+    reads: Tuple[str, ...]            # array names loaded
+    writes: str                       # array name stored
+    producers: List[int] = field(default_factory=list)   # uids of upstream ops
+    consumers: List[int] = field(default_factory=list)   # uids of downstream ops
+
+    @property
+    def uid(self) -> int:
+        return self.stmt.uid
+
+    @property
+    def name(self) -> str:
+        return self.stmt.name
+
+
+class GraphIR:
+    """Dataflow graph over a function's computes.
+
+    ``outputs`` is the set of array names that are externally observable;
+    by default every written array is an output (conservative — nothing is
+    dead).  Narrow it (``outputs={"C"}``) to let dead-op elimination drop
+    producers of purely internal temporaries.
+    """
+
+    def __init__(self, name: str, ops: List[GraphOp], outputs: Set[str],
+                 source: Optional[Function] = None):
+        self.name = name
+        self.ops = ops
+        self.outputs = set(outputs)
+        self.source = source
+        self.cse_classes: Dict[Tuple, List[str]] = {}
+        # fusion specs created by graph passes: (consumer, producer, level);
+        # the poly verifier dependence-checks exactly these
+        self.fused: List[Tuple[str, str, int]] = []
+        self._dirty = False          # True once an op was dropped/rewired
+
+    # -- construction -----------------------------------------------------------
+    @classmethod
+    def from_function(cls, fn: Function, outputs: Optional[Sequence[str]] = None) -> "GraphIR":
+        ops: List[GraphOp] = []
+        last_writer: Dict[str, List[GraphOp]] = {}
+        for s in fn.statements:
+            w_arr, _ = s.store_access()
+            reads = tuple(arr.name for arr, _ in s.load_accesses())
+            op = GraphOp(s, reads, w_arr.name)
+            for rd in reads:
+                for producer in last_writer.get(rd, []):
+                    if producer.uid != op.uid and op.uid not in producer.consumers:
+                        producer.consumers.append(op.uid)
+                        op.producers.append(producer.uid)
+            last_writer.setdefault(w_arr.name, []).append(op)
+            ops.append(op)
+        outs = set(outputs) if outputs is not None else {op.writes for op in ops}
+        return cls(fn.name, ops, outs, source=fn)
+
+    # -- introspection ----------------------------------------------------------
+    def op(self, name: str) -> GraphOp:
+        for o in self.ops:
+            if o.name == name:
+                return o
+        raise KeyError(name)
+
+    def by_uid(self) -> Dict[int, GraphOp]:
+        return {o.uid: o for o in self.ops}
+
+    def edges(self) -> List[Tuple[str, str, str]]:
+        """(producer op, consumer op, array) triples."""
+        by = self.by_uid()
+        out = []
+        for o in self.ops:
+            for c in o.consumers:
+                if c in by:
+                    out.append((o.name, by[c].name, o.writes))
+        return out
+
+    def describe(self) -> str:
+        lines = [f"graph {self.name} (outputs: {sorted(self.outputs)})"]
+        by = self.by_uid()
+        for o in self.ops:
+            dst = [by[c].name for c in o.consumers if c in by]
+            after = ""
+            if o.stmt.after_spec is not None:
+                after = f"  after={o.stmt.after_spec[0].name}@{o.stmt.after_spec[1]}"
+            lines.append(f"  {o.name}: [{', '.join(o.reads)}] -> {o.writes}"
+                         f"  dims={o.stmt.dims}{after}"
+                         + (f"  -> {dst}" if dst else ""))
+        for key, members in self.cse_classes.items():
+            if len(members) > 1:
+                lines.append(f"  cse-class {members}")
+        return "\n".join(lines)
+
+    # -- well-formedness --------------------------------------------------------
+    def verify(self) -> None:
+        """Domain/substitution well-formedness of every op + edge sanity.
+
+        Raises ``GraphError`` on the first violation.  This is the
+        graph-stage verifier of the pass pipeline.
+        """
+        uids = {o.uid for o in self.ops}
+        for o in self.ops:
+            s = o.stmt
+            dims = s.dims
+            if len(set(dims)) != len(dims):
+                raise GraphError(f"{s.name}: duplicate loop dims {dims}")
+            if set(s.iter_subst) != set(s.original_iters):
+                raise GraphError(
+                    f"{s.name}: iter_subst keys {sorted(s.iter_subst)} != "
+                    f"original iterators {sorted(s.original_iters)}")
+            legal_names = set(dims) | set(s.domain.params)
+            for k, e in s.iter_subst.items():
+                stray = set(e.vars()) - legal_names
+                if stray:
+                    raise GraphError(
+                        f"{s.name}: substitution for {k} references "
+                        f"non-dims {sorted(stray)}")
+            orig_names = set(s.original_iters) | set(s.domain.params)
+            refs = [s.store] + [ld for ld in walk_expr(s.body)
+                                if isinstance(ld, Load)]
+            for ld in refs:
+                for e in ld.idx:
+                    stray = set(e.vars()) - orig_names
+                    if stray:
+                        raise GraphError(
+                            f"{s.name}: access {ld.array.name} indexes with "
+                            f"unknown iterators {sorted(stray)}")
+            for i, d in enumerate(dims):
+                los, ups = s.domain.bounds_of(d, dims[i + 1:])
+                if not los or not ups:
+                    raise GraphError(f"{s.name}: loop {d} is unbounded "
+                                     f"({'no lower' if not los else 'no upper'} bound)")
+            for uid in o.producers + o.consumers:
+                if uid not in uids:
+                    raise GraphError(f"{o.name}: dangling edge to dropped op "
+                                     f"uid={uid}")
+            if s.after_spec is not None and s.after_spec[0].uid not in uids:
+                raise GraphError(f"{s.name}: `after` target "
+                                 f"{s.after_spec[0].name} is not in the graph")
+
+    # -- lowering ---------------------------------------------------------------
+    def to_function(self, rebuild: Optional[bool] = None) -> Function:
+        """Lower to the polyhedral IR (an ``ir.Function``).
+
+        When no graph pass changed the op set, the original function is
+        returned unchanged (the statements are shared objects, so fusion
+        annotations made at graph level are already visible).  After a
+        destructive pass (or with ``rebuild=True``) a fresh Function is
+        assembled from the surviving ops in graph order.
+        """
+        if rebuild is None:
+            rebuild = self._dirty
+        if not rebuild and self.source is not None:
+            return self.source
+        fn = Function(self.name)
+        for o in self.ops:
+            fn.add(o.stmt)
+        return fn
+
+
+# --------------------------------------------------------------------------
+# graph-level passes
+# --------------------------------------------------------------------------
+def eliminate_dead_ops(g: GraphIR) -> List[str]:
+    """Drop ops that cannot reach any output array (paper: graph-level DCE).
+
+    An op is live iff it writes an output array, some live op reads the
+    array it writes, or a live op's ``after`` spec anchors to it (fusion
+    specs are program semantics, so their targets are kept — removing one
+    would have to mutate statements shared with the source function).
+    Returns the names of removed ops.
+    """
+    live: Set[int] = set()
+    by = g.by_uid()
+
+    def mark(uid: int, work: List[int]) -> None:
+        if uid not in live and uid in by:
+            live.add(uid)
+            work.append(uid)
+
+    work: List[int] = []
+    for o in g.ops:
+        if o.writes in g.outputs:
+            mark(o.uid, work)
+    while work:
+        o = by[work.pop()]
+        for p in o.producers:
+            mark(p, work)
+        if o.stmt.after_spec is not None:
+            mark(o.stmt.after_spec[0].uid, work)
+    removed = [o.name for o in g.ops if o.uid not in live]
+    if not removed:
+        return []
+    dead = {o.uid for o in g.ops if o.uid not in live}
+    g.ops = [o for o in g.ops if o.uid in live]
+    for o in g.ops:
+        o.producers = [u for u in o.producers if u not in dead]
+        o.consumers = [u for u in o.consumers if u not in dead]
+    g._dirty = True
+    return removed
+
+
+def fuse_ops(g: GraphIR) -> List[str]:
+    """Fuse adjacent producer→consumer ops whose dependences permit it.
+
+    For each consecutive op pair (p, c) where c reads what p writes, both
+    have the same loop depth and equal trip counts, and c carries no fusion
+    spec yet, annotate ``c.after(p, deepest-legal-level)``.  Legality is
+    the conservative cross-statement check ``transforms.fuse_legal`` —
+    every dependence must stay non-negative on the shared loops.  Returns
+    action strings for the log.
+    """
+    from . import transforms as T
+    actions: List[str] = []
+    for p, c in zip(g.ops, g.ops[1:]):
+        if c.stmt.after_spec is not None:
+            continue
+        if c.uid not in p.consumers:
+            continue
+        sp, sc = p.stmt, c.stmt
+        if len(sp.dims) != len(sc.dims):
+            continue
+        tp, tc = sp.trip_counts(), sc.trip_counts()
+        if list(tp.values()) != list(tc.values()):
+            continue
+        for levels in range(len(sp.dims), 0, -1):
+            if T.fuse_legal(sc, sp, levels):
+                T.set_after(sc, sp, levels - 1)
+                g.fused.append((sc.name, sp.name, levels - 1))
+                actions.append(f"fuse {sc.name} after {sp.name} "
+                               f"at level {levels - 1}")
+                break
+    return actions
+
+
+def _body_key(e: Expr, canon) -> Tuple:
+    """Structural key of a compute body under name canonicalization."""
+    if isinstance(e, Const):
+        return ("c", e.value)
+    if isinstance(e, IterVal):
+        return ("it", canon.expr(e.expr))
+    if isinstance(e, Load):
+        return ("ld", canon.id("@" + e.array.name),
+                tuple(canon.expr(i) for i in e.idx))
+    if isinstance(e, BinOp):
+        return ("b", e.op, _body_key(e.lhs, canon), _body_key(e.rhs, canon))
+    if isinstance(e, Call):
+        return ("f", e.fn, tuple(_body_key(a, canon) for a in e.args))
+    raise TypeError(e)
+
+
+def op_structural_key(stmt: Statement) -> Tuple:
+    """Name-canonical signature of an op: domain + substitution + accesses +
+    body structure.  Two ops with equal keys are the same computation modulo
+    iterator/array renaming, so every positional polyhedral query (trip
+    counts, dependence distances, legality, recurrence II) has the same
+    answer for both."""
+    from .affine import NameCanon
+    c = NameCanon()
+    dkey = c.set_key(stmt.domain)
+    subst = tuple(c.expr(stmt.iter_subst[k]) for k in stmt.original_iters)
+    store = (c.id("@" + stmt.store.array.name),
+             tuple(c.expr(e) for e in stmt.store.idx))
+    return (dkey, subst, store, _body_key(stmt.body, c))
+
+
+def share_structural_memos(g: GraphIR, warm: Sequence[str] = ()) -> Dict[Tuple, List[str]]:
+    """Common-subexpression sharing: group structurally identical ops.
+
+    Populates ``g.cse_classes`` (key → member op names).  With ``warm``
+    analyses named (subset of {"trip", "selfdep"}) and caching enabled, the
+    class representative's analyses are computed eagerly so that every
+    other member hits the name-canonical memo tables from the incremental
+    engine (PR 1) instead of re-deriving them.  Warming is restricted to
+    analyses the downstream stages are guaranteed to run anyway, so total
+    evaluation counts are unchanged — only *when* the one real computation
+    happens moves.
+    """
+    classes: Dict[Tuple, List[GraphOp]] = {}
+    for o in g.ops:
+        classes.setdefault(op_structural_key(o.stmt), []).append(o)
+    g.cse_classes = {k: [o.name for o in ops] for k, ops in classes.items()}
+    if warm:
+        from . import caching
+        if caching.ENABLED:
+            from .transforms import self_dependences
+            for ops in classes.values():
+                rep = ops[0].stmt
+                if "trip" in warm:
+                    rep.trip_counts()
+                if "selfdep" in warm:
+                    self_dependences(rep)
+    return g.cse_classes

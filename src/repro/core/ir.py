@@ -342,6 +342,29 @@ class Statement:
             used |= set(e.vars())
         return [d for d in self.dims if d not in used]
 
+    def describe(self) -> str:
+        """One-statement dump for the ``POM_DUMP_IR=poly`` stage."""
+        lines = [f"{self.name}: domain {self.domain!r}"]
+        subst = {k: v for k, v in self.iter_subst.items()
+                 if v.key() != LinExpr.var(k).key()}
+        if subst:
+            lines.append("  subst " + ", ".join(
+                f"{k} = {v!r}" for k, v in subst.items()))
+        arr, idx = self.store_access()
+        lines.append(f"  store {arr.name}[{', '.join(map(repr, idx))}]")
+        for a, ix in self.load_accesses():
+            lines.append(f"  load  {a.name}[{', '.join(map(repr, ix))}]")
+        ann = []
+        if self.pipeline_at is not None:
+            ann.append(f"pipeline@{self.pipeline_at} II={self.pipeline_ii}")
+        for d, f in sorted(self.unrolls.items()):
+            ann.append(f"unroll {d}x{f}")
+        if self.after_spec is not None:
+            ann.append(f"after {self.after_spec[0].name}@{self.after_spec[1]}")
+        if ann:
+            lines.append("  " + "  ".join(ann))
+        return "\n".join(lines)
+
     def __repr__(self):
         return f"Statement({self.name}, dims={self.dims})"
 
@@ -382,6 +405,18 @@ class Function:
             if s.name == name:
                 return s
         raise KeyError(name)
+
+    def describe(self) -> str:
+        parts = [f"function {self.name}"]
+        for ph in self.placeholders.values():
+            p = ""
+            if ph.partitions:
+                p = "  partition " + ", ".join(
+                    f"dim{d}:{k}x{f}" for d, (f, k) in sorted(ph.partitions.items()))
+            parts.append(f"  {ph.name}: {ph.dtype} {list(ph.shape)}{p}")
+        for s in self.statements:
+            parts.append("\n".join("  " + ln for ln in s.describe().splitlines()))
+        return "\n".join(parts)
 
     def __repr__(self):
         return f"Function({self.name}, {[s.name for s in self.statements]})"

@@ -87,6 +87,39 @@ def walk(node: Node):
             yield from walk(ch)
 
 
+def describe(node: Node, indent: int = 0) -> str:
+    """Readable dump of a loop tree (the ``POM_DUMP_IR=loops`` format)."""
+    pad = "  " * indent
+    if isinstance(node, ProgramAST):
+        return "\n".join(describe(c, indent) for c in node.body)
+    if isinstance(node, ForNode):
+        attrs = []
+        if node.pipeline_ii is not None:
+            attrs.append(f"pipeline II={node.pipeline_ii}")
+        if node.unroll is not None:
+            attrs.append(f"unroll {node.unroll}")
+        if node.trip is not None:
+            attrs.append(f"trip {node.trip}")
+        head = (f"{pad}for {node.var} in [{_b(node.lo)}, {_b(node.hi)}]"
+                + (f"  # {', '.join(attrs)}" if attrs else ""))
+        return "\n".join([head] + [describe(c, indent + 1) for c in node.body])
+    if isinstance(node, IfNode):
+        conds = " and ".join(map(repr, node.conds))
+        return "\n".join([f"{pad}if {conds}:"]
+                         + [describe(c, indent + 1) for c in node.body])
+    if isinstance(node, StmtNode):
+        dm = ", ".join(f"{k}->{v}" for k, v in node.dim_map.items())
+        return f"{pad}{node.stmt.name}({dm})"
+    raise TypeError(node)
+
+
+def _b(lb: LoopBound) -> str:
+    op = "max" if lb.is_lower else "min"
+    if len(lb.bounds) == 1:
+        return repr(lb.bounds[0])
+    return f"{op}({', '.join(map(repr, lb.bounds))})"
+
+
 def for_nodes(ast: Node) -> List[ForNode]:
     return [n for n in walk(ast) if isinstance(n, ForNode)]
 

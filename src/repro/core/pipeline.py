@@ -1,0 +1,495 @@
+"""Pass pipeline: the spine connecting POM's three IR levels (paper §V).
+
+The whole flow is expressed as named passes over a ``PipelineContext``::
+
+    dsl  →  GraphIR  →  [graph passes]  →  polyhedral IR
+         →  [transforms / DSE schedule application]  →  annotated loop IR
+         →  backend (HLS C / JAX oracle / Pallas)
+
+Each stage boundary has a verifier:
+
+  * **graph**  — domain/substitution well-formedness, edge sanity
+    (``GraphIR.verify``);
+  * **poly**   — dependence preservation: every statement's current
+    schedule must execute all dependences source-before-sink
+    (``transforms._legal``), and every ``after`` fusion spec must satisfy
+    the cross-statement check (``transforms.fuse_legal``);
+  * **loops**  — bound sanity: every loop has lower and upper bounds,
+    constant bounds yield non-negative trips, bound expressions only
+    reference enclosing loop variables, and every statement appears
+    exactly once with a fully-mapped ``dim_map``.
+
+Verifiers run under ``caching.counting_paused()`` so they never perturb
+the incremental engine's evaluation counters (the DSE benchmarks are
+count-based).
+
+Debugging (the paper's "streamlined debugging" claim): set
+``POM_DUMP_IR=graph|poly|loops|backend|all`` to dump the IR after every
+pass that produces that stage.
+
+``compile(fn, target=...)`` is the single entry point; the three backends
+are lowering passes behind it, and ``dse.auto_dse`` runs its two search
+stages as passes of the same pipeline.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .ir import Function
+from .graph_ir import (GraphError, GraphIR, eliminate_dead_ops, fuse_ops,
+                       share_structural_memos)
+
+
+class VerifyError(Exception):
+    """A per-stage verifier rejected the IR."""
+
+
+@dataclass
+class PipelineContext:
+    """Mutable state threaded through the passes of one compilation."""
+    fn: Function
+    target: Optional[str] = None
+    graph: Optional[GraphIR] = None
+    ast: Any = None                        # loop_ir.ProgramAST
+    artifact: Any = None                   # backend output
+    options: Dict[str, Any] = field(default_factory=dict)
+    records: Dict[str, Any] = field(default_factory=dict)
+
+
+class Pass:
+    """A named pipeline step.  ``stage`` labels which IR level it belongs
+    to; ``dumps`` names the stage artifact it (re)produces, used by the
+    ``POM_DUMP_IR`` hook."""
+    name: str = "?"
+    stage: str = "?"
+    dumps: Optional[str] = None
+
+    def run(self, ctx: PipelineContext) -> None:
+        raise NotImplementedError
+
+
+class PassManager:
+    """Runs passes in order; honors ``POM_DUMP_IR``.
+
+    ``dump`` overrides the env toggle; pass ``"all"`` to dump every stage.
+    """
+
+    def __init__(self, passes: Sequence[Pass], dump: Optional[str] = None):
+        self.passes: List[Pass] = list(passes)
+        self.dump = dump if dump is not None else os.environ.get("POM_DUMP_IR")
+
+    def run(self, ctx: PipelineContext) -> PipelineContext:
+        for p in self.passes:
+            p.run(ctx)
+            if p.dumps and self.dump and self.dump in (p.dumps, "all"):
+                self._dump(p, ctx)
+        return ctx
+
+    def _dump(self, p: Pass, ctx: PipelineContext, out=None) -> None:
+        out = out or sys.stderr
+        print(f"// POM_DUMP_IR [{p.dumps}] after pass '{p.name}'", file=out)
+        if p.dumps == "graph" and ctx.graph is not None:
+            print(ctx.graph.describe(), file=out)
+        elif p.dumps == "poly":
+            print(ctx.fn.describe(), file=out)
+        elif p.dumps == "loops" and ctx.ast is not None:
+            from . import loop_ir
+            print(loop_ir.describe(ctx.ast), file=out)
+        elif p.dumps == "backend":
+            a = ctx.artifact
+            print(a if isinstance(a, str) else repr(a), file=out)
+        print(file=out)
+
+
+# --------------------------------------------------------------------------
+# graph stage
+# --------------------------------------------------------------------------
+class BuildGraph(Pass):
+    name, stage, dumps = "build-graph", "graph", "graph"
+
+    def __init__(self, outputs: Optional[Sequence[str]] = None):
+        self.outputs = outputs
+
+    def run(self, ctx: PipelineContext) -> None:
+        ctx.graph = GraphIR.from_function(ctx.fn, outputs=self.outputs)
+
+
+class VerifyGraph(Pass):
+    name, stage = "verify-graph", "graph"
+
+    def run(self, ctx: PipelineContext) -> None:
+        from . import caching
+        with caching.counting_paused():
+            try:
+                ctx.graph.verify()
+            except GraphError as e:
+                raise VerifyError(f"graph verifier: {e}") from e
+
+
+class GraphDCE(Pass):
+    name, stage, dumps = "graph-dce", "graph", "graph"
+
+    def run(self, ctx: PipelineContext) -> None:
+        ctx.records["dce"] = eliminate_dead_ops(ctx.graph)
+
+
+class GraphFuse(Pass):
+    name, stage, dumps = "graph-fuse", "graph", "graph"
+
+    def run(self, ctx: PipelineContext) -> None:
+        ctx.records["fuse"] = fuse_ops(ctx.graph)
+
+
+class GraphCSE(Pass):
+    """CSE sharing classes.  Default warming covers only trip counts —
+    the one analysis every downstream stage (AST build, cost models)
+    queries; ``auto_dse`` passes ``warm=()`` to keep the count-based
+    benchmarks provably untouched, and DSE pipelines may opt into
+    ``"selfdep"`` where dependence analysis is guaranteed to run."""
+    name, stage, dumps = "graph-cse", "graph", "graph"
+
+    def __init__(self, warm: Sequence[str] = ("trip",)):
+        self.warm = tuple(warm)
+
+    def run(self, ctx: PipelineContext) -> None:
+        classes = share_structural_memos(ctx.graph, warm=self.warm)
+        ctx.records["cse"] = {
+            "classes": len(classes),
+            "shared_ops": sum(len(m) - 1 for m in classes.values()),
+        }
+
+
+GRAPH_PASSES: Dict[str, Callable[[], Pass]] = {
+    "dce": GraphDCE, "fuse": GraphFuse, "cse": GraphCSE,
+}
+
+
+# --------------------------------------------------------------------------
+# polyhedral stage
+# --------------------------------------------------------------------------
+class LowerToPoly(Pass):
+    name, stage, dumps = "lower-to-poly", "poly", "poly"
+
+    def run(self, ctx: PipelineContext) -> None:
+        ctx.fn = ctx.graph.to_function()
+
+
+def verify_polyhedral(fn: Function,
+                      fused: Sequence[Tuple[str, str, int]] = ()) -> None:
+    """Poly-stage verifier: dependence preservation + domain boundedness.
+
+    Per-statement: every loop keeps lower and upper bounds and the current
+    schedule executes every self-dependence source-before-sink
+    (``transforms._legal``).  Every ``after`` spec is structurally sane
+    (target present, level within both nests).  ``fused`` names the
+    fusion specs *created by passes* — (consumer, producer, level)
+    triples from stage 1 or the graph fusion pass — which additionally
+    must satisfy the cross-statement dependence check: user-authored
+    ``after`` specs in the DSL define program semantics (e.g. a stencil's
+    time-loop alternation) and are deliberately not re-derived.
+
+    Raises ``VerifyError``.  Counter-neutral (``counting_paused``)."""
+    from . import caching
+    from . import transforms as T
+    with caching.counting_paused():
+        in_fn = {id(s) for s in fn.statements}
+        for s in fn.statements:
+            for i, d in enumerate(s.dims):
+                los, ups = s.domain.bounds_of(d, s.dims[i + 1:])
+                if not los or not ups:
+                    raise VerifyError(
+                        f"poly verifier: {s.name}: loop {d} lost its "
+                        f"{'lower' if not los else 'upper'} bound")
+            if not T._legal(s):
+                raise VerifyError(
+                    f"poly verifier: schedule of {s.name} reverses a "
+                    f"dependence (current order {s.dims})")
+        for s in fn.statements:
+            if s.after_spec is None:
+                continue
+            target, level = s.after_spec
+            if id(target) not in in_fn:
+                raise VerifyError(
+                    f"poly verifier: {s.name} is `after` {target.name}, "
+                    f"which is not in the function")
+            if not (0 <= level < min(len(s.dims), len(target.dims))):
+                raise VerifyError(
+                    f"poly verifier: {s.name} fused at level {level} but "
+                    f"dims are {s.dims} / {target.dims}")
+        for consumer, producer, level in fused:
+            try:
+                sc, sp = fn.stmt(consumer), fn.stmt(producer)
+            except KeyError:
+                continue             # dropped or renamed since fusion
+            if sc.after_spec is None or sc.after_spec[0] is not sp:
+                continue             # spec was since removed (distribution)
+            if not T.fuse_legal(sc, sp, level + 1):
+                raise VerifyError(
+                    f"poly verifier: fusing {consumer} after {producer} at "
+                    f"level {level} violates a cross-statement dependence")
+
+
+class VerifyPoly(Pass):
+    name, stage = "verify-poly", "poly"
+
+    def run(self, ctx: PipelineContext) -> None:
+        fused: List[Tuple[str, str, int]] = []
+        if ctx.graph is not None:
+            fused += ctx.graph.fused
+        log = ctx.records.get("stage1")
+        if log is not None:
+            fused += log.fused
+        verify_polyhedral(ctx.fn, fused=fused)
+
+
+class Stage1DSE(Pass):
+    """Dependence-aware code transformation (paper §VI-A) as a pass."""
+    name, stage, dumps = "dse-stage1", "poly", "poly"
+
+    def run(self, ctx: PipelineContext) -> None:
+        from .dse import stage1
+        ctx.records["stage1"] = stage1(ctx.fn)
+
+
+class Stage2DSE(Pass):
+    """Bottleneck-oriented optimization (paper §VI-B) as a pass.
+
+    The candidate ladder evaluates designs through ``options["model"]``
+    (an ``HlsModel``) — the pipeline owns the evaluator, the search never
+    reaches into backend internals."""
+    name, stage, dumps = "dse-stage2", "poly", "poly"
+
+    def run(self, ctx: PipelineContext) -> None:
+        from .cost_model import HlsModel
+        from .dse import stage2
+        model = ctx.options.get("model") or HlsModel()
+        ctx.options["model"] = model
+        actions: List[str] = []
+        report = stage2(ctx.fn, model,
+                        ctx.options.get("max_parallel", 256), actions)
+        ctx.records["stage2"] = {"report": report, "actions": actions}
+
+
+# --------------------------------------------------------------------------
+# loop stage
+# --------------------------------------------------------------------------
+class BuildLoopIR(Pass):
+    name, stage, dumps = "build-loop-ir", "loops", "loops"
+
+    def run(self, ctx: PipelineContext) -> None:
+        from .astbuild import build_ast
+        ctx.ast = build_ast(ctx.fn)
+
+
+def verify_loop_ir(fn: Function, ast) -> None:
+    """Loop-stage verifier: bound sanity + statement coverage."""
+    from .loop_ir import ForNode, IfNode, ProgramAST, StmtNode
+    params = set()
+    for s in fn.statements:
+        params |= set(s.domain.params)
+    seen: Dict[int, int] = {}
+
+    def rec(node, scope: frozenset):
+        if isinstance(node, ProgramAST):
+            for c in node.body:
+                rec(c, scope)
+        elif isinstance(node, ForNode):
+            if node.var in scope:
+                raise VerifyError(
+                    f"loop verifier: loop var {node.var} shadows an "
+                    f"enclosing loop")
+            for lb in (node.lo, node.hi):
+                if not lb.bounds:
+                    raise VerifyError(
+                        f"loop verifier: loop {node.var} has an empty "
+                        f"{'lower' if lb.is_lower else 'upper'} bound")
+                for b in lb.bounds:
+                    stray = set(b.expr.vars()) - scope - params
+                    if stray:
+                        raise VerifyError(
+                            f"loop verifier: bound of {node.var} references "
+                            f"{sorted(stray)} outside enclosing loops")
+                    if b.div < 1:
+                        raise VerifyError(
+                            f"loop verifier: loop {node.var} bound divisor "
+                            f"{b.div} < 1")
+            if node.lo.is_constant() and node.hi.is_constant():
+                if node.hi.const_value() - node.lo.const_value() + 1 < 0:
+                    raise VerifyError(
+                        f"loop verifier: loop {node.var} has negative trip "
+                        f"([{node.lo.const_value()}, {node.hi.const_value()}])")
+            for c in node.body:
+                rec(c, scope | {node.var})
+        elif isinstance(node, IfNode):
+            for cond in node.conds:
+                stray = set(cond.expr.vars()) - scope - params
+                if stray:
+                    raise VerifyError(
+                        f"loop verifier: guard references {sorted(stray)} "
+                        f"outside enclosing loops")
+            for c in node.body:
+                rec(c, scope)
+        elif isinstance(node, StmtNode):
+            s = node.stmt
+            seen[s.uid] = seen.get(s.uid, 0) + 1
+            if set(node.dim_map) != set(s.dims):
+                raise VerifyError(
+                    f"loop verifier: {s.name} dim_map covers "
+                    f"{sorted(node.dim_map)} but dims are {s.dims}")
+            stray = set(node.dim_map.values()) - scope
+            if stray:
+                raise VerifyError(
+                    f"loop verifier: {s.name} maps dims to loop vars "
+                    f"{sorted(stray)} that are not in scope")
+        else:
+            raise VerifyError(f"loop verifier: unknown node {node!r}")
+
+    rec(ast, frozenset())
+    for s in fn.statements:
+        if seen.get(s.uid, 0) != 1:
+            raise VerifyError(
+                f"loop verifier: statement {s.name} appears "
+                f"{seen.get(s.uid, 0)} times in the loop IR (expected 1)")
+
+
+class VerifyLoopIR(Pass):
+    name, stage = "verify-loop-ir", "loops"
+
+    def run(self, ctx: PipelineContext) -> None:
+        from . import caching
+        with caching.counting_paused():
+            verify_loop_ir(ctx.fn, ctx.ast)
+
+
+# --------------------------------------------------------------------------
+# backend stage (lowering passes)
+# --------------------------------------------------------------------------
+class EmitHLS(Pass):
+    name, stage, dumps = "emit-hls", "backend", "backend"
+
+    def __init__(self, **kw):
+        self.kw = kw
+
+    def run(self, ctx: PipelineContext) -> None:
+        from .backend_hls import emit_hls
+        ctx.artifact = emit_hls(ctx.fn, ctx.ast, **self.kw)
+
+
+class CompileJAX(Pass):
+    name, stage, dumps = "compile-jax", "backend", "backend"
+
+    def __init__(self, **kw):
+        self.kw = kw
+
+    def run(self, ctx: PipelineContext) -> None:
+        from .backend_jax import compile_jax
+        ctx.artifact = compile_jax(ctx.fn, ctx.ast, **self.kw)
+
+
+class LowerPallas(Pass):
+    """Lower each statement to a ``pl.pallas_call``; statements the Pallas
+    matcher does not support — or functions whose fusion specs interleave
+    statement instances — fall back to the exact JAX oracle, keeping the
+    backend total."""
+    name, stage, dumps = "lower-pallas", "backend", "backend"
+
+    def __init__(self, interpret: Optional[bool] = None, fallback: bool = True):
+        self.interpret = interpret
+        self.fallback = fallback
+
+    def run(self, ctx: PipelineContext) -> None:
+        ctx.artifact = lower_function_pallas(
+            ctx.fn, ctx.ast, interpret=self.interpret, fallback=self.fallback)
+
+
+def lower_function_pallas(fn: Function, ast=None,
+                          interpret: Optional[bool] = None,
+                          fallback: bool = True) -> Callable:
+    """Program-level Pallas runner: ``run(arrays) -> dict`` like the oracle.
+
+    Without fusion specs the statements execute whole-nest sequentially,
+    which is exactly the unfused loop IR's instance order, so chaining the
+    per-statement ``pallas_call`` wrappers is semantics-preserving.  Fused
+    programs (shared loops interleave instances of different statements)
+    and unsupported statement shapes use the oracle instead."""
+    from .backend_pallas import PallasLowerError, lower_stmt_pallas
+
+    plan = []
+    fused = any(s.after_spec is not None for s in fn.statements)
+    if not fused:
+        try:
+            for s in fn.statements:
+                arr, _ = s.store_access()
+                plan.append((arr.name, lower_stmt_pallas(s, interpret=interpret)))
+        except PallasLowerError:
+            plan = []
+    if not plan:
+        if not fallback:
+            raise PallasLowerError(
+                f"{fn.name}: no Pallas lowering and fallback disabled")
+        from .astbuild import build_ast
+        from .backend_jax import compile_jax
+        return compile_jax(fn, ast if ast is not None else build_ast(fn))
+
+    def run(arrays: Dict[str, Any]) -> Dict[str, Any]:
+        import jax.numpy as jnp
+        bufs = {k: jnp.asarray(v) for k, v in arrays.items()}
+        for ph in fn.placeholders.values():
+            if ph.name not in bufs:
+                dt = ph.dtype.np or jnp.bfloat16   # DType.np is None for bf16
+                bufs[ph.name] = jnp.zeros(ph.shape, dtype=dt)
+        for dest, runner in plan:
+            bufs[dest] = runner(bufs)
+        return bufs
+
+    return run
+
+
+def backend_pass(target: str, **kw) -> Pass:
+    if target in ("hls", "fpga"):
+        return EmitHLS(**kw)
+    if target == "jax":
+        return CompileJAX(**kw)
+    if target == "pallas":
+        return LowerPallas(**kw)
+    raise ValueError(f"unknown target {target!r} "
+                     f"(expected 'hls', 'jax', or 'pallas')")
+
+
+# --------------------------------------------------------------------------
+# entry point
+# --------------------------------------------------------------------------
+DEFAULT_GRAPH_PASSES: Tuple[str, ...] = ("cse",)
+
+
+def compile(fn, target: str = "hls",
+            graph_passes: Sequence[str] = DEFAULT_GRAPH_PASSES,
+            outputs: Optional[Sequence[str]] = None,
+            dse: bool = False, max_parallel: int = 256,
+            model=None, dump: Optional[str] = None, **backend_kw):
+    """Compile a POM function through the full three-level pipeline.
+
+    ``fn`` is an ``ir.Function`` or a DSL ``PomFunction``.  ``target``
+    picks the lowering pass: ``"hls"`` returns synthesizable C,
+    ``"jax"`` an executable oracle ``run(arrays) -> dict``, ``"pallas"``
+    a TPU-kernel runner with oracle fallback.  ``graph_passes`` names
+    graph-level optimizations to run (``"cse"``, ``"dce"``, ``"fuse"``);
+    the default is the always-safe memo-sharing pass.  ``dse=True`` runs
+    the two-stage DSE between the poly verifiers first.  Backend keyword
+    arguments (``top_name``, ``interpret``, …) pass through.
+    """
+    real_fn = fn if isinstance(fn, Function) else fn.fn
+    passes: List[Pass] = [BuildGraph(outputs), VerifyGraph()]
+    for name in graph_passes:
+        passes.append(GRAPH_PASSES[name]())
+    passes += [LowerToPoly(), VerifyPoly()]
+    if dse:
+        passes += [Stage1DSE(), VerifyPoly(), Stage2DSE(), VerifyPoly()]
+    passes += [BuildLoopIR(), VerifyLoopIR(), backend_pass(target, **backend_kw)]
+    ctx = PipelineContext(fn=real_fn, target=target,
+                          options={"max_parallel": max_parallel, "model": model})
+    PassManager(passes, dump=dump).run(ctx)
+    return ctx.artifact

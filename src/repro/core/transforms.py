@@ -266,8 +266,24 @@ def set_after(s1: Statement, s2: Statement, level: int) -> None:
 
 
 def fuse_legal(s1: Statement, s2: Statement, levels: int) -> bool:
-    """Conservative fusion check: cross-statement deps (s2 -> s1) must be
-    non-negative on the first ``levels`` shared dims."""
+    """May ``s1`` (currently *after all of* ``s2``) share its first
+    ``levels`` loops with ``s2``?
+
+    In the sequential order every cross-statement access pair with a write
+    on one side is ordered s2-instance-first.  Fusion reorders a pair
+    exactly when the s1 instance's shared loop prefix is lexicographically
+    *before* the s2 instance's (equal prefixes keep s2's body first, which
+    preserves the original order).  Legality is therefore emptiness of the
+    reversed-pair polyhedron
+
+        { (s, t) : s in D_s2, t in D_s1, acc_s2(s) = acc_s1(t),
+                   t <_lex s  on the shared levels }
+
+    for every flow (s2 writes → s1 reads), output, and anti (s2 reads →
+    s1 writes) access pair — which is ``dependence_vector`` queried with
+    s1 as the source side.  Conservative: every same-address pair counts
+    as a dependence (no last-writer refinement).
+    """
     w2, w2i = s2.store_access()
     w1, w1i = s1.store_access()
     pairs = []
@@ -280,13 +296,8 @@ def fuse_legal(s1: Statement, s2: Statement, levels: int) -> bool:
         if arr.name == w1.name:
             pairs.append((list(idx), list(w1i)))       # anti dep s2 reads -> s1 writes
     for src, sink in pairs:
-        info = dependence_vector(s2.domain, src, s1.domain, sink,
-                                 shared_levels=levels)
-        if not info.exists:
-            continue
-        for dist, dirn in zip(info.distance, info.direction):
-            if (dist is not None and dist < 0) or dirn == ">" or dirn == "*":
-                return False
-            if dist is not None and dist > 0 or dirn == "<":
-                break
+        reversed_pairs = dependence_vector(s1.domain, sink, s2.domain, src,
+                                           shared_levels=levels)
+        if reversed_pairs.exists:
+            return False
     return True

@@ -1,0 +1,274 @@
+"""Graph IR layer: construction, round-trip, and graph-level passes.
+
+Round-trip: DSL -> GraphIR -> polyhedral IR must preserve statement
+semantics (checked by executing both through the oracle backend).
+Fusion: the graph-level fusion pass must fuse exactly when the
+cross-statement dependences permit it, and fused programs must still
+compute the reference values.
+"""
+import numpy as np
+import pytest
+
+from repro.core import dsl as pom
+from repro.core.astbuild import build_ast
+from repro.core.backend_jax import compile_jax
+from repro.core.graph_ir import (GraphError, GraphIR, eliminate_dead_ops,
+                                 fuse_ops, op_structural_key,
+                                 share_structural_memos)
+
+
+def _elementwise_chain(n=8):
+    """b = a*2; c = b+1  (distance-0 producer/consumer, fusible)."""
+    with pom.function("chain") as f:
+        i = pom.var("i", 0, n)
+        i2 = pom.var("i2", 0, n)
+        a = pom.placeholder("a", (n,))
+        b = pom.placeholder("b", (n,))
+        c = pom.placeholder("c", (n,))
+        pom.compute("mul", [i], a(i) * 2.0, b(i))
+        pom.compute("add", [i2], b(i2) + 1.0, c(i2))
+    return f
+
+
+def _stencil_chain(n=10):
+    """bx = avg(img row); out reads bx(i2-1..i2+1) -> fusion illegal."""
+    with pom.function("blur") as f:
+        i, j = pom.var("i", 0, n), pom.var("j", 1, n - 1)
+        i2, j2 = pom.var("i2", 1, n - 1), pom.var("j2", 1, n - 1)
+        img = pom.placeholder("img", (n, n))
+        bx = pom.placeholder("bx", (n, n))
+        out = pom.placeholder("out", (n, n))
+        pom.compute("blurx", [i, j],
+                    0.33333 * (img(i, j - 1) + img(i, j) + img(i, j + 1)),
+                    bx(i, j))
+        pom.compute("blury", [i2, j2],
+                    0.33333 * (bx(i2 - 1, j2) + bx(i2, j2) + bx(i2 + 1, j2)),
+                    out(i2, j2))
+    return f
+
+
+# --------------------------------------------------------------------------
+# construction + round-trip
+# --------------------------------------------------------------------------
+def test_graph_edges_from_dataflow():
+    f = _elementwise_chain()
+    g = GraphIR.from_function(f.fn)
+    assert [(p, c, a) for p, c, a in g.edges()] == [("mul", "add", "b")]
+    assert g.op("add").producers == [g.op("mul").uid]
+    assert g.outputs == {"b", "c"}
+
+
+def test_roundtrip_preserves_semantics():
+    n = 8
+    f = _elementwise_chain(n)
+    g = GraphIR.from_function(f.fn)
+    g.verify()
+    fn2 = g.to_function(rebuild=True)
+    assert [s.name for s in fn2.statements] == [s.name for s in f.fn.statements]
+    a0 = np.arange(n, dtype=float)
+    out1 = compile_jax(f.fn, build_ast(f.fn))({"a": a0})
+    out2 = compile_jax(fn2, build_ast(fn2))({"a": a0})
+    np.testing.assert_allclose(out1["c"], a0 * 2.0 + 1.0, rtol=1e-12)
+    np.testing.assert_allclose(out2["c"], out1["c"], rtol=1e-12)
+    # identity lowering: untouched graph returns the original function
+    assert g.to_function() is f.fn
+
+
+def test_roundtrip_gemm_through_pipeline_stages():
+    n = 8
+    with pom.function("gemm") as f:
+        i, j, k = pom.var("i", 0, n), pom.var("j", 0, n), pom.var("k", 0, n)
+        A = pom.placeholder("A", (n, n))
+        B = pom.placeholder("B", (n, n))
+        C = pom.placeholder("C", (n, n))
+        pom.compute("s", [k, i, j], A(i, j) + B(i, k) * C(k, j), A(i, j))
+    g = GraphIR.from_function(f.fn)
+    g.verify()
+    fn2 = g.to_function(rebuild=True)
+    rng = np.random.default_rng(0)
+    b, c = rng.normal(size=(n, n)), rng.normal(size=(n, n))
+    out = compile_jax(fn2, build_ast(fn2))({"A": np.zeros((n, n)), "B": b, "C": c})
+    np.testing.assert_allclose(out["A"], b @ c, rtol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# dead-op elimination
+# --------------------------------------------------------------------------
+def test_dce_removes_unreachable_op():
+    n = 8
+    with pom.function("dead") as f:
+        i = pom.var("i", 0, n)
+        i2 = pom.var("i2", 0, n)
+        a = pom.placeholder("a", (n,))
+        tmp = pom.placeholder("tmp", (n,))
+        out = pom.placeholder("out", (n,))
+        pom.compute("dangling", [i], a(i) * 3.0, tmp(i))
+        pom.compute("live", [i2], a(i2) + 1.0, out(i2))
+    g = GraphIR.from_function(f.fn, outputs=["out"])
+    removed = eliminate_dead_ops(g)
+    assert removed == ["dangling"]
+    assert [o.name for o in g.ops] == ["live"]
+    g.verify()
+    fn2 = g.to_function()
+    assert [s.name for s in fn2.statements] == ["live"]
+    out1 = compile_jax(fn2, build_ast(fn2))({"a": np.arange(n, dtype=float)})
+    np.testing.assert_allclose(out1["out"], np.arange(n) + 1.0)
+
+
+def test_dce_keeps_transitive_producers():
+    n = 8
+    with pom.function("chain3") as f:
+        i = pom.var("i", 0, n)
+        i2 = pom.var("i2", 0, n)
+        a = pom.placeholder("a", (n,))
+        t = pom.placeholder("t", (n,))
+        out = pom.placeholder("out", (n,))
+        pom.compute("p", [i], a(i) * 2.0, t(i))
+        pom.compute("c", [i2], t(i2) + 1.0, out(i2))
+    g = GraphIR.from_function(f.fn, outputs=["out"])
+    assert eliminate_dead_ops(g) == []
+    assert len(g.ops) == 2
+
+
+def test_dce_keeps_after_anchor_and_user_fusion_spec():
+    """A live op's `after` target must survive DCE even when its array is
+    not an output: fusion specs are program semantics, and DCE must not
+    mutate the shared statements of the source function."""
+    n = 8
+    with pom.function("anchored") as f:
+        i = pom.var("i", 0, n)
+        i2 = pom.var("i2", 0, n)
+        a = pom.placeholder("a", (n,))
+        t = pom.placeholder("t", (n,))
+        out = pom.placeholder("out", (n,))
+        p = pom.compute("p", [i], a(i) * 2.0, t(i))
+        c = pom.compute("c", [i2], a(i2) + 1.0, out(i2))
+        c.after(p, 0)
+    g = GraphIR.from_function(f.fn, outputs=["out"])
+    assert eliminate_dead_ops(g) == []        # p anchors c's fusion spec
+    assert f.fn.stmt("c").after_spec is not None
+    g.verify()
+
+
+def test_dce_default_outputs_conservative():
+    f = _elementwise_chain()
+    g = GraphIR.from_function(f.fn)     # outputs default to every written array
+    assert eliminate_dead_ops(g) == []
+
+
+# --------------------------------------------------------------------------
+# fusion legality vs. dependences
+# --------------------------------------------------------------------------
+def test_fuse_legal_chain_gets_fused_and_stays_correct():
+    n = 8
+    f = _elementwise_chain(n)
+    g = GraphIR.from_function(f.fn)
+    actions = fuse_ops(g)
+    assert actions == ["fuse add after mul at level 0"]
+    add = f.fn.stmt("add")
+    assert add.after_spec is not None and add.after_spec[0].name == "mul"
+    # fused AST shares the single loop, and semantics are unchanged
+    ast = build_ast(f.fn)
+    from repro.core.loop_ir import for_nodes
+    assert len(for_nodes(ast)) == 1
+    a0 = np.arange(n, dtype=float)
+    out = compile_jax(f.fn, ast)({"a": a0})
+    np.testing.assert_allclose(out["c"], a0 * 2.0 + 1.0, rtol=1e-12)
+
+
+def test_fuse_rejected_when_dependence_negative():
+    """blury reads bx(i2+1, .): fusing any loop would run the consumer
+    before its producer instance -> the pass must leave them distributed."""
+    f = _stencil_chain()
+    g = GraphIR.from_function(f.fn)
+    assert fuse_ops(g) == []
+    assert f.fn.stmt("blury").after_spec is None
+
+
+def test_fused_program_passes_poly_verifier_and_unsound_spec_fails():
+    from repro.core.pipeline import VerifyError, verify_polyhedral
+    from repro.core import transforms as T
+    f = _elementwise_chain()
+    g = GraphIR.from_function(f.fn)
+    fuse_ops(g)
+    assert g.fused == [("add", "mul", 0)]
+    verify_polyhedral(f.fn, fused=g.fused)      # legal fusion verifies clean
+    # force an illegal fusion on the stencil chain: verifier must object
+    f2 = _stencil_chain()
+    T.set_after(f2.fn.stmt("blury"), f2.fn.stmt("blurx"), 1)
+    with pytest.raises(VerifyError):
+        verify_polyhedral(f2.fn, fused=[("blury", "blurx", 1)])
+
+
+# --------------------------------------------------------------------------
+# CSE sharing classes
+# --------------------------------------------------------------------------
+def test_cse_groups_structurally_identical_ops():
+    from benchmarks.workloads import mm3
+    f = mm3(16)
+    g = GraphIR.from_function(f.fn)
+    classes = share_structural_memos(g)
+    multi = [m for m in classes.values() if len(m) > 1]
+    # 3MM's three matmuls are the same computation modulo array/iterator
+    # renaming -> one sharing class (one polyhedral analysis for all three)
+    assert any({"s1", "s2", "s3"} <= set(m) for m in multi)
+
+
+def test_cse_distinguishes_different_bodies():
+    n = 8
+    with pom.function("two") as f:
+        i = pom.var("i", 0, n)
+        i2 = pom.var("i2", 0, n)
+        a = pom.placeholder("a", (n,))
+        b = pom.placeholder("b", (n,))
+        c = pom.placeholder("c", (n,))
+        pom.compute("x", [i], a(i) * 2.0, b(i))
+        pom.compute("y", [i2], a(i2) + 2.0, c(i2))
+    assert (op_structural_key(f.fn.stmt("x"))
+            != op_structural_key(f.fn.stmt("y")))
+
+
+def test_cse_key_invariant_under_renaming():
+    def make(iname, arrs):
+        with pom.function("f_" + iname) as f:
+            i = pom.var(iname, 0, 8)
+            a = pom.placeholder(arrs[0], (8,))
+            b = pom.placeholder(arrs[1], (8,))
+            pom.compute("s", [i], a(i) * 2.0, b(i))
+        return f.fn.stmt("s")
+    assert (op_structural_key(make("i", ("a", "b")))
+            == op_structural_key(make("q", ("u", "v"))))
+
+
+# --------------------------------------------------------------------------
+# graph verifier catches corrupted IR
+# --------------------------------------------------------------------------
+def test_verifier_rejects_broken_subst():
+    f = _elementwise_chain()
+    g = GraphIR.from_function(f.fn)
+    del f.fn.stmt("mul").iter_subst["i"]
+    with pytest.raises(GraphError):
+        g.verify()
+
+
+def test_verifier_rejects_unbounded_domain():
+    f = _elementwise_chain()
+    g = GraphIR.from_function(f.fn)
+    s = f.fn.stmt("add")
+    s.domain.constraints[:] = s.domain.constraints[:1]   # drop the upper bound
+    with pytest.raises(GraphError):
+        g.verify()
+
+
+def test_verifier_rejects_dangling_after():
+    f = _elementwise_chain()
+    g = GraphIR.from_function(f.fn)
+    # `after` target that is not part of the graph
+    with pom.function("other") as fo:
+        i = pom.var("i", 0, 4)
+        z = pom.placeholder("z", (4,))
+        alien = pom.compute("alien", [i], z(i) + 0.0, z(i))
+    from repro.core import transforms as T
+    T.set_after(f.fn.stmt("add"), alien.stmt, 0)
+    with pytest.raises(GraphError):
+        g.verify()

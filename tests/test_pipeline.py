@@ -1,0 +1,263 @@
+"""PassManager pipeline: per-stage verifiers, backend parity, IR dumps.
+
+Covers the acceptance criteria of the three-level-IR refactor:
+  * ``compile(fn, target=...)`` parity across hls / jax / pallas on GEMM;
+  * per-stage verifiers pass on every benchmark workload;
+  * verifiers catch deliberately corrupted IR at each level;
+  * ``POM_DUMP_IR`` emits stage dumps;
+  * the O(n) ``_program_order`` is exactly equivalent to the old
+    quadratic placement.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from benchmarks import workloads as W
+from repro.core import caching
+from repro.core import dsl as pom
+from repro.core.pipeline import (PassManager, PipelineContext, BuildGraph,
+                                 BuildLoopIR, VerifyError, VerifyGraph,
+                                 VerifyLoopIR, VerifyPoly, LowerToPoly,
+                                 compile, verify_loop_ir, verify_polyhedral)
+
+WORKLOADS = {
+    "gemm": lambda: W.gemm(16), "bicg": lambda: W.bicg(16),
+    "gesummv": lambda: W.gesummv(16), "2mm": lambda: W.mm2(12),
+    "3mm": lambda: W.mm3(12), "jacobi1d": lambda: W.jacobi1d(24, 3),
+    "jacobi2d": lambda: W.jacobi2d(8, 2), "heat1d": lambda: W.heat1d(24, 3),
+    "seidel": lambda: W.seidel(8, 2), "edge_detect": lambda: W.edge_detect(10),
+    "gaussian": lambda: W.gaussian(10), "blur": lambda: W.blur(10),
+    "conv": lambda: W.conv_nest("conv", 4, 3, 5, 5),
+}
+
+
+def _sched_gemm(n=32, t=8):
+    """Pallas-lowerable GEMM schedule (tiled, inner tiles fully unrolled)."""
+    with pom.function("gemm") as f:
+        i, j, k = pom.var("i", 0, n), pom.var("j", 0, n), pom.var("k", 0, n)
+        A = pom.placeholder("A", (n, n))
+        B = pom.placeholder("B", (n, n))
+        C = pom.placeholder("C", (n, n))
+        s = pom.compute("s", [i, j, k], A(i, j) + B(i, k) * C(k, j), A(i, j))
+    s.tile("i", "j", t, t, "i0", "j0", "i1", "j1")
+    s.split("k", t, "k0", "k1")
+    s.stmt.domain = s.stmt.domain.permute(["i0", "j0", "k0", "i1", "j1", "k1"])
+    s.unroll("i1", t)
+    s.unroll("j1", t)
+    s.unroll("k1", t)
+    s.pipeline("k0", 1)
+    return f
+
+
+# --------------------------------------------------------------------------
+# verifiers pass on every benchmark workload
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_verifiers_pass_on_workload(name):
+    # compile runs graph, poly and loop verifiers; raising = failure
+    code = compile(WORKLOADS[name]().fn, target="hls")
+    assert "void" in code
+
+
+@pytest.mark.parametrize("name", ["gemm", "bicg", "seidel"])
+def test_verifiers_pass_after_dse(name):
+    from repro.core.dse import auto_dse
+    res = auto_dse(WORKLOADS[name]().fn, max_parallel=8)
+    assert res.report.feasible
+
+
+# --------------------------------------------------------------------------
+# backend parity on GEMM
+# --------------------------------------------------------------------------
+def test_compile_parity_hls_jax_pallas_gemm():
+    n, t = 32, 8
+    rng = np.random.default_rng(0)
+    b = rng.normal(size=(n, n)).astype(np.float32)
+    c = rng.normal(size=(n, n)).astype(np.float32)
+    zero = np.zeros((n, n), np.float32)
+
+    code = compile(_sched_gemm(n, t).fn, target="hls")
+    assert "#pragma HLS pipeline II=1" in code
+    assert "#pragma HLS unroll factor=8" in code
+
+    run_jax = compile(_sched_gemm(n, t).fn, target="jax")
+    out_jax = run_jax({"A": zero.copy(), "B": b, "C": c})
+
+    run_pal = compile(_sched_gemm(n, t).fn, target="pallas", interpret=True)
+    out_pal = run_pal({"A": zero.copy(), "B": b, "C": c})
+
+    np.testing.assert_allclose(out_jax["A"], b @ c, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out_pal["A"]), out_jax["A"],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_codegen_routes_through_pipeline():
+    f = _sched_gemm(16, 4)
+    code = f.codegen("hls")
+    assert "void gemm" in code
+    run = f.codegen("pallas", interpret=True)
+    out = run({"A": np.zeros((16, 16), np.float32),
+               "B": np.eye(16, dtype=np.float32),
+               "C": np.eye(16, dtype=np.float32)})
+    np.testing.assert_allclose(np.asarray(out["A"]), np.eye(16), atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# verifiers catch corrupted IR
+# --------------------------------------------------------------------------
+def test_poly_verifier_catches_reversed_dependence():
+    n = 6
+    with pom.function("bad") as f:
+        i, j = pom.var("i", 1, n - 1), pom.var("j", 1, n - 1)
+        A = pom.placeholder("A", (n, n))
+        s = pom.compute("s", [i, j], A(i - 1, j + 1) * 2.0 + 3.0, A(i, j))
+    # bypass the transform-level legality check: permute the domain raw
+    s.stmt.domain = s.stmt.domain.permute(["j", "i"])
+    with pytest.raises(VerifyError):
+        verify_polyhedral(f.fn)
+
+
+def test_poly_verifier_catches_lost_bound():
+    f = WORKLOADS["gemm"]()
+    s = f.fn.stmt("s")
+    s.domain.constraints[:] = s.domain.constraints[:-1]
+    with pytest.raises(VerifyError):
+        verify_polyhedral(f.fn)
+
+
+def test_loop_verifier_catches_corrupt_bounds():
+    from repro.core.astbuild import build_ast
+    from repro.core.loop_ir import for_nodes
+    from repro.core.affine import Bound, LinExpr
+
+    f = WORKLOADS["gemm"]()
+    ast = build_ast(f.fn)
+    verify_loop_ir(f.fn, ast)                       # clean AST verifies
+    fnode = for_nodes(ast)[0]
+    fnode.lo.bounds = [Bound(LinExpr.cst(100), 1)]  # lo=100 > hi -> negative trip
+    with pytest.raises(VerifyError):
+        verify_loop_ir(f.fn, ast)
+
+
+def test_loop_verifier_catches_missing_statement():
+    from repro.core.astbuild import build_ast
+    f = WORKLOADS["bicg"]()
+    ast = build_ast(f.fn)
+    with pom.function("other") as fo:
+        i = pom.var("i", 0, 4)
+        z = pom.placeholder("z", (4,))
+        pom.compute("ghost", [i], z(i) + 0.0, z(i))
+    with pytest.raises(VerifyError):
+        verify_loop_ir(fo.fn, ast)                  # ghost never emitted
+
+
+def test_graph_verifier_runs_in_pipeline():
+    f = WORKLOADS["gemm"]()
+    del f.fn.stmt("s").iter_subst["i"]
+    ctx = PipelineContext(fn=f.fn)
+    pm = PassManager([BuildGraph(), VerifyGraph()])
+    with pytest.raises(VerifyError):
+        pm.run(ctx)
+
+
+# --------------------------------------------------------------------------
+# POM_DUMP_IR hook
+# --------------------------------------------------------------------------
+def test_dump_hook_emits_stages(capsys):
+    compile(WORKLOADS["bicg"]().fn, target="hls", dump="all")
+    err = capsys.readouterr().err
+    for stage in ("[graph]", "[poly]", "[loops]", "[backend]"):
+        assert f"POM_DUMP_IR {stage}" in err
+    assert "domain" in err and "for " in err
+
+
+def test_dump_hook_single_stage(capsys):
+    compile(WORKLOADS["gemm"]().fn, target="hls", dump="loops")
+    err = capsys.readouterr().err
+    assert "[loops]" in err and "[poly]" not in err
+
+
+# --------------------------------------------------------------------------
+# verification is counter-neutral
+# --------------------------------------------------------------------------
+def test_verify_passes_leave_counters_untouched():
+    f = WORKLOADS["bicg"]()
+    ctx = PipelineContext(fn=f.fn)
+    PassManager([BuildGraph(), LowerToPoly(), BuildLoopIR()]).run(ctx)
+    caching.reset_counts()
+    before = dict(caching.COUNTS)
+    PassManager([VerifyGraph(), VerifyPoly(), VerifyLoopIR()]).run(ctx)
+    assert caching.COUNTS == before
+
+
+# --------------------------------------------------------------------------
+# O(n) program order == old quadratic placement
+# --------------------------------------------------------------------------
+class _FakeStmt:
+    _uid = 10 ** 9              # clear of real Statement uids
+
+    def __init__(self, name):
+        self.name = name
+        self.uid = _FakeStmt._uid
+        _FakeStmt._uid += 1
+        self.after_spec = None
+
+
+class _FakeFn:
+    def __init__(self, stmts):
+        self.statements = stmts
+
+
+def _old_program_order(fn):
+    """The pre-refactor quadratic reference implementation."""
+    order, placed = [], set()
+
+    def place(s):
+        if s.uid in placed:
+            return
+        if s.after_spec is not None:
+            place(s.after_spec[0])
+            idx = order.index(s.after_spec[0])
+            j = idx + 1
+            while j < len(order) and order[j].after_spec is not None \
+                    and order[j].after_spec[0] is s.after_spec[0]:
+                j += 1
+            order.insert(j, s)
+        else:
+            order.append(s)
+        placed.add(s.uid)
+
+    for s in fn.statements:
+        place(s)
+    return order
+
+
+def test_program_order_matches_quadratic_reference():
+    from repro.core.astbuild import _program_order
+    rng = random.Random(7)
+    for _ in range(500):
+        n = rng.randint(1, 16)
+        stmts = [_FakeStmt(f"s{i}") for i in range(n)]
+        for i, s in enumerate(stmts):
+            if i and rng.random() < 0.6:
+                s.after_spec = (stmts[rng.randrange(i)], rng.randint(0, 2))
+        rng.shuffle(stmts)
+        fn = _FakeFn(stmts)
+        expect = [s.name for s in _old_program_order(fn)]
+        got = [s.name for s in _program_order(fn)]
+        assert got == expect
+
+
+def test_program_order_linear_on_wide_function():
+    """500 statements, heavy `after` fan-in: must stay well under a second."""
+    import time
+    from repro.core.astbuild import _program_order
+    stmts = [_FakeStmt(f"w{i}") for i in range(500)]
+    for i in range(1, 500):
+        stmts[i].after_spec = (stmts[(i - 1) // 2], 0)
+    fn = _FakeFn(stmts)
+    t0 = time.perf_counter()
+    out = _program_order(fn)
+    assert len(out) == 500
+    assert time.perf_counter() - t0 < 1.0
