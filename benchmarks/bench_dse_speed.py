@@ -33,6 +33,16 @@ pattern (unoptimized report + full-budget DSE + split-budget DSE over a
 ResNet-style stack with repeated layer shapes) — the exact load that made
 the ``image`` suite too slow for fast mode before this engine existed.
 
+Search-strategy columns (PR 3): each workload is additionally searched
+with every registered stage-2 strategy — ``greedy``, ``beam:2``,
+``parallel:2`` — recording wall-seconds *and* best design cost (summed
+report latency), so the snapshot tracks search **quality** alongside
+search speed.  The ``fusion_prepass`` section runs graph-level fusion
+(``graph_passes=("fuse",)``) ahead of DSE on the multi-statement
+workloads and records the final cost against the default flow, where
+stage 1 distributes conflicting fusion groups and conservatively
+re-fuses (the paper's split-interchange-merge).
+
 Emits ``BENCH_dse_speed.json`` next to the repo root for snapshot diffing.
 """
 from __future__ import annotations
@@ -46,7 +56,7 @@ from repro.core import caching
 from repro.core.cost_model import XC7Z020, HlsModel
 from repro.core.dse import auto_dse
 
-from .workloads import bicg, conv_nest, gemm, mm3
+from .workloads import bicg, conv_nest, gemm, mm2, mm3
 
 # ResNet18-style critical-layer sub-stack (out_ch, in_ch, H=W) with the
 # repetition pattern real nets have; sized to keep the suite fast.
@@ -95,6 +105,39 @@ def _run_workload(builders: List[Callable], max_parallel: int,
             "latencies": latencies}
 
 
+# search strategies measured per workload: label -> auto_dse kwargs
+STRATEGY_SPECS: List[Tuple[str, Dict]] = [
+    ("greedy", {}),
+    ("beam2", {"strategy": "beam", "beam_width": 2}),
+    ("parallel2", {"strategy": "parallel", "workers": 2}),
+]
+
+
+def _measure_strategies(builders: List[Callable],
+                        max_parallel: int) -> Dict[str, Dict]:
+    """One full-budget DSE per strategy per function (cold caches per
+    strategy so the wall times are comparable): wall-seconds + best cost."""
+    out: Dict[str, Dict] = {}
+    for label, kw in STRATEGY_SPECS:
+        caching.clear_all()
+        caching.reset_counts()
+        t0 = time.perf_counter()
+        cost = 0
+        resources: Dict[str, float] = {}
+        for build in builders:
+            res = auto_dse(build(), max_parallel=max_parallel, **kw)
+            cost += res.report.latency
+            for k, v in res.report.resource_totals().items():
+                resources[k] = resources.get(k, 0) + v
+        out[label] = {"seconds": round(time.perf_counter() - t0, 3),
+                      "best_cost": cost, "resources": resources}
+    out["beam_cost_le_greedy"] = (
+        out["beam2"]["best_cost"] <= out["greedy"]["best_cost"])
+    out["parallel_identical_to_greedy"] = (
+        out["parallel2"]["best_cost"] == out["greedy"]["best_cost"])
+    return out
+
+
 def measure(name: str, builders: List[Callable], max_parallel: int = 256,
             dnn_style: bool = False) -> Dict:
     caching.clear_all()
@@ -118,6 +161,31 @@ def measure(name: str, builders: List[Callable], max_parallel: int = 256,
         "analysis_eval_reduction": round(
             base["analysis_evals"] / max(inc["analysis_evals"], 1), 2),
         "identical_results": identical,
+        "strategies": _measure_strategies(builders, max_parallel),
+    }
+
+
+def measure_fusion_prepass(name: str, build: Callable,
+                           max_parallel: int = 64) -> Dict:
+    """Graph-level fusion ahead of DSE vs the default flow (stage 1's
+    distribute-then-refuse), same workload, cold caches each."""
+    caching.clear_all()
+    t0 = time.perf_counter()
+    plain = auto_dse(build(), max_parallel=max_parallel)
+    t_plain = time.perf_counter() - t0
+    caching.clear_all()
+    t0 = time.perf_counter()
+    fused = auto_dse(build(), max_parallel=max_parallel,
+                     graph_passes=("fuse",))
+    t_fused = time.perf_counter() - t0
+    return {
+        "workload": name,
+        "stage1_flow_latency": plain.report.latency,
+        "prefuse_flow_latency": fused.report.latency,
+        "stage1_flow_seconds": round(t_plain, 3),
+        "prefuse_flow_seconds": round(t_fused, 3),
+        "prefuse_stage1_actions": fused.stage1_log.actions[:4],
+        "cost_no_worse": fused.report.latency <= plain.report.latency,
     }
 
 
@@ -132,15 +200,22 @@ def run_all() -> List[Dict]:
             for name, builders, mp, dnn in suites]
 
 
+def run_fusion_compare() -> List[Dict]:
+    cases = [("2mm", lambda: mm2(128).fn), ("3mm", lambda: mm3(128).fn)]
+    return [measure_fusion_prepass(name, build) for name, build in cases]
+
+
 def csv_rows() -> List[str]:
     rows = run_all()
-    snap = {"suite": "dse_speed", "results": rows}
+    fusion = run_fusion_compare()
+    snap = {"suite": "dse_speed", "results": rows, "fusion_prepass": fusion}
     path = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_dse_speed.json")
     with open(path, "w") as fh:
         json.dump(snap, fh, indent=2)
     out = []
     for r in rows:
+        strat = r["strategies"]
         out.append(
             f"dse_speed/{r['workload']},{r['incremental_seconds'] * 1e6:.0f},"
             f"wall_speedup={r['wall_speedup']}x;"
@@ -149,5 +224,16 @@ def csv_rows() -> List[str]:
             f"({r['analysis_eval_reduction']}x);"
             f"full_node_evals={r['baseline_full_node_evals']}->"
             f"{r['incremental_full_node_evals']};"
-            f"identical={r['identical_results']}")
+            f"identical={r['identical_results']};"
+            f"greedy_cost={strat['greedy']['best_cost']};"
+            f"beam2_cost={strat['beam2']['best_cost']};"
+            f"beam_le_greedy={strat['beam_cost_le_greedy']};"
+            f"parallel2_identical={strat['parallel_identical_to_greedy']}")
+    for r in fusion:
+        out.append(
+            f"dse_speed/fuse_prepass_{r['workload']},"
+            f"{r['prefuse_flow_seconds'] * 1e6:.0f},"
+            f"stage1_lat={r['stage1_flow_latency']};"
+            f"prefuse_lat={r['prefuse_flow_latency']};"
+            f"no_worse={r['cost_no_worse']}")
     return out

@@ -65,6 +65,73 @@ def clear_all() -> None:
         pallas._LOWER_CACHE.clear()
 
 
+# --------------------------------------------------------------------------
+# counter / memo merge API (parallel candidate evaluation, PR 3)
+# --------------------------------------------------------------------------
+# The process-global name-canonical memo tables, by short name.  Worker
+# processes (forked by ``search.PoolEvaluator``) compute new entries that
+# the parent merges back deterministically; per-statement and per-model
+# caches are handled by ``search`` on top of this API.
+def global_memo_tables() -> Dict[str, dict]:
+    from .affine import _DEPVEC_CACHE
+    from .cost_model import _REC_II_CACHE
+    from .ir import _TRIP_CANON_CACHE
+    from .transforms import _LEGAL_CACHE
+    return {"trip_canon": _TRIP_CANON_CACHE, "legal": _LEGAL_CACHE,
+            "depvec": _DEPVEC_CACHE, "rec_ii": _REC_II_CACHE}
+
+
+def snapshot_memo_keys() -> Dict[str, set]:
+    """Key sets of every global memo table (delta baseline)."""
+    return {name: set(table) for name, table in global_memo_tables().items()}
+
+
+def memo_delta(before: Dict[str, set]) -> Dict[str, Dict]:
+    """Entries added to the global memo tables since ``before``."""
+    out: Dict[str, Dict] = {}
+    for name, table in global_memo_tables().items():
+        old = before.get(name, ())
+        new = {k: v for k, v in table.items() if k not in old}
+        if new:
+            out[name] = new
+    return out
+
+
+def merge_memo_delta(delta: Dict[str, Dict]) -> Dict[str, int]:
+    """Merge a worker's new global-memo entries into this process.
+
+    Returns, per table, the number of entries that were *already present*
+    (computed by an earlier-merged candidate): the caller converts those
+    from evaluations into cache hits so merged counters replay exactly
+    what a serial run would have counted.  Signature keys are structural,
+    so on a key collision both sides hold the identical value — insertion
+    order across workers cannot change any result.
+    """
+    tables = global_memo_tables()
+    converted: Dict[str, int] = {}
+    for name, entries in delta.items():
+        table = tables[name]
+        dup = 0
+        for k, v in entries.items():
+            if k in table:
+                dup += 1
+            else:
+                table[k] = v
+        converted[name] = dup
+    return converted
+
+
+def counts_delta(before: Dict[str, int]) -> Dict[str, int]:
+    return {k: COUNTS[k] - before.get(k, 0) for k in COUNTS}
+
+
+def merge_counts(delta: Dict[str, int]) -> None:
+    """Fold a worker's counter delta into this process's ``COUNTS``."""
+    for k, v in delta.items():
+        if k in COUNTS:
+            COUNTS[k] += v
+
+
 @contextmanager
 def counting_paused():
     """Run a block without perturbing the evaluation counters.

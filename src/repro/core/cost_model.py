@@ -131,6 +131,24 @@ class DesignReport:
             return 1.0
         return max(n.parallelism for n in self.nodes.values())
 
+    # -- resource totals (the Pareto archive's objective axes) ----------------
+    @property
+    def bram18(self) -> int:
+        """BRAM usage in BRAM18 tiles (the paper's device counts them)."""
+        return int(math.ceil(self.bram_bits / 18_000.0))
+
+    @property
+    def resource_vector(self) -> Tuple[int, int]:
+        """(DSP, BRAM18) — the resource axes the design frontier trades
+        against latency in ``search.ParetoArchive``."""
+        return (self.dsp, self.bram18)
+
+    def resource_totals(self) -> Dict[str, float]:
+        """All device-resource totals by name (the per-strategy columns of
+        ``bench_dse_speed`` snapshot these per best design)."""
+        return {"dsp": self.dsp, "lut": self.lut, "ff": self.ff,
+                "bram_bits": self.bram_bits, "bram18": self.bram18}
+
 
 @dataclass
 class CostStats:

@@ -18,6 +18,14 @@ and raise its parallelism degree (tile + pipeline + unroll + array
 partition) step by step until resources run out, it stops being the
 bottleneck, or max parallelism is reached (the exit mechanism of SS VI-B).
 
+Stage 2 is pluggable (PR 3): the searcher lives in ``search.py`` behind a
+strategy registry — ``greedy`` (the ladder above, bit-identical to the
+pre-subsystem engine), ``beam`` (top-k parallelization states per rung),
+and ``parallel`` (worker-pool candidate evaluation with deterministic
+cache/counter merge).  Select with ``auto_dse(strategy=...)`` or
+``POM_DSE_STRATEGY``; every evaluated design lands in an optional
+``search.ParetoArchive`` (``archive=...`` / ``POM_DUMP_PARETO``).
+
 Incremental evaluation
 ----------------------
 The search loop is memoization-friendly by design and relies on the
@@ -38,51 +46,28 @@ signature-keyed caches in ``ir.py`` / ``transforms.py`` /
   memoized on (iter_subst, unrolls), so a single-statement mutation only
   recomputes that statement's contribution before the cheap max-merge.
 
-Invariants (asserted by ``tests/test_incremental_dse.py``): cached and
-uncached runs produce identical ``DesignReport`` numbers and identical
-action logs on every workload; measured counts live in
-``HlsModel.stats`` / ``DseResult.cost_stats``.
+Invariants (asserted by ``tests/test_incremental_dse.py`` and
+``tests/test_search.py``): cached and uncached runs produce identical
+``DesignReport`` numbers and identical action logs on every workload;
+``strategy="greedy"`` is bit-identical to the pre-subsystem engine;
+measured counts live in ``HlsModel.stats`` / ``DseResult.cost_stats``.
 """
 from __future__ import annotations
 
-import copy
-import math
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .cost_model import CostStats, DesignReport, HlsModel, XC7Z020
-from .depgraph import DepGraph, NodeInfo, build_depgraph
+from .depgraph import NodeInfo
 from .ir import Function, Statement
 from . import transforms as T
-
-
-# --------------------------------------------------------------------------
-# schedule snapshot / restore (search backtracking)
-# --------------------------------------------------------------------------
-def _snapshot(stmt: Statement):
-    return (stmt.domain.copy(), dict(stmt.iter_subst), dict(stmt.unrolls),
-            stmt.pipeline_at, stmt.pipeline_ii, stmt.after_spec)
-
-
-def _restore(stmt: Statement, snap) -> None:
-    stmt.domain, subst, unrolls, pat, pii, after = snap
-    stmt.iter_subst = dict(subst)
-    stmt.unrolls = dict(unrolls)
-    stmt.pipeline_at, stmt.pipeline_ii, stmt.after_spec = pat, pii, after
-
-
-def _snapshot_fn(fn: Function):
-    return {s.uid: _snapshot(s) for s in fn.statements}, \
-        {ph.name: dict(ph.partitions) for ph in fn.placeholders.values()}
-
-
-def _restore_fn(fn: Function, snap) -> None:
-    stmts, parts = snap
-    for s in fn.statements:
-        _restore(s, stmts[s.uid])
-    for ph in fn.placeholders.values():
-        ph.partitions = dict(parts[ph.name])
+# schedule snapshotting, candidate generation/application, and the search
+# strategies themselves live in the search subsystem; re-exported here for
+# backward compatibility (benchmarks/tests import them from ``dse``)
+from .search import (ParetoArchive, _restore, _restore_fn, _snapshot,
+                     _snapshot_fn, apply_parallel as _apply_parallel,
+                     run_stage2, unroll_candidates as _unroll_candidates)
 
 
 # --------------------------------------------------------------------------
@@ -222,79 +207,8 @@ def stage1(fn: Function, max_iters: int = 6, log: Optional[Stage1Log] = None) ->
 
 
 # --------------------------------------------------------------------------
-# Stage 2: bottleneck-oriented code optimization
+# array partitioning (derived schedule state shared by all strategies)
 # --------------------------------------------------------------------------
-@dataclass
-class DseResult:
-    report: DesignReport
-    stage1_log: Stage1Log
-    actions: List[str]
-    dse_seconds: float
-    tile_sizes: Dict[str, List[int]]     # per statement: unroll factor per dim
-    cost_stats: Optional["CostStats"] = None   # model eval/hit counters
-
-
-def _unroll_candidates(P: int) -> List[Tuple[int, ...]]:
-    """Factor splits of P over the two innermost dims (innermost-only,
-    mixed, and outer-only — the outer-only shape parallelises independent
-    recurrence chains, e.g. BICG's row dimension)."""
-    out = [(P,)]
-    f = 2
-    while f * f <= P * 2 and f <= P:
-        if P % f == 0:
-            out.append((P // f, f))
-        f *= 2
-    if P > 1:
-        out.append((P, 1))
-    return out
-
-
-def _apply_parallel(stmt: Statement, factors: Tuple[int, ...]) -> bool:
-    """Split+unroll the innermost len(factors) dims by ``factors`` (outermost
-    factor first), pipeline the level right above the unrolled loops, and
-    cyclic-partition the touched arrays (paper Fig. 6)."""
-    dims = list(stmt.dims)
-    k = len(factors)
-    if k > len(dims):
-        return False
-    trips = stmt.trip_counts()
-    targets = dims[-k:]
-    for d, f in zip(targets, factors):
-        if f > trips.get(d, 1):
-            return False
-    # split each target dim and unroll the intra-tile loop; strip-mining
-    # never reorders iterations (bijective, lex-order-preserving), so the
-    # ladder skips the redundant legality check the user-facing DSL keeps
-    new_inner: List[str] = []
-    for d, f in zip(targets, factors):
-        if f <= 1:
-            continue
-        d0, d1 = d + "_o", d + "_u"
-        try:
-            T.split(stmt, d, f, d0, d1, check=False)
-        except T.IllegalTransform:
-            return False
-        new_inner.append(d1)
-    # move all intra-tile loops innermost (keeping relative order)
-    order = [x for x in stmt.dims if x not in new_inner] + new_inner
-    try:
-        old = stmt.domain
-        stmt.domain = stmt.domain.permute(order)
-        if not T._legal(stmt):
-            stmt.domain = old
-            return False
-    except Exception:
-        return False
-    for d1 in new_inner:
-        stmt.unrolls[d1] = stmt.trip_counts().get(d1, 1)
-    # pipeline right above the unrolled band
-    outer_dims = [x for x in stmt.dims if x not in new_inner]
-    if outer_dims:
-        stmt.pipeline_at = outer_dims[-1]
-        stmt.pipeline_ii = 1
-    return True
-
-
 def _partition_contribution(stmt: Statement) -> List[Tuple]:
     """This statement's cyclic-partition demands as ordered
     ``(array, dim_no, capped_factor)`` triples — a pure function of
@@ -356,97 +270,32 @@ def refresh_partitions(fn: Function) -> None:
                 ph.partitions[dim] = (f // 2, kind)
 
 
+# --------------------------------------------------------------------------
+# Stage 2: bottleneck-oriented code optimization (delegates to search.py)
+# --------------------------------------------------------------------------
 def stage2(fn: Function, model: Optional[HlsModel] = None,
-           max_parallel: int = 256, actions: Optional[List[str]] = None) -> DesignReport:
-    model = model or HlsModel()
-    actions = actions if actions is not None else []
-    g = build_depgraph(fn)
-    parallel_of: Dict[int, int] = {s.uid: 1 for s in fn.statements}
-    active: List[int] = [s.uid for s in fn.statements]
-    by_uid = {s.uid: s for s in fn.statements}
+           max_parallel: int = 256, actions: Optional[List[str]] = None,
+           strategy=None, archive: Optional[ParetoArchive] = None,
+           **strategy_kw) -> DesignReport:
+    """Run the bottleneck ladder with the selected search strategy.
 
-    # give every node a baseline pipeline (innermost) before the ladder
-    for s in fn.statements:
-        if s.pipeline_at is None and s.dims:
-            s.pipeline_at = s.dims[-1]
-            s.pipeline_ii = 1
+    With the default (greedy) strategy this is bit-identical to the
+    pre-subsystem single-trajectory ladder; see ``search.py`` for the
+    ``beam`` and ``parallel`` alternatives."""
+    return run_stage2(fn, model, max_parallel, actions,
+                      strategy=strategy, archive=archive, **strategy_kw)
 
-    def critical_bottleneck(report: DesignReport) -> Optional[int]:
-        paths = g.paths()
-        if not paths:
-            return None
-        def path_lat(p):
-            return sum(report.nodes[by_uid[u].name].latency for u in p)
-        best = max(paths, key=path_lat)
-        cands = [u for u in best if u in active]
-        if not cands:
-            cands = [u for u in active]
-            if not cands:
-                return None
-        return max(cands, key=lambda u: report.nodes[by_uid[u].name].latency)
 
-    def _snap_node(s):
-        return _snapshot(s)
-
-    def _restore_node(s, snap):
-        _restore(s, snap)
-        refresh_partitions(fn)
-
-    refresh_partitions(fn)
-    report = model.design_report(fn)
-    # per-node schedule before any parallelization: the ladder re-applies the
-    # full factor set from this clean state at every step
-    base_snaps: Dict[int, tuple] = {}
-    guard = 0
-    while active and guard < 64:
-        guard += 1
-        uid = critical_bottleneck(report)
-        if uid is None:
-            break
-        s = by_uid[uid]
-        if uid not in base_snaps:
-            base_snaps[uid] = _snap_node(s)
-        band_cap = 1
-        for d in s.dims:
-            if d not in s.unrolls:
-                band_cap *= s.trip_counts().get(d, 1)
-        band_cap *= parallel_of[uid]
-        P = parallel_of[uid] * 2
-        if P > min(max_parallel, band_cap):
-            active.remove(uid)
-            actions.append(f"exit {s.name}: max parallelism")
-            continue
-        prev = _snap_node(s)
-        best_rep: Optional[DesignReport] = None
-        best_snap = None
-        for factors in _unroll_candidates(P):
-            _restore_node(s, base_snaps[uid])
-            if not _apply_parallel(s, tuple(factors)):
-                continue
-            refresh_partitions(fn)
-            rep = model.design_report(fn)
-            if not rep.feasible:
-                continue
-            if best_rep is None or rep.nodes[s.name].latency < best_rep.nodes[s.name].latency:
-                best_rep = rep
-                best_snap = _snap_node(s)
-        # accept when the bottleneck *node* improves without regressing the
-        # design (paper SS VI-B: optimize the bottleneck, switch when it no
-        # longer is one).
-        if (best_rep is not None
-                and best_rep.nodes[s.name].latency < report.nodes[s.name].latency
-                and best_rep.latency <= report.latency):
-            _restore_node(s, best_snap)
-            parallel_of[uid] = P
-            report = best_rep
-            actions.append(f"parallel {s.name} -> {P} "
-                           f"(lat {report.nodes[s.name].latency}, II {report.nodes[s.name].ii})")
-        else:
-            _restore_node(s, prev)
-            report = model.design_report(fn)
-            active.remove(uid)
-            actions.append(f"exit {s.name}: no feasible improvement at P={P}")
-    return report
+@dataclass
+class DseResult:
+    report: DesignReport
+    stage1_log: Stage1Log
+    actions: List[str]
+    dse_seconds: float
+    tile_sizes: Dict[str, List[int]]     # per statement: unroll factor per dim
+    cost_stats: Optional["CostStats"] = None   # model eval/hit counters
+    archive: Optional[ParetoArchive] = None    # latency/resource frontier
+    strategy: str = "greedy"                   # which searcher produced it
 
 
 # --------------------------------------------------------------------------
@@ -454,37 +303,70 @@ def stage2(fn: Function, model: Optional[HlsModel] = None,
 # --------------------------------------------------------------------------
 def auto_dse(fn: Function, target: str = "fpga", max_parallel: int = 256,
              resources: Dict = XC7Z020,
-             model: Optional[HlsModel] = None) -> DseResult:
+             model: Optional[HlsModel] = None,
+             strategy=None, beam_width: Optional[int] = None,
+             workers: Optional[int] = None,
+             archive=None, graph_passes: Sequence[str] = (),
+             outputs: Optional[Sequence[str]] = None) -> DseResult:
     """Run both DSE stages as a ``pipeline.PassManager`` pipeline:
 
-        build graph → verify graph → CSE classes → lower to poly
+        build graph → verify graph → [dce if outputs narrow the graph]
+        → CSE classes → [extra graph passes] → lower to poly
         → stage 1 → verify poly → stage 2 → verify poly
 
     The per-stage verifiers run counter-paused, so evaluation counts (and
     therefore the DSE-speed benchmarks) are identical to driving the two
     stages directly.  Pass an ``HlsModel`` to control caching
     (``HlsModel(cache=False)`` reproduces the pre-incremental engine) or to
-    read back ``model.stats`` evaluation counters afterwards."""
-    from .pipeline import (BuildGraph, GraphCSE, LowerToPoly, PassManager,
-                           PipelineContext, Stage1DSE, Stage2DSE, VerifyGraph,
-                           VerifyPoly)
+    read back ``model.stats`` evaluation counters afterwards.
+
+    ``strategy`` selects the stage-2 searcher (``"greedy"`` / ``"beam"`` /
+    ``"parallel"``, a ``search.SearchStrategy``, or None → the
+    ``POM_DSE_STRATEGY`` environment variable, default greedy);
+    ``beam_width`` / ``workers`` parameterize it.  ``archive`` collects
+    every evaluated design into a ``search.ParetoArchive`` (pass an
+    instance or ``True``); ``POM_DUMP_PARETO=<path|->`` dumps the
+    frontier after the run.  ``outputs`` names the externally observable
+    arrays (enables graph-level dead-op elimination); ``graph_passes``
+    inserts extra named graph passes (e.g. ``("fuse",)``) ahead of the
+    polyhedral stages."""
+    from .pipeline import (GRAPH_PASSES, BuildGraph, GraphCSE, GraphDCE,
+                           LowerToPoly, PassManager, PipelineContext,
+                           Stage1DSE, Stage2DSE, VerifyGraph, VerifyPoly)
     t0 = time.perf_counter()
     model = model or HlsModel(resources)
+    if archive is True:
+        archive = ParetoArchive()
     ctx = PipelineContext(fn=fn, target=target,
                           options={"max_parallel": max_parallel,
-                                   "model": model})
+                                   "model": model,
+                                   "strategy": strategy,
+                                   "beam_width": beam_width,
+                                   "workers": workers,
+                                   "archive": archive})
     # CSE classification only (warm=()): grouping feeds the dump/debug
     # surface while the name-canonical memos themselves are populated on
     # first use, keeping the engines' evaluation counts untouched.
-    PassManager([BuildGraph(), VerifyGraph(), GraphCSE(warm=()),
-                 LowerToPoly(), Stage1DSE(), VerifyPoly(),
-                 Stage2DSE(), VerifyPoly()]).run(ctx)
+    passes = [BuildGraph(outputs), VerifyGraph()]
+    if outputs is not None:
+        passes.append(GraphDCE())
+    passes.append(GraphCSE(warm=()))
+    for name in graph_passes:
+        passes.append(GRAPH_PASSES[name]())
+    passes += [LowerToPoly(), Stage1DSE(), VerifyPoly(),
+               Stage2DSE(), VerifyPoly()]
+    PassManager(passes).run(ctx)
     log = ctx.records["stage1"]
     report = ctx.records["stage2"]["report"]
     actions = ctx.records["stage2"]["actions"]
+    strat = ctx.records["stage2"].get("strategy", "greedy")
+    # the stage-2 pass creates the archive when POM_DUMP_PARETO asked for
+    # one and none was passed; surface it on the result either way
+    archive = ctx.records["stage2"].get("archive", archive)
     dt = time.perf_counter() - t0
     tiles: Dict[str, List[int]] = {}
     for s in ctx.fn.statements:
         # report unroll factor per current loop dim (1 when untouched)
         tiles[s.name] = [s.unrolls.get(d, 1) for d in s.dims]
-    return DseResult(report, log, actions, dt, tiles, model.stats)
+    return DseResult(report, log, actions, dt, tiles, model.stats,
+                     archive, strat)

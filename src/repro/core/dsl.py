@@ -89,10 +89,20 @@ _current: List["PomFunction"] = []
 
 
 class PomFunction:
-    """User handle around ``ir.Function`` + DSE entry point."""
+    """User handle around ``ir.Function`` + DSE entry point.
 
-    def __init__(self, name: str):
+    ``outputs`` names the externally observable arrays of the function
+    (``pom.function("net", outputs=["out"])``); every other written array
+    is an internal temporary, so graph-level dead-op elimination may prune
+    computes that cannot reach an output.  The default (None) keeps the
+    conservative behavior: every written array is an output, nothing is
+    dead.
+    """
+
+    def __init__(self, name: str, outputs: Optional[Sequence[str]] = None):
         self.fn = Function(name)
+        self.outputs: Optional[List[str]] = (
+            None if outputs is None else [str(o) for o in outputs])
         self._entered = False
 
     # context manager so computes auto-register
@@ -115,12 +125,14 @@ class PomFunction:
         """paper: f.auto_DSE("PATH") -- run the two-stage DSE engine
         (itself a PassManager pipeline, see ``pipeline``/``dse``)."""
         from .dse import auto_dse
+        kw.setdefault("outputs", self.outputs)
         return auto_dse(self.fn, target=target, **kw)
 
     def codegen(self, backend: str = "hls", **kw):
         """Lower through the three-level pass pipeline to ``backend``
         (``"hls"``, ``"jax"``, or ``"pallas"``)."""
         from .pipeline import compile
+        kw.setdefault("outputs", self.outputs)
         return compile(self.fn, target=backend, **kw)
 
     def compile(self, target: str = "hls", **kw):
@@ -131,8 +143,11 @@ class PomFunction:
         return f"PomFunction({self.fn.name})"
 
 
-def function(name: str) -> PomFunction:
-    return PomFunction(name)
+def function(name: str, outputs: Optional[Sequence[str]] = None) -> PomFunction:
+    """Open a POM function scope; ``outputs`` optionally names the
+    externally observable arrays (enables graph-level dead-op elimination
+    in the pipeline — see ``graph_ir.eliminate_dead_ops``)."""
+    return PomFunction(name, outputs=outputs)
 
 
 # --------------------------------------------------------------------------

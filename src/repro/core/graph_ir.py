@@ -136,6 +136,13 @@ class GraphIR:
         graph-stage verifier of the pass pipeline.
         """
         uids = {o.uid for o in self.ops}
+        written = {o.writes for o in self.ops}
+        for name in sorted(self.outputs):
+            if name not in written:
+                raise GraphError(
+                    f"output {name!r} is not written by any op "
+                    f"(written arrays: {sorted(written)}) — a typo here "
+                    f"would silently dead-code-eliminate the program")
         for o in self.ops:
             s = o.stmt
             dims = s.dims

@@ -259,18 +259,86 @@ class Stage2DSE(Pass):
 
     The candidate ladder evaluates designs through ``options["model"]``
     (an ``HlsModel``) — the pipeline owns the evaluator, the search never
-    reaches into backend internals."""
+    reaches into backend internals.
+
+    The searcher itself is pluggable (``search.py``): ``strategy`` — a
+    registered name (``"greedy"``, ``"beam[:k]"``, ``"parallel[:n]"``) or a
+    ``search.SearchStrategy`` instance — picks it, falling back to
+    ``ctx.options["strategy"]``, then the ``POM_DSE_STRATEGY`` environment
+    variable, then greedy.  The subclasses below register the alternative
+    strategies as their own named passes (``STAGE2_PASSES``)."""
     name, stage, dumps = "dse-stage2", "poly", "poly"
+
+    def __init__(self, strategy=None):
+        self.strategy = strategy
 
     def run(self, ctx: PipelineContext) -> None:
         from .cost_model import HlsModel
-        from .dse import stage2
+        from .search import ParetoArchive, resolve_strategy, run_stage2
         model = ctx.options.get("model") or HlsModel()
         ctx.options["model"] = model
+        archive = ctx.options.get("archive")
+        dump_pareto = os.environ.get("POM_DUMP_PARETO")
+        if archive is True or (archive is None and dump_pareto):
+            archive = ctx.options["archive"] = ParetoArchive()
+        strategy = resolve_strategy(
+            self.strategy if self.strategy is not None
+            else ctx.options.get("strategy"),
+            beam_width=ctx.options.get("beam_width"),
+            workers=ctx.options.get("workers"))
         actions: List[str] = []
-        report = stage2(ctx.fn, model,
-                        ctx.options.get("max_parallel", 256), actions)
-        ctx.records["stage2"] = {"report": report, "actions": actions}
+        report = run_stage2(ctx.fn, model,
+                            ctx.options.get("max_parallel", 256), actions,
+                            strategy=strategy, archive=archive)
+        ctx.records["stage2"] = {"report": report, "actions": actions,
+                                 "strategy": strategy.describe(),
+                                 "archive": archive}
+        if dump_pareto and archive is not None:
+            archive.dump(dump_pareto)
+
+
+class Stage2BeamDSE(Stage2DSE):
+    """Stage 2 with anchored beam search (``search.BeamSearch``)."""
+    name = "dse-stage2-beam"
+
+    def __init__(self, width: int = 2):
+        super().__init__(f"beam:{width}")
+
+
+class Stage2ParallelDSE(Stage2DSE):
+    """Stage 2 with worker-pool candidate evaluation
+    (``search.ParallelSearch``)."""
+    name = "dse-stage2-parallel"
+
+    def __init__(self, workers: Optional[int] = None):
+        super().__init__(f"parallel:{workers}" if workers else "parallel")
+
+
+# alternative stage-2 searchers, registered as pipeline passes; the key is
+# the strategy name accepted by ``stage2_pass`` / ``POM_DSE_STRATEGY``
+STAGE2_PASSES: Dict[str, Callable[..., Stage2DSE]] = {
+    "greedy": Stage2DSE, "beam": Stage2BeamDSE, "parallel": Stage2ParallelDSE,
+}
+
+
+def stage2_pass(spec: Optional[str] = None) -> Stage2DSE:
+    """Build the stage-2 pass for a strategy spec (``"beam:4"`` etc.).
+
+    ``search.resolve_strategy`` is the single parser/validator of record:
+    it raises immediately — naming the original spec — on unknown names
+    or stray parameters (e.g. ``"greedy:2"``), instead of failing later
+    at pipeline run time."""
+    if spec is None:
+        return Stage2DSE()
+    if not isinstance(spec, str):
+        return Stage2DSE(spec)          # a SearchStrategy instance/class
+    from .search import resolve_strategy
+    resolve_strategy(spec)              # validate eagerly, best error here
+    name, _, arg = spec.partition(":")
+    cls = STAGE2_PASSES[name]
+    if cls is Stage2DSE:
+        return Stage2DSE(spec)
+    return cls(int(arg)) if arg else cls()
 
 
 # --------------------------------------------------------------------------
@@ -469,7 +537,8 @@ def compile(fn, target: str = "hls",
             graph_passes: Sequence[str] = DEFAULT_GRAPH_PASSES,
             outputs: Optional[Sequence[str]] = None,
             dse: bool = False, max_parallel: int = 256,
-            model=None, dump: Optional[str] = None, **backend_kw):
+            model=None, dump: Optional[str] = None,
+            strategy=None, archive=None, **backend_kw):
     """Compile a POM function through the full three-level pipeline.
 
     ``fn`` is an ``ir.Function`` or a DSL ``PomFunction``.  ``target``
@@ -477,19 +546,33 @@ def compile(fn, target: str = "hls",
     ``"jax"`` an executable oracle ``run(arrays) -> dict``, ``"pallas"``
     a TPU-kernel runner with oracle fallback.  ``graph_passes`` names
     graph-level optimizations to run (``"cse"``, ``"dce"``, ``"fuse"``);
-    the default is the always-safe memo-sharing pass.  ``dse=True`` runs
-    the two-stage DSE between the poly verifiers first.  Backend keyword
-    arguments (``top_name``, ``interpret``, …) pass through.
+    the default is the always-safe memo-sharing pass.  When ``outputs``
+    narrows the externally observable arrays, dead-op elimination is
+    prepended automatically (that is what ``outputs`` is for).
+    ``dse=True`` runs the two-stage DSE between the poly verifiers first;
+    ``strategy`` picks the stage-2 searcher (see ``STAGE2_PASSES``) and
+    ``archive`` takes a caller-owned ``search.ParetoArchive`` instance
+    that collects every evaluated design (``compile`` returns only the
+    backend artifact, so pass an instance you keep a reference to — or
+    set ``POM_DUMP_PARETO`` to dump the frontier; ``archive=True`` is
+    only useful through ``auto_dse``, which returns the archive).
+    Backend keyword arguments (``top_name``, ``interpret``, …) pass
+    through.
     """
     real_fn = fn if isinstance(fn, Function) else fn.fn
+    effective = list(graph_passes)
+    if outputs is not None and "dce" not in effective:
+        effective.insert(0, "dce")
     passes: List[Pass] = [BuildGraph(outputs), VerifyGraph()]
-    for name in graph_passes:
+    for name in effective:
         passes.append(GRAPH_PASSES[name]())
     passes += [LowerToPoly(), VerifyPoly()]
     if dse:
-        passes += [Stage1DSE(), VerifyPoly(), Stage2DSE(), VerifyPoly()]
+        passes += [Stage1DSE(), VerifyPoly(), stage2_pass(strategy),
+                   VerifyPoly()]
     passes += [BuildLoopIR(), VerifyLoopIR(), backend_pass(target, **backend_kw)]
     ctx = PipelineContext(fn=real_fn, target=target,
-                          options={"max_parallel": max_parallel, "model": model})
+                          options={"max_parallel": max_parallel, "model": model,
+                                   "archive": archive})
     PassManager(passes, dump=dump).run(ctx)
     return ctx.artifact

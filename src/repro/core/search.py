@@ -1,0 +1,984 @@
+"""Pluggable DSE search subsystem (paper §VI-B, generalized).
+
+``dse.stage2`` used to be a single greedy ladder hard-wired into the DSE
+engine.  This module factors the three concerns of bottleneck-oriented
+search — **candidate generation** (``unroll_candidates`` /
+``apply_parallel``), **candidate evaluation** (serial or a
+``multiprocessing`` worker pool), and **candidate selection** (a
+``SearchStrategy``) — into independently pluggable pieces behind a
+strategy registry:
+
+* ``greedy``   — the paper's ladder, re-expressed on the new interface and
+  bit-identical (schedules, reports, action logs, *and* evaluation
+  counters) to the pre-subsystem engine;
+* ``beam``     — anchored beam search: keep the top-k parallelization
+  states per rung.  The pure-greedy trajectory is pinned into the beam
+  ("anchored"), so the final design is never worse than greedy's, while
+  the other ``k-1`` slots explore runner-up candidates and early-exit
+  branches.  Beams share the schedule-signature-keyed report caches of
+  the incremental engine (PR 1), so revisiting a design another beam
+  already evaluated is a dictionary hit;
+* ``parallel`` — the greedy ladder with the per-rung candidate set
+  evaluated concurrently by forked worker processes.  Each worker
+  evaluates one ``unroll_candidates`` snapshot against a copy-on-write
+  image of the parent's caches; results are merged back **in candidate
+  order** (never completion order), with ``CostStats`` counters and the
+  name-canonical memo tables deduplicated by replay so the merged
+  ``CostStats`` and every evaluation counter equal a serial run's
+  exactly (hit counters can exceed serial's by a few repeated
+  dictionary lookups — see ``_merge_candidate_result``).
+
+Every evaluated design additionally lands in a :class:`ParetoArchive` of
+``(latency, DSP, BRAM18, schedule signature)`` points with
+dominated-point pruning, so a DSE run exports the latency/resource
+*frontier* rather than a single winner (``auto_dse(..., archive=...)``;
+``POM_DUMP_PARETO=<path>`` dumps it as JSON).
+
+Strategies are selected by ``auto_dse(strategy="beam", beam_width=4)``,
+by the ``POM_DSE_STRATEGY`` environment variable (``greedy`` /
+``beam[:k]`` / ``parallel[:n]``), or by registering the matching stage-2
+pass from ``pipeline.STAGE2_PASSES`` directly.
+"""
+from __future__ import annotations
+
+import copy
+import json
+import os
+import sys
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from . import caching
+from .cost_model import CostStats, DesignReport, HlsModel
+from .depgraph import DepGraph, build_depgraph
+from .ir import Function, Statement
+from . import transforms as T
+
+
+# --------------------------------------------------------------------------
+# schedule snapshot / restore (search backtracking)
+# --------------------------------------------------------------------------
+def _snapshot(stmt: Statement):
+    return (stmt.domain.copy(), dict(stmt.iter_subst), dict(stmt.unrolls),
+            stmt.pipeline_at, stmt.pipeline_ii, stmt.after_spec)
+
+
+def _restore(stmt: Statement, snap) -> None:
+    stmt.domain, subst, unrolls, pat, pii, after = snap
+    stmt.iter_subst = dict(subst)
+    stmt.unrolls = dict(unrolls)
+    stmt.pipeline_at, stmt.pipeline_ii, stmt.after_spec = pat, pii, after
+
+
+def _snapshot_fn(fn: Function):
+    return {s.uid: _snapshot(s) for s in fn.statements}, \
+        {ph.name: dict(ph.partitions) for ph in fn.placeholders.values()}
+
+
+def _restore_fn(fn: Function, snap) -> None:
+    stmts, parts = snap
+    for s in fn.statements:
+        _restore(s, stmts[s.uid])
+    for ph in fn.placeholders.values():
+        ph.partitions = dict(parts[ph.name])
+
+
+# --------------------------------------------------------------------------
+# candidate generation
+# --------------------------------------------------------------------------
+def unroll_candidates(P: int) -> List[Tuple[int, ...]]:
+    """Factor splits of P over the two innermost dims (innermost-only,
+    mixed, and outer-only — the outer-only shape parallelises independent
+    recurrence chains, e.g. BICG's row dimension)."""
+    out = [(P,)]
+    f = 2
+    while f * f <= P * 2 and f <= P:
+        if P % f == 0:
+            out.append((P // f, f))
+        f *= 2
+    if P > 1:
+        out.append((P, 1))
+    return out
+
+
+def apply_parallel(stmt: Statement, factors: Tuple[int, ...]) -> bool:
+    """Split+unroll the innermost len(factors) dims by ``factors`` (outermost
+    factor first), pipeline the level right above the unrolled loops, and
+    cyclic-partition the touched arrays (paper Fig. 6)."""
+    dims = list(stmt.dims)
+    k = len(factors)
+    if k > len(dims):
+        return False
+    trips = stmt.trip_counts()
+    targets = dims[-k:]
+    for d, f in zip(targets, factors):
+        if f > trips.get(d, 1):
+            return False
+    # split each target dim and unroll the intra-tile loop; strip-mining
+    # never reorders iterations (bijective, lex-order-preserving), so the
+    # ladder skips the redundant legality check the user-facing DSL keeps
+    new_inner: List[str] = []
+    for d, f in zip(targets, factors):
+        if f <= 1:
+            continue
+        d0, d1 = d + "_o", d + "_u"
+        try:
+            T.split(stmt, d, f, d0, d1, check=False)
+        except T.IllegalTransform:
+            return False
+        new_inner.append(d1)
+    # move all intra-tile loops innermost (keeping relative order)
+    order = [x for x in stmt.dims if x not in new_inner] + new_inner
+    try:
+        old = stmt.domain
+        stmt.domain = stmt.domain.permute(order)
+        if not T._legal(stmt):
+            stmt.domain = old
+            return False
+    except Exception:
+        return False
+    for d1 in new_inner:
+        stmt.unrolls[d1] = stmt.trip_counts().get(d1, 1)
+    # pipeline right above the unrolled band
+    outer_dims = [x for x in stmt.dims if x not in new_inner]
+    if outer_dims:
+        stmt.pipeline_at = outer_dims[-1]
+        stmt.pipeline_ii = 1
+    return True
+
+
+def design_signature(fn: Function) -> Tuple:
+    """Structural signature of the whole design (schedules + partitions);
+    the same tuple the cost model keys its whole-design cache on."""
+    return (tuple(s.schedule_signature() for s in fn.statements),
+            tuple(sorted((ph.name, tuple(sorted(ph.partitions.items())))
+                         for ph in fn.placeholders.values())))
+
+
+# --------------------------------------------------------------------------
+# Pareto archive of evaluated designs
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DesignPoint:
+    """One evaluated design: the archive's objective axes + identity."""
+    latency: int
+    dsp: int
+    bram18: int
+    signature: Tuple
+    strategy: str
+    feasible: bool
+
+    def objectives(self) -> Tuple[int, int, int]:
+        return (self.latency, self.dsp, self.bram18)
+
+    def dominates(self, other: "DesignPoint") -> bool:
+        a, b = self.objectives(), other.objectives()
+        return all(x <= y for x, y in zip(a, b)) and a != b
+
+
+class ParetoArchive:
+    """Archive of every evaluated design with dominated-point pruning.
+
+    Points minimize ``(latency, DSP, BRAM18)``.  ``frontier()`` is the
+    non-dominated set among *feasible* designs; infeasible evaluations are
+    counted but never archived as points.  ``add`` is deduplicated on the
+    design's schedule signature, so cache-hit re-evaluations (stage-2
+    backtracking restores previous designs constantly) cost one set
+    lookup.
+    """
+
+    def __init__(self, keep_dominated: bool = False):
+        self.points: List[DesignPoint] = []      # current non-dominated set
+        self.dominated: List[DesignPoint] = []   # kept only on request
+        self.keep_dominated = keep_dominated
+        self.evaluated = 0                       # distinct designs seen
+        self.infeasible = 0
+        self._seen: set = set()
+
+    def add(self, fn: Function, report: DesignReport,
+            strategy: str = "?") -> Optional[DesignPoint]:
+        """Record one evaluated design; returns the archived point (or None
+        for duplicates / infeasible / dominated-on-arrival designs)."""
+        sig = design_signature(fn)
+        if sig in self._seen:
+            return None
+        self._seen.add(sig)
+        self.evaluated += 1
+        if not report.feasible:
+            self.infeasible += 1
+            return None
+        dsp, bram18 = report.resource_vector
+        pt = DesignPoint(report.latency, dsp, bram18,
+                         sig, strategy, report.feasible)
+        return self._insert(pt)
+
+    def _insert(self, pt: DesignPoint) -> Optional[DesignPoint]:
+        for p in self.points:
+            if p.dominates(pt) or p.objectives() == pt.objectives():
+                if self.keep_dominated:
+                    self.dominated.append(pt)
+                return None
+        survivors, newly_dominated = [], []
+        for p in self.points:
+            (newly_dominated if pt.dominates(p) else survivors).append(p)
+        if self.keep_dominated:
+            self.dominated.extend(newly_dominated)
+        survivors.append(pt)
+        self.points = survivors
+        return pt
+
+    def frontier(self) -> List[DesignPoint]:
+        """Non-dominated feasible designs, latency-ascending."""
+        return sorted(self.points, key=lambda p: p.objectives())
+
+    def best(self) -> Optional[DesignPoint]:
+        front = self.frontier()
+        return front[0] if front else None
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "evaluated": self.evaluated,
+            "infeasible": self.infeasible,
+            "frontier": [
+                {"latency": p.latency, "dsp": p.dsp, "bram18": p.bram18,
+                 "strategy": p.strategy}
+                for p in self.frontier()
+            ],
+        }
+
+    def dump(self, dest: str = "-") -> None:
+        """Write the frontier as JSON to ``dest`` (a path, or ``-`` /
+        ``stderr`` for standard error) — the ``POM_DUMP_PARETO`` hook."""
+        payload = json.dumps(self.to_json(), indent=2)
+        if dest in ("-", "stderr", ""):
+            print(payload, file=sys.stderr)
+        else:
+            with open(dest, "w") as fh:
+                fh.write(payload + "\n")
+
+
+# --------------------------------------------------------------------------
+# search context + ladder state
+# --------------------------------------------------------------------------
+@dataclass
+class SearchContext:
+    """Everything a strategy needs: the design under search, the evaluator
+    model, the budget, and the (optional) Pareto archive."""
+    fn: Function
+    model: HlsModel
+    max_parallel: int = 256
+    archive: Optional[ParetoArchive] = None
+    strategy_name: str = "greedy"
+    g: Optional[DepGraph] = None
+    by_uid: Dict[int, Statement] = field(default_factory=dict)
+
+    def record(self, report: DesignReport) -> None:
+        if self.archive is not None:
+            self.archive.add(self.fn, report, self.strategy_name)
+
+    def design_report(self) -> DesignReport:
+        rep = self.model.design_report(self.fn)
+        self.record(rep)
+        return rep
+
+
+@dataclass
+class Candidate:
+    """One evaluated parallelization candidate of a rung."""
+    factors: Tuple[int, ...]
+    report: DesignReport
+    snap: tuple                       # node snapshot with candidate applied
+
+
+@dataclass
+class RungInfo:
+    """What happened in one ladder rung (consumed by beam branching)."""
+    uid: int
+    P: int
+    prev: tuple                       # node snapshot before the rung
+    cands: List[Candidate]
+    chosen: Optional[Candidate]       # accepted candidate (None = exit)
+
+
+@dataclass
+class LadderState:
+    """One point of the search: a full design plus the ladder's bookkeeping."""
+    parallel_of: Dict[int, int]
+    active: List[int]
+    base_snaps: Dict[int, tuple]
+    report: DesignReport
+    actions: List[str]
+    guard: int = 0
+    lineage: bool = False             # on the pure-greedy trajectory
+    snap: Any = None                  # _snapshot_fn when not live
+    sig: Optional[Tuple] = None
+    last_rung: Optional[RungInfo] = None
+
+    def clone(self) -> "LadderState":
+        return LadderState(dict(self.parallel_of), list(self.active),
+                           dict(self.base_snaps), self.report,
+                           list(self.actions), self.guard, False, self.snap,
+                           self.sig, None)
+
+
+def _refresh_partitions(fn: Function) -> None:
+    from .dse import refresh_partitions
+    refresh_partitions(fn)
+
+
+def _restore_node(fn: Function, stmt: Statement, snap) -> None:
+    _restore(stmt, snap)
+    _refresh_partitions(fn)
+
+
+def _init_ladder(ctx: SearchContext) -> LadderState:
+    """Mirror of the pre-subsystem ``stage2`` preamble (order matters: the
+    evaluation counters of the incremental engine must be bit-identical)."""
+    fn = ctx.fn
+    ctx.g = build_depgraph(fn)
+    parallel_of = {s.uid: 1 for s in fn.statements}
+    active = [s.uid for s in fn.statements]
+    ctx.by_uid = {s.uid: s for s in fn.statements}
+    # give every node a baseline pipeline (innermost) before the ladder
+    for s in fn.statements:
+        if s.pipeline_at is None and s.dims:
+            s.pipeline_at = s.dims[-1]
+            s.pipeline_ii = 1
+    _refresh_partitions(fn)
+    report = ctx.design_report()
+    return LadderState(parallel_of, active, {}, report, [])
+
+
+def _critical_bottleneck(ctx: SearchContext, st: LadderState) -> Optional[int]:
+    paths = ctx.g.paths()
+    if not paths:
+        return None
+
+    def path_lat(p):
+        return sum(st.report.nodes[ctx.by_uid[u].name].latency for u in p)
+
+    best = max(paths, key=path_lat)
+    cands = [u for u in best if u in st.active]
+    if not cands:
+        cands = [u for u in st.active]
+        if not cands:
+            return None
+    return max(cands, key=lambda u: st.report.nodes[ctx.by_uid[u].name].latency)
+
+
+# --------------------------------------------------------------------------
+# candidate evaluation (serial / worker pool)
+# --------------------------------------------------------------------------
+class SerialEvaluator:
+    """Evaluate the rung's candidates in order on the live function —
+    exactly the inner loop of the pre-subsystem greedy ladder."""
+
+    workers = 1
+
+    def evaluate(self, ctx: SearchContext, st: LadderState, s: Statement,
+                 uid: int, P: int) -> List[Candidate]:
+        out: List[Candidate] = []
+        base = st.base_snaps[uid]
+        for factors in unroll_candidates(P):
+            _restore_node(ctx.fn, s, base)
+            if not apply_parallel(s, tuple(factors)):
+                continue
+            _refresh_partitions(ctx.fn)
+            rep = ctx.design_report()
+            out.append(Candidate(tuple(factors), rep, _snapshot(s)))
+        return out
+
+
+# ---- worker-pool evaluation ------------------------------------------------
+# Module-level state handed to forked workers by copy-on-write (set only
+# for the duration of one pool fan-out; never pickled).
+_FORK_STATE: Optional[Tuple] = None
+
+
+def _stmt_cache_tables(s: Statement) -> Dict[str, dict]:
+    return {"trip": s._trip_cache, "acc": s._acc_cache,
+            "selfdep": s._selfdep_cache, "legal": s._legal_cache,
+            "part": s._part_cache}
+
+
+def _model_cache_tables(model: HlsModel) -> Dict[str, dict]:
+    return {"node": model._node_cache, "design": model._design_cache,
+            "expr": model._expr_cache}
+
+
+def _cache_key_snapshot(fn: Function, model: HlsModel) -> Dict:
+    snap = {"global": caching.snapshot_memo_keys(),
+            "stmt": {s.uid: {n: set(t) for n, t in _stmt_cache_tables(s).items()}
+                     for s in fn.statements},
+            "model": {n: set(t) for n, t in _model_cache_tables(model).items()}}
+    return snap
+
+
+def _cache_delta(fn: Function, model: HlsModel, before: Dict) -> Dict:
+    """New cache entries since ``before``, in insertion order per table."""
+    delta: Dict[str, Any] = {"global": caching.memo_delta(before["global"]),
+                             "stmt": {}, "model": {}}
+    for s in fn.statements:
+        olds = before["stmt"][s.uid]
+        per = {}
+        for name, table in _stmt_cache_tables(s).items():
+            new = {k: v for k, v in table.items() if k not in olds[name]}
+            if new:
+                per[name] = new
+        if per:
+            delta["stmt"][s.uid] = per
+    for name, table in _model_cache_tables(model).items():
+        old = before["model"][name]
+        new = {k: v for k, v in table.items() if k not in old}
+        if new:
+            delta["model"][name] = new
+    return delta
+
+
+def _translate_placeholders(fn: Function, delta: Dict) -> None:
+    """Rewrite worker-side Placeholder references in merged cache values to
+    the parent's placeholder objects (matched by name); everything in the
+    engine is name-keyed, but handing back foreign objects would make
+    identity-based reasoning fragile."""
+    def xlat(arr):
+        return fn.placeholders.get(arr.name, arr)
+
+    for per in delta.get("stmt", {}).values():
+        acc = per.get("acc")
+        if acc:
+            for k, (store, loads) in list(acc.items()):
+                acc[k] = ((xlat(store[0]), store[1]),
+                          [(xlat(a), idx) for a, idx in loads])
+        part = per.get("part")
+        if part:
+            for k, triples in list(part.items()):
+                part[k] = [(xlat(a), d, f) for a, d, f in triples]
+
+
+@dataclass
+class _Checkpoint:
+    """Counter + cache-key snapshot for one accounting phase."""
+    counts: Dict[str, int]
+    stats: CostStats
+    keys: Dict
+
+
+def _checkpoint(fn: Function, model: HlsModel) -> _Checkpoint:
+    return _Checkpoint(dict(caching.COUNTS), copy.copy(model.stats),
+                       _cache_key_snapshot(fn, model))
+
+
+def _phase_delta(fn: Function, model: HlsModel, cp: _Checkpoint
+                 ) -> Tuple[Dict[str, int], CostStats, Dict]:
+    counts = caching.counts_delta(cp.counts)
+    st = model.stats
+    stats = CostStats(
+        st.node_evals - cp.stats.node_evals,
+        st.node_cache_hits - cp.stats.node_cache_hits,
+        st.full_node_evals - cp.stats.full_node_evals,
+        st.design_evals - cp.stats.design_evals,
+        st.design_cache_hits - cp.stats.design_cache_hits)
+    return counts, stats, _cache_delta(fn, model, cp.keys)
+
+
+@dataclass
+class _CandidateResult:
+    """Worker result split into two accounting phases: *apply* (restore +
+    split/permute/unroll + partition refresh) and *report* (the
+    ``design_report`` call).  The split lets the parent drop the report
+    phase wholesale when the candidate's design was already evaluated by
+    an earlier candidate — which is exactly what a serial run's
+    whole-design cache hit does."""
+    ok: bool
+    report: Optional[DesignReport]
+    snap: Optional[tuple]
+    apply_counts: Dict[str, int]
+    apply_stats: CostStats
+    apply_delta: Dict
+    report_counts: Optional[Dict[str, int]] = None
+    report_stats: Optional[CostStats] = None
+    report_delta: Optional[Dict] = None
+
+
+def _candidate_eval_task(factors: Tuple[int, ...]) -> _CandidateResult:
+    """Worker-side evaluation of one candidate.  Runs in a freshly forked
+    process (``maxtasksperchild=1``), so the starting cache/counter state is
+    exactly the parent's at fan-out time regardless of scheduling order."""
+    fn, model, uid, base_snap = _FORK_STATE
+    cp0 = _checkpoint(fn, model)
+    s = next(x for x in fn.statements if x.uid == uid)
+    _restore_node(fn, s, base_snap)
+    ok = apply_parallel(s, factors)
+    if ok:
+        _refresh_partitions(fn)
+    apply_counts, apply_stats, apply_delta = _phase_delta(fn, model, cp0)
+    if not ok:
+        return _CandidateResult(False, None, None,
+                                apply_counts, apply_stats, apply_delta)
+    cp1 = _checkpoint(fn, model)
+    rep = model.design_report(fn)
+    report_counts, report_stats, report_delta = _phase_delta(fn, model, cp1)
+    # after_spec references a worker-side Statement copy; the parent
+    # substitutes its own (apply_parallel never changes after_spec)
+    snap = _snapshot(s)[:5] + (None,)
+    return _CandidateResult(True, rep, snap, apply_counts, apply_stats,
+                            apply_delta, report_counts, report_stats,
+                            report_delta)
+
+
+# which cache tables correspond 1:1 to an eval counter: a key collision at
+# merge time converts that eval into a hit.  Per-statement ``trip`` /
+# ``legal`` tables are *not* listed — their entries are inserted on both
+# the eval and the (canonical-table hit) paths, so the conversion is
+# accounted on the global canonical table alone.
+_GLOBAL_CONV = {"trip_canon": "trip", "legal": "legal"}
+_STMT_CONV = {"acc": "access", "selfdep": "selfdep"}
+
+
+def _merge_phase(ctx: SearchContext, delta: Dict,
+                 counts: Dict[str, int], stats: CostStats) -> None:
+    """Replay one phase of a worker result into the parent: insert fresh
+    cache entries, convert entries an earlier-merged candidate already
+    computed from evaluations into hits, then fold the adjusted counters."""
+    _translate_placeholders(ctx.fn, delta)
+    conv = {"trip_canon": 0, "legal": 0, "depvec": 0, "rec_ii": 0,
+            "acc": 0, "selfdep": 0, "node": 0, "design": 0}
+    conv.update(caching.merge_memo_delta(delta.get("global", {})))
+    for uid, per in delta.get("stmt", {}).items():
+        s = ctx.by_uid.get(uid)
+        if s is None:
+            continue
+        tables = _stmt_cache_tables(s)
+        for name, entries in per.items():
+            table = tables[name]
+            for k, v in entries.items():
+                if k in table:
+                    if name in _STMT_CONV:
+                        conv[name] += 1
+                else:
+                    table[k] = v
+    mtables = _model_cache_tables(ctx.model)
+    for name, entries in delta.get("model", {}).items():
+        table = mtables[name]
+        for k, v in entries.items():
+            if k in table:
+                if name in ("node", "design"):
+                    conv[name] += 1
+            else:
+                table[k] = v
+    counts = dict(counts)
+    for key, cnt in {**_GLOBAL_CONV, **_STMT_CONV}.items():
+        counts[f"{cnt}_evals"] -= conv[key]
+        counts[f"{cnt}_hits"] += conv[key]
+    caching.merge_counts(counts)
+    ms = ctx.model.stats
+    ms.node_evals += stats.node_evals - conv["node"]
+    ms.node_cache_hits += stats.node_cache_hits + conv["node"]
+    ms.full_node_evals += stats.full_node_evals - conv["rec_ii"]
+    ms.design_evals += stats.design_evals
+    ms.design_cache_hits += stats.design_cache_hits + conv["design"]
+
+
+def _merge_candidate_result(ctx: SearchContext, res: _CandidateResult) -> None:
+    """Deterministic replay-merge of one worker result into the parent.
+
+    Results are merged in **candidate order** (never completion order).
+    The apply phase is always replayed.  The report phase is replayed only
+    if the candidate's whole-design cache entry is new; when an earlier
+    candidate already produced the identical design (e.g. factor splits
+    ``(2,)`` and ``(1, 2)`` both end up splitting only the innermost dim),
+    a serial run would have served the report from the whole-design cache
+    without recomputing a single node — so the parent drops the worker's
+    redundant report-phase work and books exactly that cache hit.  This is
+    what makes the merged ``CostStats`` and every *eval* counter in
+    ``caching.COUNTS`` equal to a serial run's, not just the search
+    result.  (*Hit* counters may exceed a serial run's by a few percent:
+    a fork-isolated worker re-derives canonical keys whose
+    statement-level entries a serial run short-circuits on — pure
+    dictionary lookups, no analysis work, and never fewer than serial.)
+    """
+    _merge_phase(ctx, res.apply_delta, res.apply_counts, res.apply_stats)
+    if not res.ok:
+        return
+    design_entries = (res.report_delta or {}).get("model", {}).get("design", {})
+    already = [k for k in design_entries if k in ctx.model._design_cache]
+    if already:
+        ms = ctx.model.stats
+        ms.design_evals += res.report_stats.design_evals
+        ms.design_cache_hits += len(already)
+    else:
+        _merge_phase(ctx, res.report_delta, res.report_counts,
+                     res.report_stats)
+
+
+class PoolEvaluator:
+    """Evaluate a rung's candidates concurrently in forked worker processes.
+
+    Requires the ``fork`` start method (Linux): workers inherit the whole
+    incremental-cache state copy-on-write, so each candidate evaluation
+    starts from exactly the serial engine's rung-start state.  Falls back
+    to serial evaluation when ``fork`` is unavailable or ``workers <= 1``.
+    """
+
+    def __init__(self, workers: Optional[int] = None):
+        self.workers = int(workers) if workers else (os.cpu_count() or 1)
+        self._serial = SerialEvaluator()
+
+    @staticmethod
+    def _fork_available() -> bool:
+        import multiprocessing
+        return "fork" in multiprocessing.get_all_start_methods()
+
+    def evaluate(self, ctx: SearchContext, st: LadderState, s: Statement,
+                 uid: int, P: int) -> List[Candidate]:
+        factor_list = [tuple(f) for f in unroll_candidates(P)]
+        if self.workers <= 1 or len(factor_list) < 2 or not self._fork_available():
+            return self._serial.evaluate(ctx, st, s, uid, P)
+        import multiprocessing
+        global _FORK_STATE
+        base = st.base_snaps[uid]
+        _FORK_STATE = (ctx.fn, ctx.model, uid, base)
+        try:
+            mp = multiprocessing.get_context("fork")
+            n = min(self.workers, len(factor_list))
+            with mp.Pool(n, maxtasksperchild=1) as pool:
+                results = pool.map(_candidate_eval_task, factor_list,
+                                   chunksize=1)
+        finally:
+            _FORK_STATE = None
+        out: List[Candidate] = []
+        for factors, res in zip(factor_list, results):
+            _merge_candidate_result(ctx, res)
+            if not res.ok:
+                continue
+            snap = res.snap[:5] + (base[5],)
+            out.append(Candidate(factors, res.report, snap))
+        if ctx.archive is not None:
+            # archive points carry the *candidate's* design signature, so
+            # the candidate schedule must be live on ctx.fn when recorded
+            # (exactly as the serial evaluator records mid-loop); restores
+            # are counter-free and the decision path restores again anyway
+            for c in out:
+                _restore_node(ctx.fn, s, c.snap)
+                ctx.record(c.report)
+        return out
+
+
+# --------------------------------------------------------------------------
+# one ladder rung (shared by greedy / beam / parallel)
+# --------------------------------------------------------------------------
+_GUARD_MAX = 64
+
+
+def _rung(ctx: SearchContext, st: LadderState, evaluator) -> bool:
+    """Advance ``st`` by one rung of the bottleneck ladder (the loop body of
+    the pre-subsystem ``stage2``).  Returns False when the ladder is done."""
+    st.last_rung = None
+    if not st.active or st.guard >= _GUARD_MAX:
+        return False
+    st.guard += 1
+    uid = _critical_bottleneck(ctx, st)
+    if uid is None:
+        return False
+    s = ctx.by_uid[uid]
+    if uid not in st.base_snaps:
+        st.base_snaps[uid] = _snapshot(s)
+    band_cap = 1
+    for d in s.dims:
+        if d not in s.unrolls:
+            band_cap *= s.trip_counts().get(d, 1)
+    band_cap *= st.parallel_of[uid]
+    P = st.parallel_of[uid] * 2
+    if P > min(ctx.max_parallel, band_cap):
+        st.active.remove(uid)
+        st.actions.append(f"exit {s.name}: max parallelism")
+        return True
+    prev = _snapshot(s)
+    cands = evaluator.evaluate(ctx, st, s, uid, P)
+    # pick the candidate that most improves the bottleneck *node* (first
+    # strict improvement wins ties, matching the pre-subsystem ladder)
+    best: Optional[Candidate] = None
+    for c in cands:
+        if not c.report.feasible:
+            continue
+        if best is None or (c.report.nodes[s.name].latency
+                            < best.report.nodes[s.name].latency):
+            best = c
+    # accept when the bottleneck *node* improves without regressing the
+    # design (paper §VI-B: optimize the bottleneck, switch when it no
+    # longer is one).
+    if (best is not None
+            and best.report.nodes[s.name].latency < st.report.nodes[s.name].latency
+            and best.report.latency <= st.report.latency):
+        _restore_node(ctx.fn, s, best.snap)
+        st.parallel_of[uid] = P
+        st.report = best.report
+        st.actions.append(
+            f"parallel {s.name} -> {P} "
+            f"(lat {st.report.nodes[s.name].latency}, "
+            f"II {st.report.nodes[s.name].ii})")
+        st.last_rung = RungInfo(uid, P, prev, cands, best)
+    else:
+        _restore_node(ctx.fn, s, prev)
+        st.report = ctx.design_report()
+        st.active.remove(uid)
+        st.actions.append(f"exit {s.name}: no feasible improvement at P={P}")
+        st.last_rung = RungInfo(uid, P, prev, cands, None)
+    return True
+
+
+# --------------------------------------------------------------------------
+# strategies
+# --------------------------------------------------------------------------
+class SearchStrategy:
+    """Base of the pluggable stage-2 searchers."""
+    name: str = "?"
+
+    def run(self, ctx: SearchContext) -> LadderState:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return self.name
+
+
+STRATEGIES: Dict[str, Callable[..., "SearchStrategy"]] = {}
+
+
+def register_strategy(name: str):
+    def deco(cls):
+        STRATEGIES[name] = cls
+        cls.name = name
+        return cls
+    return deco
+
+
+@register_strategy("greedy")
+class GreedySearch(SearchStrategy):
+    """The paper's single-trajectory bottleneck ladder (pre-subsystem
+    ``stage2``), re-expressed as rung + serial evaluator + accept rule."""
+
+    def __init__(self, evaluator=None):
+        self.evaluator = evaluator or SerialEvaluator()
+
+    def run(self, ctx: SearchContext) -> LadderState:
+        st = _init_ladder(ctx)
+        st.lineage = True
+        while _rung(ctx, st, self.evaluator):
+            pass
+        return st
+
+
+@register_strategy("parallel")
+class ParallelSearch(GreedySearch):
+    """Greedy ladder with pool-parallel candidate evaluation.  With
+    ``workers=1`` this *is* the serial greedy ladder (same code path)."""
+
+    def __init__(self, workers: Optional[int] = None):
+        w = int(workers) if workers else (os.cpu_count() or 1)
+        super().__init__(SerialEvaluator() if w <= 1 else PoolEvaluator(w))
+        self.workers = w
+
+    def describe(self) -> str:
+        return f"parallel:{self.workers}"
+
+
+@register_strategy("beam")
+class BeamSearch(SearchStrategy):
+    """Anchored beam search over ladder states.
+
+    Slot 0 of the beam is pinned to the pure-greedy trajectory (its greedy
+    successor always survives selection), so the final design is provably
+    never worse than ``greedy``'s; the remaining ``width - 1`` slots hold
+    the best other successors by design latency: runner-up candidates of
+    an accepted rung and the early-exit branch (stop optimizing the
+    bottleneck node, spend resources elsewhere).  With ``width=1`` the
+    search degenerates to exactly the greedy trajectory.
+    """
+
+    def __init__(self, width: int = 2, evaluator=None):
+        self.width = max(1, int(width))
+        self.evaluator = evaluator or SerialEvaluator()
+
+    def describe(self) -> str:
+        return f"beam:{self.width}"
+
+    def run(self, ctx: SearchContext) -> LadderState:
+        st = _init_ladder(ctx)
+        st.lineage = True
+        st.snap = _snapshot_fn(ctx.fn)
+        st.sig = design_signature(ctx.fn)
+        live, done = [st], []
+        while live:
+            successors: List[Tuple[int, LadderState]] = []
+            seq = 0
+            for cur in live:
+                _restore_fn(ctx.fn, cur.snap)
+                pre = cur.clone()
+                pre.lineage = False
+                progressed = _rung(ctx, cur, self.evaluator)
+                if not progressed:
+                    done.append(cur)
+                    continue
+                cur.snap = _snapshot_fn(ctx.fn)
+                cur.sig = design_signature(ctx.fn)
+                successors.append((seq, cur))
+                seq += 1
+                if self.width > 1 and cur.last_rung is not None:
+                    for alt in self._branches(ctx, pre, cur.last_rung):
+                        successors.append((seq, alt))
+                        seq += 1
+            live = self._select(successors)
+        best = min(enumerate(done),
+                   key=lambda t: (t[1].report.latency,
+                                  0 if t[1].lineage else 1, t[0]))[1]
+        _restore_fn(ctx.fn, best.snap)
+        return best
+
+    # -- branching ----------------------------------------------------------
+    def _branches(self, ctx: SearchContext, pre: LadderState,
+                  info: RungInfo) -> List[LadderState]:
+        """Alternative successors of one rung, built from the evaluations
+        the rung already paid for (no extra model calls beyond cache hits)."""
+        out: List[LadderState] = []
+        s = ctx.by_uid[info.uid]
+        for c in info.cands:
+            if info.chosen is not None and c is info.chosen:
+                continue
+            if not c.report.feasible:
+                continue
+            if c.report.latency > pre.report.latency:
+                continue
+            if (c.report.nodes[s.name].latency
+                    >= pre.report.nodes[s.name].latency):
+                continue
+            alt = pre.clone()
+            alt.guard = pre.guard + 1
+            # the rung added base_snaps[uid] to the greedy successor AFTER
+            # `pre` was cloned; alts must carry the same clean per-node
+            # base (info.prev == the clean state on a first visit), or a
+            # later rung would re-split on top of this candidate's splits
+            alt.base_snaps.setdefault(info.uid, info.prev)
+            _restore_fn(ctx.fn, pre.snap)
+            _restore_node(ctx.fn, s, c.snap)
+            alt.parallel_of[info.uid] = info.P
+            alt.report = c.report
+            alt.actions.append(
+                f"parallel {s.name} -> {info.P} "
+                f"(lat {c.report.nodes[s.name].latency}, "
+                f"II {c.report.nodes[s.name].ii}) [beam-alt {c.factors}]")
+            alt.snap = _snapshot_fn(ctx.fn)
+            alt.sig = design_signature(ctx.fn)
+            out.append(alt)
+        if info.chosen is not None:
+            # early-exit branch: keep the node at its current parallelism
+            # and let the ladder move to the next bottleneck
+            alt = pre.clone()
+            alt.guard = pre.guard + 1
+            alt.active = [u for u in alt.active if u != info.uid]
+            alt.actions.append(f"exit {s.name}: beam early-exit at "
+                               f"P={pre.parallel_of[info.uid]}")
+            alt.snap = pre.snap
+            alt.sig = pre.sig
+            out.append(alt)
+        return out
+
+    # -- selection ----------------------------------------------------------
+    def _select(self, successors: List[Tuple[int, LadderState]]
+                ) -> List[LadderState]:
+        if not successors:
+            return []
+        keep: List[LadderState] = []
+        seen: set = set()
+
+        def key_of(state: LadderState) -> Tuple:
+            return (state.sig, tuple(sorted(state.active)),
+                    tuple(sorted(state.parallel_of.items())))
+
+        anchored = [s for _, s in successors if s.lineage]
+        if anchored:
+            keep.append(anchored[0])
+            seen.add(key_of(anchored[0]))
+        ranked = sorted(((s.report.latency, seq, s)
+                         for seq, s in successors if not s.lineage),
+                        key=lambda t: (t[0], t[1]))
+        for _, _, s in ranked:
+            if len(keep) >= self.width:
+                break
+            k = key_of(s)
+            if k in seen:
+                continue
+            seen.add(k)
+            keep.append(s)
+        return keep
+
+
+# --------------------------------------------------------------------------
+# strategy resolution + entry point
+# --------------------------------------------------------------------------
+def resolve_strategy(spec=None, beam_width: Optional[int] = None,
+                     workers: Optional[int] = None) -> SearchStrategy:
+    """Turn a strategy spec into a strategy instance.
+
+    ``spec`` may be a :class:`SearchStrategy`, a registered name
+    (``"greedy"``, ``"beam"``, ``"parallel"``), or a parameterized name
+    (``"beam:4"``, ``"parallel:8"``).
+
+    Precedence when ``spec`` is None: a strategy-selecting keyword wins
+    over the ambient environment — ``beam_width`` selects ``beam``, else
+    ``workers`` selects ``parallel`` (the call site is more explicit than
+    ``POM_DSE_STRATEGY``); otherwise the ``POM_DSE_STRATEGY`` environment
+    variable (same syntax) decides; otherwise ``greedy``.  When both a
+    spec and a matching keyword are given, the keyword overrides the
+    spec's ``:k`` suffix.  A ``:k`` suffix on a strategy that takes no
+    parameter is an error, reported against the original spec.
+    """
+    if isinstance(spec, SearchStrategy):
+        return spec
+    if isinstance(spec, type) and issubclass(spec, SearchStrategy):
+        return spec()
+    if spec is None:
+        if beam_width is not None:
+            spec = "beam"
+        elif workers is not None:
+            spec = "parallel"
+        else:
+            spec = os.environ.get("POM_DSE_STRATEGY") or "greedy"
+    name, _, arg = str(spec).partition(":")
+    if name not in STRATEGIES:
+        raise ValueError(f"unknown DSE strategy {name!r} "
+                         f"(registered: {sorted(STRATEGIES)})")
+    if name == "beam":
+        width = beam_width if beam_width is not None else int(arg or 2)
+        return BeamSearch(width=width)
+    if name == "parallel":
+        w = workers if workers is not None else (int(arg) if arg else None)
+        return ParallelSearch(workers=w)
+    if arg:
+        raise ValueError(f"strategy {name!r} takes no ':{arg}' parameter "
+                         f"(got {spec!r})")
+    return STRATEGIES[name]()
+
+
+def run_stage2(fn: Function, model: Optional[HlsModel] = None,
+               max_parallel: int = 256,
+               actions: Optional[List[str]] = None,
+               strategy=None, archive: Optional[ParetoArchive] = None,
+               beam_width: Optional[int] = None,
+               workers: Optional[int] = None) -> DesignReport:
+    """Stage-2 entry point: run the selected search strategy.
+
+    This is what ``dse.stage2`` and the stage-2 pipeline passes call; with
+    the default (greedy) strategy it is bit-identical — schedules, reports,
+    action logs, evaluation counters — to the pre-subsystem ladder.
+    """
+    model = model or HlsModel()
+    strat = resolve_strategy(strategy, beam_width=beam_width, workers=workers)
+    ctx = SearchContext(fn=fn, model=model, max_parallel=max_parallel,
+                        archive=archive, strategy_name=strat.describe())
+    st = strat.run(ctx)
+    if actions is not None:
+        actions.extend(st.actions)
+    return st.report
