@@ -79,6 +79,7 @@ def _run_workload(builders: List[Callable], max_parallel: int,
     half = {k: v / 2 for k, v in XC7Z020.items()}
     t0 = time.perf_counter()
     full_evals = 0
+    analytic_evals = 0
     actions: List[List[str]] = []
     latencies: List[int] = []
     for build in builders:
@@ -96,13 +97,16 @@ def _run_workload(builders: List[Callable], max_parallel: int,
             else:
                 latencies.append(model.design_report(fn).latency)
             full_evals += model.stats.full_node_evals
+            analytic_evals += model.stats.analytic_node_evals
     seconds = time.perf_counter() - t0
     c = caching.COUNTS
     analysis = (c["selfdep_evals"] + c["legal_evals"] + c["trip_evals"]
                 + full_evals)
+    transfers = (c["selfdep_transfers"] + c["legal_transfers"]
+                 + c["trip_transfers"] + analytic_evals)
     return {"seconds": seconds, "full_node_evals": full_evals,
-            "analysis_evals": analysis, "actions": actions,
-            "latencies": latencies}
+            "analysis_evals": analysis, "transfers": transfers,
+            "actions": actions, "latencies": latencies}
 
 
 # search strategies measured per workload: label -> auto_dse kwargs
@@ -160,6 +164,7 @@ def measure(name: str, builders: List[Callable], max_parallel: int = 256,
         "incremental_analysis_evals": inc["analysis_evals"],
         "analysis_eval_reduction": round(
             base["analysis_evals"] / max(inc["analysis_evals"], 1), 2),
+        "incremental_transfers": inc["transfers"],
         "identical_results": identical,
         "strategies": _measure_strategies(builders, max_parallel),
     }
@@ -189,15 +194,81 @@ def measure_fusion_prepass(name: str, build: Callable,
     }
 
 
-def run_all() -> List[Dict]:
-    suites = [
+def _suites() -> List[Tuple]:
+    return [
         ("gemm", [lambda: gemm(512).fn], 256, False),
         ("bicg", [lambda: bicg(512).fn], 256, False),
         ("3mm", [lambda: mm3(256).fn], 256, False),
         ("conv_stack", _conv_builders(), 64, True),
     ]
+
+
+def run_all() -> List[Dict]:
     return [measure(name, builders, mp, dnn)
-            for name, builders, mp, dnn in suites]
+            for name, builders, mp, dnn in _suites()]
+
+
+# --------------------------------------------------------------------------
+# counter-only mode: the CI perf gate
+# --------------------------------------------------------------------------
+def counters_only() -> List[Dict]:
+    """One incremental engine pass per workload, counters only (no
+    uncached baselines, no per-strategy wall-time runs): analysis-eval
+    counts are machine-independent, so this is the cheap regression gate
+    CI compares against the committed snapshot."""
+    out = []
+    for name, builders, mp, dnn in _suites():
+        caching.clear_all()
+        caching.reset_counts()
+        inc = _run_workload(builders, mp, dnn)
+        out.append({"workload": name,
+                    "incremental_analysis_evals": inc["analysis_evals"],
+                    "incremental_full_node_evals": inc["full_node_evals"],
+                    "incremental_transfers": inc["transfers"]})
+    return out
+
+
+def check_against_snapshot(path: str, tolerance: float = 0.10) -> int:
+    """Fail (non-zero) if any workload's ``incremental_analysis_evals``
+    regresses more than ``tolerance`` above the committed snapshot."""
+    with open(path) as fh:
+        snap = {r["workload"]: r for r in json.load(fh)["results"]}
+    failures = 0
+    for row in counters_only():
+        name = row["workload"]
+        ref = snap.get(name)
+        if ref is None:
+            print(f"{name}: not in snapshot, measured "
+                  f"{row['incremental_analysis_evals']} (new workload?)")
+            continue
+        committed = ref["incremental_analysis_evals"]
+        measured = row["incremental_analysis_evals"]
+        limit = int(committed * (1 + tolerance))
+        status = "OK" if measured <= limit else "REGRESSED"
+        if measured > limit:
+            failures += 1
+        print(f"{name}: analysis_evals {measured} vs committed {committed} "
+              f"(limit {limit}) {status}")
+    return failures
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="counter-only run, compared against the committed "
+                         "BENCH_dse_speed.json; exits non-zero on a >10%% "
+                         "analysis-eval regression")
+    ap.add_argument("--snapshot", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_dse_speed.json"))
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    args = ap.parse_args()
+    if args.check:
+        failures = check_against_snapshot(args.snapshot, args.tolerance)
+        raise SystemExit(1 if failures else 0)
+    for line in csv_rows():
+        print(line)
 
 
 def run_fusion_compare() -> List[Dict]:
@@ -237,3 +308,7 @@ def csv_rows() -> List[str]:
             f"prefuse_lat={r['prefuse_flow_latency']};"
             f"no_worse={r['cost_no_worse']}")
     return out
+
+
+if __name__ == "__main__":
+    main()

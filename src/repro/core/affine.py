@@ -544,6 +544,12 @@ class DependenceInfo:
     dependences carried at exactly that level (a polyhedron usually carries
     dependences at several levels — e.g. Seidel carries at t, i AND j).
     ``exists`` is False when the dependence polyhedron is empty.
+
+    ``classes`` is the transfer-algebra view of ``levels``: per carried
+    level, a tuple of per-entry *states* (see ``BasisMap``) precise enough
+    to push the whole info through an affine change of basis without
+    re-running Fourier–Motzkin.  ``None`` when the polyhedron does not fit
+    the supported state algebra — such infos always fall back to FM.
     """
 
     exists: bool
@@ -551,13 +557,39 @@ class DependenceInfo:
     direction: Tuple[str, ...] = ()
     loop_carried_level: Optional[int] = None  # outermost carried level
     levels: Dict[int, Tuple[Optional[int], ...]] = field(default_factory=dict)
+    classes: Optional[Tuple] = None           # transferable class states
 
     def is_uniform(self) -> bool:
         return self.exists and all(d is not None for d in self.distance)
 
+    def transform(self, basis: "BasisMap") -> Optional["DependenceInfo"]:
+        """Push this dependence through an affine change of basis.
+
+        Returns the info FM would compute on the transformed domain, or
+        ``None`` when the transfer is not exact (the caller then falls
+        back to the FM path).  A transfer is refused outright when any
+        dependence class would become lexicographically non-positive —
+        that is a *reordered* dependence, i.e. an illegal transform, and
+        the transformed statement's own dependence set is then not a
+        transfer of this one (use ``transfer_legality`` for the verdict).
+        """
+        if not self.exists or self.classes is None:
+            return None
+        classes = _fold_steps(self.classes, basis)
+        if classes is None or any(rev for (_, rev, _) in classes):
+            return None
+        return _classes_to_info(classes, basis.n_out)
+
 
 _DEPVEC_CACHE: Dict[Tuple, DependenceInfo] = {}
 _DEPVEC_CACHE_MAX = 200_000
+
+
+def _evict_half(cache: Dict) -> None:
+    """Drop the older half of a memo table (insertion order) instead of
+    clearing it: mid-search overflow keeps the recent working set warm."""
+    for k in list(cache.keys())[: len(cache) // 2]:
+        del cache[k]
 
 
 def dependence_vector(domain_src: BasicSet, acc_src: Sequence[LinExpr],
@@ -593,7 +625,7 @@ def dependence_vector(domain_src: BasicSet, acc_src: Sequence[LinExpr],
                                       acc_sink, n)
     if key is not None:
         if len(_DEPVEC_CACHE) >= _DEPVEC_CACHE_MAX:
-            _DEPVEC_CACHE.clear()
+            _evict_half(_DEPVEC_CACHE)
         _DEPVEC_CACHE[key] = info
     return info
 
@@ -627,6 +659,7 @@ def _dependence_vector_compute(domain_src: BasicSet, acc_src: Sequence[LinExpr],
     direction: List[str] = ["*"] * n
     carried: Optional[int] = None
     levels: Dict[int, Tuple[Optional[int], ...]] = {}
+    level_bounds: Dict[int, Tuple[Tuple[Optional[int], Optional[int]], ...]] = {}
     any_exists = False
     for lvl in range(n):
         lc = [eq(LinExpr.var(ddims[j]), 0) for j in range(lvl)]
@@ -639,10 +672,12 @@ def _dependence_vector_compute(domain_src: BasicSet, acc_src: Sequence[LinExpr],
             carried = lvl + 1
         proj = sub.project_onto(ddims)
         lvl_dist: List[Optional[int]] = [0] * lvl + [None] * (n - lvl)
+        lvl_b: List[Tuple[Optional[int], Optional[int]]] = [(0, 0)] * lvl
         for k in range(lvl, n):
             los_l, ups_l = proj.bounds_of(ddims[k], [d for d in ddims[k + 1:]])
             lo_l = _const_bound(los_l, proj.params, True)
             up_l = _const_bound(ups_l, proj.params, False)
+            lvl_b.append((lo_l, up_l))
             if lo_l is not None and up_l is not None and lo_l == up_l:
                 lvl_dist[k] = lo_l
             elif lo_l is not None and lo_l >= 1:
@@ -650,6 +685,7 @@ def _dependence_vector_compute(domain_src: BasicSet, acc_src: Sequence[LinExpr],
             elif up_l is not None and up_l <= -1:
                 lvl_dist[k] = up_l
         levels[lvl + 1] = tuple(lvl_dist)
+        level_bounds[lvl + 1] = tuple(lvl_b)
         for k in range(n):
             los, ups = proj.bounds_of(ddims[k], [d for d in ddims[k + 1:]])
             lo = _const_bound(los, proj.params, True)
@@ -685,7 +721,7 @@ def _dependence_vector_compute(domain_src: BasicSet, acc_src: Sequence[LinExpr],
     if not any_exists:
         return DependenceInfo(False)
     return DependenceInfo(True, tuple(distance), tuple(direction), carried,
-                          levels)
+                          levels, _classify_classes(level_bounds, n))
 
 
 def _const_bound(bs: List[Bound], params: Sequence[str], is_lower: bool) -> Optional[int]:
@@ -699,3 +735,311 @@ def _const_bound(bs: List[Bound], params: Sequence[str], is_lower: bool) -> Opti
             else:
                 best = max(best, v) if is_lower else min(best, v)
     return best
+
+
+# --------------------------------------------------------------------------
+# Analytic dependence transfer: change-of-basis algebra on dependence vectors
+# --------------------------------------------------------------------------
+# A dependence polyhedron's per-level distance vectors fit a tiny per-entry
+# state algebra for the access patterns POM's dependence test produces (one
+# store paired with one load, both affine over a shared iteration space):
+#
+#   'Z'       entry is 0 on the whole polyhedron (pinned by an access
+#             equality, or genuinely single-valued)
+#   ('C', d)  entry is the constant d != 0 on the whole polyhedron
+#   'LZ'      entry is 0 on this class only because the class's carried-
+#             level slice pins it (other classes of the same info carry a
+#             nonzero there)
+#   'P'       the class's carried entry: reported minimum distance 1, free
+#             above (the canonical reduction/recurrence shape)
+#   'F'       free: FM reports no constant (None)
+#
+# A class is (carried_pos, reversed, entries).  ``reversed`` marks a class
+# whose transfer produced a lexicographically negative leading entry — an
+# illegal (order-reversing) basis change; legality transfer consumes the
+# flag, dependence transfer refuses it.
+#
+# The transfer of each primitive basis step below is written to reproduce
+# *exactly* what ``_dependence_vector_compute`` reports on the transformed
+# domain — including its reporting quirks (a split sub-dim of an eq-pinned
+# entry reports None because its bound is coupled to an earlier dim the
+# per-entry bound extraction keeps symbolic; a min-distance carried entry
+# splits into a tile-level class and an intra-tile class for every factor).
+# Anything outside the verified algebra returns None and falls back to FM;
+# the differential tests in ``tests/test_dep_transfer.py`` pin the
+# equivalence on every workload family.
+def _classify_classes(level_bounds: Dict[int, Tuple], n: int) -> Optional[Tuple]:
+    """Translate per-level FM const bounds into transferable class states."""
+    if not level_bounds:
+        return None
+    pinned_zero = [all(b[k] == (0, 0) for b in level_bounds.values())
+                   for k in range(n)]
+    classes = []
+    for lvl in sorted(level_bounds):
+        c = lvl - 1
+        bnds = level_bounds[lvl]
+        entries: List = []
+        for k, (lo, up) in enumerate(bnds):
+            if k == c:
+                # carried entry: support only the canonical min-1 shape;
+                # an exact carried constant cannot be told apart from an
+                # extent-forced [1,1] range, so both fall back to FM
+                if lo == 1 and (up is None or up > 1):
+                    entries.append("P")
+                else:
+                    return None
+            elif k < c:
+                if (lo, up) != (0, 0):
+                    return None
+                entries.append("Z" if pinned_zero[k] else "LZ")
+            else:
+                if lo is not None and lo == up:
+                    entries.append("Z" if lo == 0 else ("C", lo))
+                elif (lo is not None and lo >= 1) or (up is not None and up <= -1):
+                    return None          # one-sided non-constant summary
+                else:
+                    entries.append("F")
+        classes.append((c, False, tuple(entries)))
+    return tuple(classes)
+
+
+def _entry_reported(state) -> Optional[int]:
+    if state == "Z" or state == "LZ":
+        return 0
+    if state == "P":
+        return 1
+    if state == "F":
+        return None
+    return state[1]                      # ('C', d)
+
+
+class BasisMap:
+    """Composition of primitive affine changes of basis on a dim list.
+
+    Built by the loop transforms (``transforms.py``) as they mutate a
+    statement's domain; consumed by ``DependenceInfo.transform`` /
+    ``transfer_trip_bounds`` / ``transfer_legality`` to carry analysis
+    facts across the transform instead of re-deriving them.
+
+    Steps (all positional — names never appear, so transferred facts stay
+    valid under the name-canonical memo tables):
+
+      ('permute', perm)        perm[i] = old position at new position i
+      ('split', pos, t)        dim at pos -> (pos: tile, pos+1: intra, t)
+      ('skew', src, dst, f)    entry[dst] += f * entry[src]
+      ('shift',) / ('rename',) identity on dependence vectors
+    """
+
+    __slots__ = ("n_in", "n_out", "steps")
+
+    def __init__(self, n_in: int, steps: Sequence[Tuple] = ()):
+        self.n_in = n_in
+        self.steps: Tuple[Tuple, ...] = tuple(steps)
+        n = n_in
+        for st in self.steps:
+            if st[0] == "split":
+                n += 1
+        self.n_out = n
+
+    def then(self, step: Tuple) -> "BasisMap":
+        return BasisMap(self.n_in, self.steps + (step,))
+
+    def __repr__(self) -> str:
+        return f"BasisMap({self.n_in}->{self.n_out}, {list(self.steps)})"
+
+
+def _fold_steps(classes: Tuple, basis: "BasisMap") -> Optional[Tuple]:
+    """Push a class set through every step of a basis map; None on the
+    first step the algebra cannot express exactly.  Shared by dependence
+    transfer and legality transfer so the two can never desynchronize on
+    step handling — they differ only in how they read the rev flags."""
+    for step in basis.steps:
+        classes = _transfer_step(classes, step)
+        if classes is None:
+            return None
+    return classes
+
+
+def _transfer_step(classes: Tuple, step: Tuple) -> Optional[Tuple]:
+    kind = step[0]
+    if kind in ("shift", "rename"):
+        return classes
+    if kind == "permute":
+        return _transfer_permute(classes, step[1])
+    if kind == "split":
+        return _transfer_split(classes, step[1], step[2])
+    if kind == "skew":
+        return _transfer_skew(classes, step[1], step[2], step[3])
+    return None
+
+
+def _transfer_permute(classes: Tuple, perm: Sequence[int]) -> Optional[Tuple]:
+    out = []
+    seen = set()
+    for carried, rev, entries in classes:
+        new_entries = tuple(entries[p] for p in perm)
+        pos = None
+        new_rev = False
+        for i, st in enumerate(new_entries):
+            if st == "Z":
+                continue
+            if st == "LZ":
+                # slice-pinned zero: sound to skip only while it stays on
+                # the pinned side of the carried entry; moved after it, the
+                # new slice no longer pins it and the class merges with
+                # parts of its siblings — not expressible here
+                continue
+            if st == "F":
+                return None              # class splits by this entry's sign
+            if st == "P":
+                pos = i
+                break
+            d = st[1]
+            pos = i
+            new_rev = d < 0
+            break
+        if pos is None:
+            return None
+        if any(new_entries[i] == "LZ" for i in range(pos + 1, len(new_entries))):
+            return None
+        key = (pos, new_rev)
+        if key in seen:
+            return None                  # two classes merge at one level
+        seen.add(key)
+        out.append((pos, rev or new_rev, new_entries))
+    return tuple(out)
+
+
+def _transfer_split(classes: Tuple, pos: int, t: int) -> Optional[Tuple]:
+    out = []
+    seen = set()
+    for carried, rev, entries in classes:
+        st = entries[pos]
+        base_carried = carried + 1 if carried > pos else carried
+        before, after = entries[:pos], entries[pos + 1:]
+        if t == 1:
+            # degenerate split: the intra dim is pinned to [0, 0]
+            subs = [(base_carried, (st, "Z"))]
+        elif st == "Z":
+            subs = [(base_carried, ("Z", "F"))]
+        elif st == "LZ":
+            return None                  # slice-pinned; sub-dims re-partition
+        elif st == "F":
+            subs = [(base_carried, ("F", "F"))]
+        elif st == "P":
+            if carried != pos or rev:
+                return None              # P only arises as the carried entry
+            # tile-level class (carried at the tile dim, intra free) plus
+            # intra-tile class (tile dim pinned by the slice, intra min-1);
+            # both exist for every factor 2 <= t <= extent (the tile-level
+            # slice stays rationally non-empty even at t == extent)
+            subs = [(pos, ("P", "F")), (pos + 1, ("LZ", "P"))]
+        else:
+            d = st[1]
+            if d % t != 0:
+                return None              # class straddles a tile boundary
+            subs = [(base_carried, (("C", d // t), "F"))]
+        for new_carried, pair in subs:
+            key = (new_carried, rev)
+            if key in seen:
+                return None
+            seen.add(key)
+            entries_out = before + pair + after
+            # a free sub-dim that lands before the class's carried entry is
+            # pinned to 0 by the carried-level slice: FM reports 0 there,
+            # and further transfers must treat it as slice-pinned
+            entries_out = tuple(
+                "LZ" if (i < new_carried and st2 == "F") else st2
+                for i, st2 in enumerate(entries_out))
+            out.append((new_carried, rev, entries_out))
+    return tuple(out)
+
+
+def _transfer_skew(classes: Tuple, src: int, dst: int, f: int) -> Optional[Tuple]:
+    # supported only when both the source and destination entries are
+    # pinned constants in every class: the skew substitutes the
+    # destination *variable*, so a free/min-summary entry's reported
+    # bounds on the skewed domain are not derivable from the class states
+    out = []
+    for carried, rev, entries in classes:
+        a, b = entries[src], entries[dst]
+        if not (a == "Z" or isinstance(a, tuple)):
+            return None
+        if not (b == "Z" or isinstance(b, tuple)):
+            return None
+        da = 0 if a == "Z" else a[1]
+        db = 0 if b == "Z" else b[1]
+        d = db + f * da
+        if dst < carried and d != 0:
+            return None                  # class's carried level would move
+        if dst == carried and d <= 0:
+            return None
+        e = list(entries)
+        e[dst] = "Z" if d == 0 else ("C", d)
+        out.append((carried, rev, tuple(e)))
+    return tuple(out)
+
+
+def _classes_to_info(classes: Tuple, n: int) -> DependenceInfo:
+    """Rebuild a DependenceInfo from transferred classes, replicating the
+    FM reporter's per-level vectors and cross-level distance/direction
+    merge branch for branch."""
+    levels: Dict[int, Tuple[Optional[int], ...]] = {}
+    for carried, _rev, entries in sorted(classes, key=lambda c: c[0]):
+        levels[carried + 1] = tuple(_entry_reported(s) for s in entries)
+    distance: List[Optional[int]] = [None] * n
+    direction: List[str] = ["*"] * n
+    for lvl in sorted(levels):
+        vec = levels[lvl]
+        for k in range(n):
+            dk = vec[k]
+            if distance[k] is None and direction[k] == "*":
+                distance[k] = dk
+                if dk is not None:
+                    direction[k] = "<" if dk > 0 else ("=" if dk == 0 else ">")
+                else:
+                    direction[k] = "*"
+            else:
+                if distance[k] != dk:
+                    distance[k] = None
+                    direction[k] = "*"
+    return DependenceInfo(True, tuple(distance), tuple(direction),
+                          min(levels), levels, tuple(classes))
+
+
+def transfer_dependences(deps: Sequence[DependenceInfo],
+                         basis: BasisMap) -> Optional[List[DependenceInfo]]:
+    """Transfer a statement's whole self-dependence list; None if any info
+    resists exact transfer (the caller falls back to FM for all of them,
+    keeping the list's composition identical to a fresh derivation)."""
+    out = []
+    for dep in deps:
+        info = dep.transform(basis)
+        if info is None:
+            return None
+        out.append(info)
+    return out
+
+
+def transfer_legality(deps: Sequence[DependenceInfo],
+                      basis: BasisMap) -> Optional[bool]:
+    """Legality of a basis change applied to a *legal* schedule state.
+
+    Every dependence class must stay lexicographically positive through
+    the change of basis: a reversed class is an integer dependence pair
+    whose execution order flips, which is exactly what the FM legality
+    check rejects.  Returns None when any class resists exact transfer.
+    """
+    for dep in deps:
+        if not dep.exists:
+            continue
+        if dep.classes is None:
+            return None
+        classes = _fold_steps(dep.classes, basis)
+        if classes is None:
+            return None
+        if any(rev for (_, rev, _) in classes):
+            return False
+    return True
+
+

@@ -21,15 +21,27 @@ be handed to ``auto_dse`` to read them back).
 """
 from __future__ import annotations
 
+import os
 from contextlib import contextmanager
 from typing import Dict
 
 ENABLED: bool = True
 
+# Analytic dependence transfer (change-of-basis algebra on dependence
+# vectors, ``affine.BasisMap``): when on, transforms push cached
+# dependence/trip/legality facts through the basis map they apply instead
+# of letting the next query re-derive them by Fourier–Motzkin.  The
+# transfer layer rides on the signature-keyed caches, so it is only active
+# when ``ENABLED`` is also true; ``POM_ANALYTIC_TRANSFER=0`` restores the
+# exact (FM-only) engine.  Transfers that cannot be performed exactly fall
+# back to FM automatically, which is what keeps analytic and exact runs
+# bit-identical.
+ANALYTIC: bool = os.environ.get("POM_ANALYTIC_TRANSFER", "1") != "0"
+
 COUNTS: Dict[str, int] = {
-    "selfdep_evals": 0, "selfdep_hits": 0,
-    "legal_evals": 0, "legal_hits": 0,
-    "trip_evals": 0, "trip_hits": 0,
+    "selfdep_evals": 0, "selfdep_hits": 0, "selfdep_transfers": 0,
+    "legal_evals": 0, "legal_hits": 0, "legal_transfers": 0,
+    "trip_evals": 0, "trip_hits": 0, "trip_transfers": 0,
     "access_evals": 0, "access_hits": 0,
 }
 
@@ -37,6 +49,16 @@ COUNTS: Dict[str, int] = {
 def set_enabled(value: bool) -> None:
     global ENABLED
     ENABLED = bool(value)
+
+
+def set_analytic(value: bool) -> None:
+    global ANALYTIC
+    ANALYTIC = bool(value)
+
+
+def analytic_on() -> bool:
+    """Analytic transfer is layered on the incremental caches."""
+    return ENABLED and ANALYTIC
 
 
 def reset_counts() -> None:
@@ -53,12 +75,13 @@ def clear_all() -> None:
     from .affine import _DEPVEC_CACHE, _INTERN
     from .ir import _TRIP_CANON_CACHE
     from .transforms import _LEGAL_CACHE
-    from .cost_model import _REC_II_CACHE
+    from .cost_model import _REC_II_CACHE, _REC_II_XFER
     _DEPVEC_CACHE.clear()
     _INTERN.clear()
     _TRIP_CANON_CACHE.clear()
     _LEGAL_CACHE.clear()
     _REC_II_CACHE.clear()
+    _REC_II_XFER.clear()
     # don't *import* the pallas backend (pulls in jax) just to clear it
     pallas = sys.modules.get("repro.core.backend_pallas")
     if pallas is not None:
@@ -97,7 +120,19 @@ def memo_delta(before: Dict[str, set]) -> Dict[str, Dict]:
     return out
 
 
-def merge_memo_delta(delta: Dict[str, Dict]) -> Dict[str, int]:
+def global_xfer_sets() -> Dict[str, set]:
+    """Origin markers for analytic-transfer entries in the global memos.
+
+    ``rec_ii`` entries computed by the closed-form (analytic) II path are
+    tracked so the parallel-merge conversion decrements the right counter
+    (``analytic_node_evals`` vs ``full_node_evals``) on a key collision.
+    """
+    from .cost_model import _REC_II_XFER
+    return {"rec_ii": _REC_II_XFER}
+
+
+def merge_memo_delta(delta: Dict[str, Dict],
+                     xfer: Dict[str, set] = None) -> Dict[str, int]:
     """Merge a worker's new global-memo entries into this process.
 
     Returns, per table, the number of entries that were *already present*
@@ -106,18 +141,32 @@ def merge_memo_delta(delta: Dict[str, Dict]) -> Dict[str, int]:
     what a serial run would have counted.  Signature keys are structural,
     so on a key collision both sides hold the identical value — insertion
     order across workers cannot change any result.
+
+    ``xfer`` marks worker entries produced by the analytic-transfer path;
+    their collisions are reported under ``<table>_xfer`` so the caller
+    adjusts the analytic counter instead of the evaluation counter, and
+    fresh ones keep their origin mark in this process.
     """
     tables = global_memo_tables()
+    xfer = xfer or {}
+    origin = global_xfer_sets()
     converted: Dict[str, int] = {}
     for name, entries in delta.items():
         table = tables[name]
-        dup = 0
+        marks = xfer.get(name, ())
+        dup = dup_x = 0
         for k, v in entries.items():
             if k in table:
-                dup += 1
+                if k in marks:
+                    dup_x += 1
+                else:
+                    dup += 1
             else:
                 table[k] = v
+                if k in marks and name in origin:
+                    origin[name].add(k)
         converted[name] = dup
+        converted[f"{name}_xfer"] = dup_x
     return converted
 
 
@@ -163,6 +212,20 @@ def disabled():
         yield
     finally:
         ENABLED = prev
+
+
+@contextmanager
+def analytic_disabled():
+    """Run a block on the exact (FM-only) engine: caches stay on, but every
+    dependence/trip/legality/II fact is re-derived polyhedrally instead of
+    transferred through the change-of-basis algebra."""
+    global ANALYTIC
+    prev = ANALYTIC
+    ANALYTIC = False
+    try:
+        yield
+    finally:
+        ANALYTIC = prev
 
 
 @contextmanager

@@ -160,18 +160,27 @@ class CostStats:
     analyses actually computed rather than served from cache, plus
     unpipelined (fully sequential) node computations, which have no cached
     decomposition.  In the uncached engine every node computation is full.
+    ``analytic_node_evals`` counts recurrence IIs derived by the closed
+    form instead: the dependence vectors and trip counts feeding the II
+    arithmetic were *transferred* through the candidate's change of basis
+    (zero polyhedral work), so these are integer arithmetic, not analyses.
     """
     node_evals: int = 0          # per-node report computations
     node_cache_hits: int = 0
     full_node_evals: int = 0     # fresh recurrence analyses + sequential nodes
     design_evals: int = 0        # design_report calls
     design_cache_hits: int = 0   # ... served entirely from cache
+    analytic_node_evals: int = 0  # closed-form (transfer-fed) recurrence IIs
 
 
 # name-canonical (schedule, pipeline pos, unrolls, body latency) -> II;
 # shared across models: two structurally identical candidate schedules have
 # the same recurrence II regardless of which statement/layer produced them
 _REC_II_CACHE: Dict[Tuple, int] = {}
+# keys of _REC_II_CACHE entries produced by the closed-form (analytic)
+# path; the parallel replay-merge needs the origin to adjust the right
+# counter when a worker's entry collides with an earlier candidate's
+_REC_II_XFER: set = set()
 
 
 class HlsModel:
@@ -298,6 +307,50 @@ class HlsModel:
         ii_mem = self._memory_ii(stmt, group)
         return max(ii_rec, ii_mem)
 
+    @staticmethod
+    def _rec_ii_key(stmt: Statement, p: int, unrolls: Dict[str, int],
+                    st: ExprStats) -> Tuple:
+        """Name-canonical key of the recurrence-II memo (shared by the
+        lookup path and the closed-form rung sweep's cache priming)."""
+        from .affine import NameCanon
+        c = NameCanon()
+        w_arr, w_idx = stmt.store_access()
+        return (c.set_key(stmt.domain),
+                tuple(c.expr(e) for e in w_idx),
+                tuple((arr.name == w_arr.name, tuple(c.expr(e) for e in idx))
+                      for arr, idx in stmt.load_accesses()),
+                p, tuple(unrolls.get(d, 1) for d in stmt.dims),
+                stmt.pipeline_ii, st.latency)
+
+    def prime_recurrence_ii(self, stmt: Statement, sweep: Optional["ClosedFormII"],
+                            factors: Tuple[int, ...]) -> None:
+        """Seed the canonical II memo for a just-applied ladder candidate
+        from the rung's closed form: ``sweep.ii(factors)`` is the same
+        transfer-fed integer arithmetic ``_recurrence_ii`` would run, so
+        the later lookup during ``design_report`` is a dictionary hit.
+        A no-op when the sweep (or this candidate's transfer) is
+        unavailable — the lookup then derives the II as before."""
+        from . import caching
+        if sweep is None or not self._caching() or not caching.analytic_on():
+            return
+        pipe = stmt.pipeline_at
+        if pipe is None or pipe not in stmt.dims:
+            return
+        p = stmt.dims.index(pipe)
+        unrolls = {d: f for d, f in stmt.unrolls.items() if f > 1}
+        key = self._rec_ii_key(stmt, p, unrolls, self._expr_stats(stmt))
+        if key in _REC_II_CACHE:
+            return
+        ii = sweep.ii(tuple(factors))
+        if ii is None:
+            return
+        self.stats.analytic_node_evals += 1
+        if len(_REC_II_CACHE) >= 100_000:
+            _REC_II_CACHE.clear()
+            _REC_II_XFER.clear()
+        _REC_II_CACHE[key] = ii
+        _REC_II_XFER.add(key)
+
     def _recurrence_ii(self, stmt: Statement, p: int,
                        unrolls: Dict[str, int], st: ExprStats) -> int:
         """Recurrence-constrained II — the polyhedral half of the II model.
@@ -308,79 +361,66 @@ class HlsModel:
         ``node_report`` is cheap arithmetic.  ``stats.full_node_evals``
         counts the misses."""
         if self._caching():
-            from .affine import NameCanon
-            c = NameCanon()
-            w_arr, w_idx = stmt.store_access()
-            key = (c.set_key(stmt.domain),
-                   tuple(c.expr(e) for e in w_idx),
-                   tuple((arr.name == w_arr.name, tuple(c.expr(e) for e in idx))
-                         for arr, idx in stmt.load_accesses()),
-                   p, tuple(unrolls.get(d, 1) for d in stmt.dims),
-                   stmt.pipeline_ii, st.latency)
+            key = self._rec_ii_key(stmt, p, unrolls, st)
             hit = _REC_II_CACHE.get(key)
             if hit is not None:
                 return hit
-            self.stats.full_node_evals += 1
+            # materialize the II's inputs first: when both the dependence
+            # list and the loop bounds of this schedule state were served
+            # by the transfer algebra, the computation below is the
+            # closed form — pure integer arithmetic, zero polyhedral calls
+            from . import caching
+            from .transforms import self_dependences
+            self_dependences(stmt)
+            stmt.dim_bounds()
+            analytic = (caching.analytic_on()
+                        and stmt.xfer_sig() in stmt._xfer_keys["selfdep"]
+                        and stmt.domain.key() in stmt._xfer_keys["trip"])
+            if analytic:
+                self.stats.analytic_node_evals += 1
+            else:
+                self.stats.full_node_evals += 1
             ii = self._recurrence_ii_compute(stmt, p, unrolls, st)
             if len(_REC_II_CACHE) >= 100_000:
                 _REC_II_CACHE.clear()
+                _REC_II_XFER.clear()
             _REC_II_CACHE[key] = ii
+            if analytic:
+                _REC_II_XFER.add(key)
             return ii
         self.stats.full_node_evals += 1
         return self._recurrence_ii_compute(stmt, p, unrolls, st)
 
     def _recurrence_ii_compute(self, stmt: Statement, p: int,
                                unrolls: Dict[str, int], st: ExprStats) -> int:
-        dims = stmt.dims
-        band = dims[p:]
-        trips = stmt.trip_counts()
-
         # recurrence II from loop-carried dependences inside the band, per
         # dependence *level* (a polyhedron carries at several levels).
         # For a self-accumulation (store also loaded at the same address) the
         # recurrence circuit is just the adder: other operands pipeline in.
         from .transforms import self_dependences
-        w_arr, w_idx = stmt.store_access()
-        is_accum = any(
-            arr.name == w_arr.name and all(
-                (a - b).key() == ((), 0) for a, b in zip(idx, w_idx))
-            for arr, idx in stmt.load_accesses())
-        link = OP_LATENCY["+"] if is_accum else st.latency + STORE_LATENCY
-        ii_rec = stmt.pipeline_ii
-        for dep in self_dependences(stmt):
-            for lvl, dvec in dep.levels.items():
-                if lvl - 1 < p:
-                    continue  # carried by an outer sequential loop
-                # distance in *initiation slots* between dependent iterations
-                flat = 0
-                mult = 1
-                chained = 1   # sequentially chained replicas in one slot
-                for k in range(len(band) - 1, -1, -1):
-                    d = band[k]
-                    dist = dvec[p + k]
-                    t = trips.get(d, 1)
-                    if d in unrolls:
-                        # unrolled iterations share one slot; nonzero distance
-                        # along an unrolled dim chains replicas combinationally
-                        if dist is None:
-                            dist = 1
-                        if dist != 0:
-                            chained *= max(unrolls[d] // max(abs(dist), 1), 1)
-                        dist = dist // unrolls[d]
-                        t = math.ceil(t / unrolls[d])
-                    if dist is None:
-                        dist = 1
-                    flat += dist * mult
-                    mult *= t
-                chain = link * chained
-                if flat <= 0:
-                    if chained > 1:
-                        # intra-slot chained replicas: the next slot's chain
-                        # cannot start until this one drains
-                        ii_rec = max(ii_rec, chain)
-                    continue
-                ii_rec = max(ii_rec, math.ceil(chain / flat))
-        return ii_rec
+        link = _link_latency(stmt, st)
+        return recurrence_ii_arith(
+            stmt.dims, p, stmt.trip_counts(), unrolls,
+            [dep.levels for dep in self_dependences(stmt)],
+            link, stmt.pipeline_ii)
+
+    def closed_form_ii(self, stmt: Statement) -> Optional["ClosedFormII"]:
+        """Per-rung closed-form ``ii(unroll_vector)`` (paper §V algebra +
+        §VI-B ladder): the base schedule's dependence vectors, loop bounds,
+        and chain latency are fixed across a rung, so every candidate's
+        recurrence II follows by pushing them through the candidate's
+        change of basis — pure integer arithmetic, zero polyhedral calls.
+        Returns None when the base dependences resist exact transfer (the
+        per-candidate path then derives IIs by FM as before)."""
+        from .transforms import self_dependences
+        deps = self_dependences(stmt)
+        if any(d.exists and d.classes is None for d in deps):
+            return None
+        bounds = stmt.dim_bounds()
+        if any(d not in bounds for d in stmt.dims):
+            return None
+        return ClosedFormII(list(stmt.dims), dict(bounds), list(deps),
+                            _link_latency(stmt, self._expr_stats(stmt)))
 
     def _memory_ii(self, stmt: Statement, group: Sequence[Statement]) -> int:
         # memory-port II (dual-port BRAM banks per partitioned array),
@@ -461,6 +501,135 @@ class HlsModel:
         feasible = (dsp <= self.resources["dsp"] and lut <= self.resources["lut"]
                     and bram <= self.resources["bram_bits"] and ff <= self.resources["ff"])
         return DesignReport(total, nodes, dsp, lut, ff, bram, feasible)
+
+
+# --------------------------------------------------------------------------
+# closed-form recurrence-II (analytic dependence transfer, PR 4)
+# --------------------------------------------------------------------------
+def _link_latency(stmt: Statement, st: ExprStats) -> int:
+    """Latency of the recurrence circuit: for a self-accumulation (store
+    also loaded at the same address) just the adder; else the full body."""
+    w_arr, w_idx = stmt.store_access()
+    is_accum = any(
+        arr.name == w_arr.name and all(
+            (a - b).key() == ((), 0) for a, b in zip(idx, w_idx))
+        for arr, idx in stmt.load_accesses())
+    return OP_LATENCY["+"] if is_accum else st.latency + STORE_LATENCY
+
+
+def recurrence_ii_arith(dims: Sequence[str], p: int, trips: Dict[str, int],
+                        unrolls: Dict[str, int],
+                        levels_list: Sequence[Dict[int, Tuple]],
+                        link: int, base_ii: int) -> int:
+    """The recurrence-II integer arithmetic, shared by the FM path and the
+    closed-form sweep: distance in initiation slots per dependence level,
+    chained-replica accounting for unrolled dims, max over all levels."""
+    band = dims[p:]
+    ii_rec = base_ii
+    for levels in levels_list:
+        for lvl, dvec in levels.items():
+            if lvl - 1 < p:
+                continue  # carried by an outer sequential loop
+            # distance in *initiation slots* between dependent iterations
+            flat = 0
+            mult = 1
+            chained = 1   # sequentially chained replicas in one slot
+            for k in range(len(band) - 1, -1, -1):
+                d = band[k]
+                dist = dvec[p + k]
+                t = trips.get(d, 1)
+                if d in unrolls:
+                    # unrolled iterations share one slot; nonzero distance
+                    # along an unrolled dim chains replicas combinationally
+                    if dist is None:
+                        dist = 1
+                    if dist != 0:
+                        chained *= max(unrolls[d] // max(abs(dist), 1), 1)
+                    dist = dist // unrolls[d]
+                    t = math.ceil(t / unrolls[d])
+                if dist is None:
+                    dist = 1
+                flat += dist * mult
+                mult *= t
+            chain = link * chained
+            if flat <= 0:
+                if chained > 1:
+                    # intra-slot chained replicas: the next slot's chain
+                    # cannot start until this one drains
+                    ii_rec = max(ii_rec, chain)
+                continue
+            ii_rec = max(ii_rec, math.ceil(chain / flat))
+    return ii_rec
+
+
+@dataclass
+class ClosedFormII:
+    """Closed-form ``ii(unroll_vector)`` for one ladder rung.
+
+    Precomputed once per rung from the bottleneck node's base schedule;
+    ``ii(factors)`` replays ``search.apply_parallel``'s basis change
+    (split the innermost ``len(factors)`` dims, move the intra-tile dims
+    innermost, unroll them, pipeline just above) on the *facts* instead of
+    the statement: dependence classes and loop bounds are pushed through
+    the split/permute algebra and fed to the same II arithmetic the cost
+    model runs.  Returns None for candidates the ladder would reject
+    (factor exceeds a trip count) and falls back to None when a class
+    resists exact transfer.
+    """
+    dims: List[str]
+    bounds: Dict[str, Tuple[int, int]]
+    deps: List
+    link: int
+
+    def ii(self, factors: Tuple[int, ...]) -> Optional[int]:
+        from .affine import BasisMap
+        from .ir import _apply_trip_op
+        dims = list(self.dims)
+        k = len(factors)
+        if k > len(dims):
+            return None
+        trips0 = {d: up - lo + 1 for d, (lo, up) in self.bounds.items()}
+        targets = dims[-k:]
+        for d, f in zip(targets, factors):
+            if f > trips0.get(d, 1):
+                return None
+        steps: List[Tuple] = []
+        bounds = dict(self.bounds)
+        new_inner: List[str] = []
+        unrolls: Dict[str, int] = {}
+        for d, f in zip(targets, factors):
+            if f <= 1:
+                continue
+            d0, d1 = d + "_o", d + "_u"
+            pos = dims.index(d)
+            steps.append(("split", pos, f))
+            bounds = _apply_trip_op(bounds, ("split", d, f, d0, d1))
+            dims[pos:pos + 1] = [d0, d1]
+            new_inner.append(d1)
+            unrolls[d1] = f              # == the intra dim's trip count
+        order = [x for x in dims if x not in new_inner] + new_inner
+        if order != dims:
+            steps.append(("permute", tuple(dims.index(x) for x in order)))
+            dims = order
+        outer = [x for x in dims if x not in new_inner]
+        if not outer:
+            return None
+        p = len(outer) - 1
+        basis = BasisMap(len(self.dims), steps)
+        levels_list = []
+        for dep in self.deps:
+            if not dep.exists:
+                continue
+            info = dep.transform(basis)
+            if info is None:
+                return None
+            levels_list.append(info.levels)
+        trips = {d: max(0, up - lo + 1) for d, (lo, up) in bounds.items()}
+        # base II is 1, not the rung-base statement's pipeline_ii:
+        # apply_parallel unconditionally resets every candidate to
+        # pipeline_ii=1 when it pipelines above the unrolled band
+        return recurrence_ii_arith(dims, p, trips, unrolls, levels_list,
+                                   self.link, 1)
 
 
 def _arr_bits(ph: Placeholder) -> float:

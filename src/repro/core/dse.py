@@ -122,7 +122,7 @@ def _desired_inner_dims(stmt: Statement) -> List[str]:
 def _move_innermost(stmt: Statement, d: str) -> None:
     order = [x for x in stmt.dims if x != d] + [d]
     old = stmt.domain
-    stmt.domain = stmt.domain.permute(order)
+    T.permute_dims(stmt, order)
     if not T._legal(stmt):
         stmt.domain = old
         raise T.IllegalTransform(f"cannot move {d} innermost in {stmt.name}")

@@ -225,11 +225,22 @@ class Statement:
         self.after_spec: Optional[Tuple["Statement", int]] = None
         self.function: Optional["Function"] = None
         # signature-keyed memo tables (see class docstring)
-        self._trip_cache: Dict[Tuple, Dict[str, int]] = {}
+        self._trip_cache: Dict[Tuple, Dict[str, Tuple[int, int]]] = {}
         self._acc_cache: Dict[Tuple, Tuple] = {}
         self._selfdep_cache: Dict[Tuple, list] = {}
         self._legal_cache: Dict[Tuple, bool] = {}
         self._part_cache: Dict[Tuple, list] = {}
+        # analytic-transfer state (PR 4): ``_basis_trace`` links each
+        # schedule state reached by a transform to its parent state plus
+        # the positional basis step applied (``affine.BasisMap`` step) and
+        # the trip-bound transfer op; ``_xfer_keys`` marks cache entries
+        # whose values came from the transfer algebra rather than FM (the
+        # parallel replay-merge and the II counter split both need the
+        # origin).  Both are metadata only — results are identical with
+        # the trace cleared, just re-derived by FM.
+        self._basis_trace: Dict[Tuple, Tuple] = {}
+        self._xfer_keys: Dict[str, set] = {
+            "selfdep": set(), "trip": set(), "legal": set()}
 
     # -- schedule signatures ----------------------------------------------------
     def subst_signature(self) -> Tuple:
@@ -239,6 +250,84 @@ class Statement:
 
     def dep_signature(self) -> Tuple:
         return (self.uid, self.domain.key(), self.subst_signature())
+
+    def xfer_sig(self) -> Tuple:
+        """The state key the analytic-transfer layer links through: exactly
+        what determines self-dependences and legality."""
+        return (self.domain.key(), self.subst_signature())
+
+    def is_original_order(self) -> bool:
+        """True when the schedule is the untransformed program order (the
+        root of every basis trace — legal by construction)."""
+        if self.domain.dims != self.original_iters:
+            return False
+        return all(v.key() == (((k, 1),), 0)
+                   for k, v in self.iter_subst.items())
+
+    def record_basis_step(self, parent_sig: Tuple, parent_original: bool,
+                          dep_step: Tuple, trip_op: Optional[Tuple]) -> None:
+        """Link the current (post-transform) state to its parent with the
+        basis step just applied.
+
+        ``trip_op`` is the loop-bound transfer op: ``("split", d, t, d0,
+        d1)``, ``("shift", d, c)``, ``("rename", mapping)``, ``("permute",
+        new_dims)`` or None (bounds must be re-derived, e.g. after a skew).
+        A permute is validated here against the live split-pair set — the
+        per-dim bound extraction holds outer dims symbolic, so a (tile,
+        intra) pair's constant bounds survive only while the tile dim
+        stays outside the intra dim."""
+        from . import caching
+        if not caching.analytic_on():
+            return
+        new_sig = self.xfer_sig()
+        if new_sig == parent_sig or new_sig in self._basis_trace:
+            return
+        node = self._basis_trace.get(parent_sig)
+        pairs = node[3] if node is not None else (() if parent_original else None)
+        dep_ok = True
+        if trip_op is not None and trip_op[0] == "skew":
+            # vectors transfer through a skew only when neither skewed dim
+            # is a split sub-dim: a tile dim's zero entry is pinned by
+            # *rational rounding* of the coupled t*d0+d1 constraints, and
+            # scaling it by the skew factor un-rounds it — FM then reports
+            # a free entry where the algebra would predict a constant
+            if pairs is None:
+                dep_ok = False
+            else:
+                members = {d for p in pairs for d in p}
+                dep_ok = (trip_op[1] not in members
+                          and trip_op[2] not in members)
+            trip_op, pairs = None, None   # skewed bounds: re-derive by FM
+        else:
+            trip_op, pairs = _resolve_trip_op(trip_op, pairs)
+            if dep_step[0] == "permute":
+                # a permute flipping a (tile, intra) pair puts the same
+                # rational relaxation in play: FM only
+                dep_ok = trip_op is not None
+        if len(self._basis_trace) >= 8192:
+            for k in list(self._basis_trace)[:4096]:
+                del self._basis_trace[k]
+        self._basis_trace[new_sig] = (parent_sig, dep_step, trip_op, pairs,
+                                      parent_original, dep_ok)
+
+    def _walk_trace(self, have, max_depth: int = 16):
+        """Walk the basis trace back from the current state to the nearest
+        ancestor satisfying ``have(sig, is_original)``; returns
+        (root_sig, steps) with ``steps`` as (dep_step, trip_op, dep_ok)
+        triples in application order, or None."""
+        sig = self.xfer_sig()
+        steps = []
+        for _ in range(max_depth):
+            node = self._basis_trace.get(sig)
+            if node is None:
+                return None
+            parent_sig, dep_step, trip_op, _pairs, parent_orig, dep_ok = node
+            steps.append((dep_step, trip_op, dep_ok))
+            if have(parent_sig, parent_orig):
+                steps.reverse()
+                return parent_sig, steps
+            sig = parent_sig
+        return None
 
     def schedule_signature(self) -> Tuple:
         """Cheap structural signature of the full schedule state."""
@@ -292,38 +381,53 @@ class Statement:
 
     def trip_counts(self) -> Dict[str, int]:
         """Constant trip count per loop dim (domain must be bounded-constant
-        once outer dims are fixed; uses point counts for exactness).
+        once outer dims are fixed; uses point counts for exactness)."""
+        return {d: max(0, up - lo + 1)
+                for d, (lo, up) in self.dim_bounds().items()}
 
-        Memoized on the domain signature — the FM projections this runs are
-        a DSE hot path (re-queried for every candidate schedule)."""
+    def dim_bounds(self) -> Dict[str, Tuple[int, int]]:
+        """Constant (lo, up) loop bounds per dim — the quantity trip counts
+        derive from and the transfer algebra pushes through splits/shifts.
+
+        Memoized on the domain signature (the FM projections this runs are
+        a DSE hot path, re-queried for every candidate schedule); when the
+        domain was produced by a recorded basis step, the bounds are
+        *transferred* from the parent state instead of re-projected."""
         from . import caching
         if not caching.ENABLED:
             caching.COUNTS["trip_evals"] += 1
-            return self._trip_counts_compute()
+            return self._dim_bounds_compute()
         key = self.domain.key()
         hit = self._trip_cache.get(key)
         if hit is not None:
             caching.COUNTS["trip_hits"] += 1
             return dict(hit)
-        # cross-statement reuse: trip counts are positional, so domains equal
+        # cross-statement reuse: bounds are positional, so domains equal
         # modulo renaming (3MM's nests, repeated conv layers) share one entry
         from .affine import NameCanon
         ckey = NameCanon().set_key(self.domain)
-        counts = _TRIP_CANON_CACHE.get(ckey)
-        if counts is None:
-            caching.COUNTS["trip_evals"] += 1
-            out = self._trip_counts_compute()
-            if len(_TRIP_CANON_CACHE) >= _TRIP_CANON_CACHE_MAX:
-                _TRIP_CANON_CACHE.clear()
-            _TRIP_CANON_CACHE[ckey] = tuple(out.get(d) for d in self.domain.dims)
-        else:
+        bnds = _TRIP_CANON_CACHE.get(ckey)
+        if bnds is not None:
             caching.COUNTS["trip_hits"] += 1
-            out = {d: t for d, t in zip(self.domain.dims, counts)
-                   if t is not None}
+            out = {d: b for d, b in zip(self.domain.dims, bnds)
+                   if b is not None}
+            self._trip_cache[key] = out
+            return dict(out)
+        out = self._bounds_via_transfer()
+        if out is not None:
+            caching.COUNTS["trip_transfers"] += 1
+            self._trip_cache[key] = out
+            self._xfer_keys["trip"].add(key)
+            return dict(out)
+        caching.COUNTS["trip_evals"] += 1
+        out = self._dim_bounds_compute()
+        if len(_TRIP_CANON_CACHE) >= _TRIP_CANON_CACHE_MAX:
+            _TRIP_CANON_CACHE.clear()
+        _TRIP_CANON_CACHE[ckey] = tuple(out.get(d) for d in self.domain.dims)
         self._trip_cache[key] = out
         return dict(out)
 
-    def _trip_counts_compute(self) -> Dict[str, int]:
+    def _dim_bounds_compute(self) -> Dict[str, Tuple[int, int]]:
         out = {}
         s = self.domain
         for i, d in enumerate(s.dims):
@@ -331,8 +435,25 @@ class Statement:
             lo = _cbound(los, True)
             up = _cbound(ups, False)
             if lo is not None and up is not None:
-                out[d] = max(0, up - lo + 1)
+                out[d] = (lo, up)
         return out
+
+    def _bounds_via_transfer(self) -> Optional[Dict[str, Tuple[int, int]]]:
+        from . import caching
+        if not caching.analytic_on():
+            return None
+        walk = self._walk_trace(lambda sig, _orig: sig[0] in self._trip_cache)
+        if walk is None:
+            return None
+        root_sig, steps = walk
+        bounds = self._trip_cache[root_sig[0]]
+        for _dep, op, _dep_ok in steps:
+            if op is None:
+                return None
+            bounds = _apply_trip_op(bounds, op)
+            if bounds is None:
+                return None
+        return bounds
 
     def reduction_dims(self) -> List[str]:
         """Iteration dims absent from the store access (paper Fig. 8(3))."""
@@ -369,9 +490,97 @@ class Statement:
         return f"Statement({self.name}, dims={self.dims})"
 
 
-# name-canonical domain key -> per-dim trip counts (None = unbounded)
+# name-canonical domain key -> per-dim (lo, up) bounds (None = unbounded)
 _TRIP_CANON_CACHE: Dict[Tuple, Tuple] = {}
 _TRIP_CANON_CACHE_MAX = 100_000
+
+
+def _resolve_trip_op(op: Optional[Tuple], pairs):
+    """Validate/normalize a trip-bound transfer op at record time and push
+    the split-pair set forward.  A permutation is checked against the live
+    pairs (tile dim must stay outside its intra dim) and normalized to the
+    no-op ``("id",)``; an unverifiable op breaks the bound-transfer chain
+    (op None), which also poisons the pair set for descendants."""
+    if op is None:
+        return None, None
+    kind = op[0]
+    if kind == "chain":
+        for sub in op[1]:
+            sub_ok, pairs = _resolve_trip_op(sub, pairs)
+            if sub_ok is None:
+                return None, None
+        return op, pairs
+    if kind == "split":
+        _, d, t, d0, d1 = op
+        if pairs is not None:
+            np_ = []
+            for a, b in pairs:
+                if a == d:
+                    np_ += [(d0, b), (d1, b)]
+                elif b == d:
+                    np_ += [(a, d0), (a, d1)]
+                else:
+                    np_.append((a, b))
+            np_.append((d0, d1))
+            pairs = tuple(np_)
+        return op, pairs
+    if kind == "rename":
+        mapping = op[1]
+        if pairs is not None:
+            pairs = tuple((mapping.get(a, a), mapping.get(b, b))
+                          for a, b in pairs)
+        return op, pairs
+    if kind in ("shift", "id"):
+        return op, pairs
+    if kind == "permute":
+        if pairs is None:
+            return None, None
+        order = {d: i for i, d in enumerate(op[1])}
+        if all(a in order and b in order and order[a] < order[b]
+               for a, b in pairs):
+            return ("id",), pairs
+        return None, None
+    return None, None
+
+
+def _apply_trip_op(bounds: Dict[str, Tuple[int, int]],
+                   op: Tuple) -> Optional[Dict[str, Tuple[int, int]]]:
+    """Apply one recorded loop-bound transfer op (see
+    ``Statement.record_basis_step``).  The split formula mirrors exactly
+    what FM derives on the substituted domain: the tile dim's constraints
+    ``t*d0 + d1 in [lo, up]`` with ``d1 in [0, t-1]`` eliminate to
+    ``d0 in [ceil((lo - t + 1)/t), floor(up/t)]`` after gcd tightening,
+    and the intra dim keeps its pure-constant ``[0, t-1]`` range."""
+    from .affine import ceil_div, floor_div
+    kind = op[0]
+    if kind == "id":
+        return bounds
+    if kind == "chain":
+        for sub in op[1]:
+            bounds = _apply_trip_op(bounds, sub)
+            if bounds is None:
+                return None
+        return bounds
+    if kind == "split":
+        _, d, t, d0, d1 = op
+        if d not in bounds:
+            return None
+        lo, up = bounds[d]
+        nb = {k: v for k, v in bounds.items() if k != d}
+        nb[d0] = (ceil_div(lo - t + 1, t), floor_div(up, t))
+        nb[d1] = (0, t - 1)
+        return nb
+    if kind == "shift":
+        _, d, c = op
+        nb = dict(bounds)
+        if d in nb:
+            lo, up = nb[d]
+            nb[d] = (lo + c, up + c)
+        return nb
+    if kind == "rename":
+        m = op[1]
+        return {m.get(d, d): v for d, v in bounds.items()}
+    return None
 
 
 def _cbound(bs, is_lower):

@@ -131,7 +131,7 @@ def apply_parallel(stmt: Statement, factors: Tuple[int, ...]) -> bool:
     order = [x for x in stmt.dims if x not in new_inner] + new_inner
     try:
         old = stmt.domain
-        stmt.domain = stmt.domain.permute(order)
+        T.permute_dims(stmt, order)
         if not T._legal(stmt):
             stmt.domain = old
             return False
@@ -301,6 +301,7 @@ class RungInfo:
     prev: tuple                       # node snapshot before the rung
     cands: List[Candidate]
     chosen: Optional[Candidate]       # accepted candidate (None = exit)
+    sweep: Any = None                 # closed-form ii(unroll_vector), if any
 
 
 @dataclass
@@ -374,18 +375,22 @@ def _critical_bottleneck(ctx: SearchContext, st: LadderState) -> Optional[int]:
 # --------------------------------------------------------------------------
 class SerialEvaluator:
     """Evaluate the rung's candidates in order on the live function —
-    exactly the inner loop of the pre-subsystem greedy ladder."""
+    exactly the inner loop of the pre-subsystem greedy ladder.  When the
+    rung has a closed-form sweep, each applied candidate's recurrence II
+    is primed from it (``prime_recurrence_ii``), so the design report's
+    II lookup is a dictionary hit."""
 
     workers = 1
 
     def evaluate(self, ctx: SearchContext, st: LadderState, s: Statement,
-                 uid: int, P: int) -> List[Candidate]:
+                 uid: int, P: int, sweep=None) -> List[Candidate]:
         out: List[Candidate] = []
         base = st.base_snaps[uid]
         for factors in unroll_candidates(P):
             _restore_node(ctx.fn, s, base)
             if not apply_parallel(s, tuple(factors)):
                 continue
+            ctx.model.prime_recurrence_ii(s, sweep, tuple(factors))
             _refresh_partitions(ctx.fn)
             rep = ctx.design_report()
             out.append(Candidate(tuple(factors), rep, _snapshot(s)))
@@ -399,9 +404,13 @@ _FORK_STATE: Optional[Tuple] = None
 
 
 def _stmt_cache_tables(s: Statement) -> Dict[str, dict]:
+    # "trace" (the basis-step links of the analytic-transfer layer) rides
+    # along so the parent can keep transferring from states a worker
+    # reached: entries are deterministic metadata, collisions carry no
+    # counter conversion
     return {"trip": s._trip_cache, "acc": s._acc_cache,
             "selfdep": s._selfdep_cache, "legal": s._legal_cache,
-            "part": s._part_cache}
+            "part": s._part_cache, "trace": s._basis_trace}
 
 
 def _model_cache_tables(model: HlsModel) -> Dict[str, dict]:
@@ -411,16 +420,27 @@ def _model_cache_tables(model: HlsModel) -> Dict[str, dict]:
 
 def _cache_key_snapshot(fn: Function, model: HlsModel) -> Dict:
     snap = {"global": caching.snapshot_memo_keys(),
+            "global_xfer": {n: set(t)
+                            for n, t in caching.global_xfer_sets().items()},
             "stmt": {s.uid: {n: set(t) for n, t in _stmt_cache_tables(s).items()}
                      for s in fn.statements},
+            "stmt_xfer": {s.uid: {n: set(t) for n, t in s._xfer_keys.items()}
+                          for s in fn.statements},
             "model": {n: set(t) for n, t in _model_cache_tables(model).items()}}
     return snap
 
 
 def _cache_delta(fn: Function, model: HlsModel, before: Dict) -> Dict:
-    """New cache entries since ``before``, in insertion order per table."""
+    """New cache entries since ``before``, in insertion order per table.
+
+    ``xfer`` carries the *origin marks* of entries the analytic-transfer
+    layer produced (vs FM evaluations): the merge conversion must charge a
+    key collision against the counter the worker actually incremented."""
     delta: Dict[str, Any] = {"global": caching.memo_delta(before["global"]),
-                             "stmt": {}, "model": {}}
+                             "stmt": {}, "model": {}, "xfer": {"stmt": {}}}
+    delta["xfer"]["global"] = {
+        n: set(t) - before["global_xfer"].get(n, set())
+        for n, t in caching.global_xfer_sets().items()}
     for s in fn.statements:
         olds = before["stmt"][s.uid]
         per = {}
@@ -430,6 +450,11 @@ def _cache_delta(fn: Function, model: HlsModel, before: Dict) -> Dict:
                 per[name] = new
         if per:
             delta["stmt"][s.uid] = per
+        oldx = before["stmt_xfer"][s.uid]
+        perx = {n: set(t) - oldx.get(n, set())
+                for n, t in s._xfer_keys.items()}
+        if any(perx.values()):
+            delta["xfer"]["stmt"][s.uid] = perx
     for name, table in _model_cache_tables(model).items():
         old = before["model"][name]
         new = {k: v for k, v in table.items() if k not in old}
@@ -480,7 +505,8 @@ def _phase_delta(fn: Function, model: HlsModel, cp: _Checkpoint
         st.node_cache_hits - cp.stats.node_cache_hits,
         st.full_node_evals - cp.stats.full_node_evals,
         st.design_evals - cp.stats.design_evals,
-        st.design_cache_hits - cp.stats.design_cache_hits)
+        st.design_cache_hits - cp.stats.design_cache_hits,
+        st.analytic_node_evals - cp.stats.analytic_node_evals)
     return counts, stats, _cache_delta(fn, model, cp.keys)
 
 
@@ -507,12 +533,13 @@ def _candidate_eval_task(factors: Tuple[int, ...]) -> _CandidateResult:
     """Worker-side evaluation of one candidate.  Runs in a freshly forked
     process (``maxtasksperchild=1``), so the starting cache/counter state is
     exactly the parent's at fan-out time regardless of scheduling order."""
-    fn, model, uid, base_snap = _FORK_STATE
+    fn, model, uid, base_snap, sweep = _FORK_STATE
     cp0 = _checkpoint(fn, model)
     s = next(x for x in fn.statements if x.uid == uid)
     _restore_node(fn, s, base_snap)
     ok = apply_parallel(s, factors)
     if ok:
+        model.prime_recurrence_ii(s, sweep, factors)
         _refresh_partitions(fn)
     apply_counts, apply_stats, apply_delta = _phase_delta(fn, model, cp0)
     if not ok:
@@ -531,35 +558,53 @@ def _candidate_eval_task(factors: Tuple[int, ...]) -> _CandidateResult:
 
 # which cache tables correspond 1:1 to an eval counter: a key collision at
 # merge time converts that eval into a hit.  Per-statement ``trip`` /
-# ``legal`` tables are *not* listed — their entries are inserted on both
-# the eval and the (canonical-table hit) paths, so the conversion is
-# accounted on the global canonical table alone.
+# ``legal`` tables are *not* listed — their FM-origin entries are inserted
+# on both the eval and the (canonical-table hit) paths, so the conversion
+# is accounted on the global canonical table alone.  Transfer-origin
+# entries (``_xfer_keys`` marks) never touch the canonical tables, so
+# *their* collisions convert the transfer counter instead (_XFER_CONV).
 _GLOBAL_CONV = {"trip_canon": "trip", "legal": "legal"}
 _STMT_CONV = {"acc": "access", "selfdep": "selfdep"}
+_XFER_CONV = {"selfdep": "selfdep", "trip": "trip", "legal": "legal"}
 
 
 def _merge_phase(ctx: SearchContext, delta: Dict,
                  counts: Dict[str, int], stats: CostStats) -> None:
     """Replay one phase of a worker result into the parent: insert fresh
     cache entries, convert entries an earlier-merged candidate already
-    computed from evaluations into hits, then fold the adjusted counters."""
+    computed from evaluations (or transfers) into hits, then fold the
+    adjusted counters."""
     _translate_placeholders(ctx.fn, delta)
     conv = {"trip_canon": 0, "legal": 0, "depvec": 0, "rec_ii": 0,
             "acc": 0, "selfdep": 0, "node": 0, "design": 0}
-    conv.update(caching.merge_memo_delta(delta.get("global", {})))
+    xconv = {name: 0 for name in _XFER_CONV}
+    xfer = delta.get("xfer", {})
+    gconv = caching.merge_memo_delta(delta.get("global", {}),
+                                     xfer.get("global"))
+    rec_ii_xfer = gconv.pop("rec_ii_xfer", 0)
+    for name in list(gconv):
+        if name.endswith("_xfer"):
+            gconv.pop(name)
+    conv.update(gconv)
     for uid, per in delta.get("stmt", {}).items():
         s = ctx.by_uid.get(uid)
         if s is None:
             continue
         tables = _stmt_cache_tables(s)
+        marks = xfer.get("stmt", {}).get(uid, {})
         for name, entries in per.items():
             table = tables[name]
+            mk = marks.get(name, ())
             for k, v in entries.items():
                 if k in table:
-                    if name in _STMT_CONV:
+                    if k in mk and name in _XFER_CONV:
+                        xconv[name] += 1
+                    elif name in _STMT_CONV:
                         conv[name] += 1
                 else:
                     table[k] = v
+                    if k in mk:
+                        s._xfer_keys[name].add(k)
     mtables = _model_cache_tables(ctx.model)
     for name, entries in delta.get("model", {}).items():
         table = mtables[name]
@@ -573,11 +618,15 @@ def _merge_phase(ctx: SearchContext, delta: Dict,
     for key, cnt in {**_GLOBAL_CONV, **_STMT_CONV}.items():
         counts[f"{cnt}_evals"] -= conv[key]
         counts[f"{cnt}_hits"] += conv[key]
+    for key, cnt in _XFER_CONV.items():
+        counts[f"{cnt}_transfers"] -= xconv[key]
+        counts[f"{cnt}_hits"] += xconv[key]
     caching.merge_counts(counts)
     ms = ctx.model.stats
     ms.node_evals += stats.node_evals - conv["node"]
     ms.node_cache_hits += stats.node_cache_hits + conv["node"]
     ms.full_node_evals += stats.full_node_evals - conv["rec_ii"]
+    ms.analytic_node_evals += stats.analytic_node_evals - rec_ii_xfer
     ms.design_evals += stats.design_evals
     ms.design_cache_hits += stats.design_cache_hits + conv["design"]
 
@@ -614,17 +663,37 @@ def _merge_candidate_result(ctx: SearchContext, res: _CandidateResult) -> None:
                      res.report_stats)
 
 
+def _pool_min_candidates() -> int:
+    """Smallest rung (candidate count) worth a fork fan-out.
+
+    Forking workers costs more than serially evaluating a couple of
+    candidates against warm caches (``BENCH_dse_speed.json``: gemm's
+    3-candidate rungs ran 3x slower pooled), so small rungs fall back to
+    the serial evaluator — which is the counter-reference path, so eval
+    counters stay exact either way.  Tune with POM_POOL_MIN_CANDIDATES.
+    """
+    try:
+        return max(2, int(os.environ.get("POM_POOL_MIN_CANDIDATES", "4")))
+    except ValueError:
+        return 4
+
+
 class PoolEvaluator:
     """Evaluate a rung's candidates concurrently in forked worker processes.
 
     Requires the ``fork`` start method (Linux): workers inherit the whole
     incremental-cache state copy-on-write, so each candidate evaluation
     starts from exactly the serial engine's rung-start state.  Falls back
-    to serial evaluation when ``fork`` is unavailable or ``workers <= 1``.
+    to serial evaluation when ``fork`` is unavailable, ``workers <= 1``,
+    or the rung has fewer candidates than ``POM_POOL_MIN_CANDIDATES``.
     """
 
-    def __init__(self, workers: Optional[int] = None):
+    def __init__(self, workers: Optional[int] = None,
+                 min_candidates: Optional[int] = None):
         self.workers = int(workers) if workers else (os.cpu_count() or 1)
+        self.min_candidates = (int(min_candidates)
+                               if min_candidates is not None
+                               else _pool_min_candidates())
         self._serial = SerialEvaluator()
 
     @staticmethod
@@ -633,14 +702,15 @@ class PoolEvaluator:
         return "fork" in multiprocessing.get_all_start_methods()
 
     def evaluate(self, ctx: SearchContext, st: LadderState, s: Statement,
-                 uid: int, P: int) -> List[Candidate]:
+                 uid: int, P: int, sweep=None) -> List[Candidate]:
         factor_list = [tuple(f) for f in unroll_candidates(P)]
-        if self.workers <= 1 or len(factor_list) < 2 or not self._fork_available():
-            return self._serial.evaluate(ctx, st, s, uid, P)
+        if (self.workers <= 1 or len(factor_list) < self.min_candidates
+                or not self._fork_available()):
+            return self._serial.evaluate(ctx, st, s, uid, P, sweep)
         import multiprocessing
         global _FORK_STATE
         base = st.base_snaps[uid]
-        _FORK_STATE = (ctx.fn, ctx.model, uid, base)
+        _FORK_STATE = (ctx.fn, ctx.model, uid, base, sweep)
         try:
             mp = multiprocessing.get_context("fork")
             n = min(self.workers, len(factor_list))
@@ -697,7 +767,18 @@ def _rung(ctx: SearchContext, st: LadderState, evaluator) -> bool:
         st.actions.append(f"exit {s.name}: max parallelism")
         return True
     prev = _snapshot(s)
-    cands = evaluator.evaluate(ctx, st, s, uid, P)
+    # per-rung closed-form ii(unroll_vector): built once from the rung
+    # *base* (the state candidates re-apply their factors to — the live
+    # state diverges from it once a rung has been accepted), it both
+    # pre-warms the base dependence classes/loop bounds every candidate
+    # transfers from and primes each applied candidate's recurrence II
+    # (see the evaluators), so the design report's II lookup is a hit
+    sweep = None
+    if caching.analytic_on():
+        _restore_node(ctx.fn, s, st.base_snaps[uid])
+        sweep = ctx.model.closed_form_ii(s)
+        _restore_node(ctx.fn, s, prev)
+    cands = evaluator.evaluate(ctx, st, s, uid, P, sweep)
     # pick the candidate that most improves the bottleneck *node* (first
     # strict improvement wins ties, matching the pre-subsystem ladder)
     best: Optional[Candidate] = None
@@ -720,13 +801,13 @@ def _rung(ctx: SearchContext, st: LadderState, evaluator) -> bool:
             f"parallel {s.name} -> {P} "
             f"(lat {st.report.nodes[s.name].latency}, "
             f"II {st.report.nodes[s.name].ii})")
-        st.last_rung = RungInfo(uid, P, prev, cands, best)
+        st.last_rung = RungInfo(uid, P, prev, cands, best, sweep)
     else:
         _restore_node(ctx.fn, s, prev)
         st.report = ctx.design_report()
         st.active.remove(uid)
         st.actions.append(f"exit {s.name}: no feasible improvement at P={P}")
-        st.last_rung = RungInfo(uid, P, prev, cands, None)
+        st.last_rung = RungInfo(uid, P, prev, cands, None, sweep)
     return True
 
 
@@ -798,14 +879,44 @@ class BeamSearch(SearchStrategy):
     search degenerates to exactly the greedy trajectory.
     """
 
-    def __init__(self, width: int = 2, evaluator=None):
+    def __init__(self, width: int = 2, evaluator=None,
+                 rank: Optional[str] = None):
         self.width = max(1, int(width))
         self.evaluator = evaluator or SerialEvaluator()
+        self.rank = rank or os.environ.get("POM_BEAM_RANK", "latency")
+        if self.rank not in ("latency", "scalar"):
+            raise ValueError(f"beam rank must be 'latency' or 'scalar', "
+                             f"got {self.rank!r} (constructor, 'beam:k:rank' "
+                             f"spec, or POM_BEAM_RANK)")
+        self._resources: Dict = {}
 
     def describe(self) -> str:
+        if self.rank != "latency":
+            return f"beam:{self.width}:{self.rank}"
         return f"beam:{self.width}"
 
+    def _rank_value(self, state: LadderState):
+        """Beam-retention rank of a successor state.
+
+        ``latency`` (default) keeps the PR-3 behavior; ``scalar`` ranks by
+        a latency x resource scalarization over the Pareto axes
+        (``DesignReport.resource_vector``), so the non-anchored slots
+        prefer designs that buy their latency with fewer DSPs/BRAMs and
+        keep headroom for later rungs.  The anchored greedy slot and the
+        final state selection stay latency-based, which preserves the
+        cost <= greedy guarantee under either ranking.
+        """
+        rep = state.report
+        if self.rank == "latency":
+            return rep.latency
+        dsp_cap = max(1, self._resources.get("dsp", 1))
+        bram18_cap = max(1.0, self._resources.get("bram_bits", 18_000.0)
+                         / 18_000.0)
+        dsp, bram18 = rep.resource_vector
+        return rep.latency * (1.0 + dsp / dsp_cap + bram18 / bram18_cap)
+
     def run(self, ctx: SearchContext) -> LadderState:
+        self._resources = ctx.model.resources
         st = _init_ladder(ctx)
         st.lineage = True
         st.snap = _snapshot_fn(ctx.fn)
@@ -901,7 +1012,7 @@ class BeamSearch(SearchStrategy):
         if anchored:
             keep.append(anchored[0])
             seen.add(key_of(anchored[0]))
-        ranked = sorted(((s.report.latency, seq, s)
+        ranked = sorted(((self._rank_value(s), seq, s)
                          for seq, s in successors if not s.lineage),
                         key=lambda t: (t[0], t[1]))
         for _, _, s in ranked:
@@ -951,8 +1062,14 @@ def resolve_strategy(spec=None, beam_width: Optional[int] = None,
         raise ValueError(f"unknown DSE strategy {name!r} "
                          f"(registered: {sorted(STRATEGIES)})")
     if name == "beam":
+        rank = None
+        if arg and ":" in arg:
+            arg, rank = arg.split(":", 1)
+        if arg and not arg.lstrip("-").isdigit():
+            # "beam:scalar" — a rank without a width
+            arg, rank = "", arg
         width = beam_width if beam_width is not None else int(arg or 2)
-        return BeamSearch(width=width)
+        return BeamSearch(width=width, rank=rank)
     if name == "parallel":
         w = workers if workers is not None else (int(arg) if arg else None)
         return ParallelSearch(workers=w)

@@ -10,12 +10,33 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .affine import BasicSet, Constraint, LinExpr, dependence_vector, eq, ge, le
+from .affine import (BasicSet, BasisMap, Constraint, LinExpr,
+                     dependence_vector, eq, ge, le, transfer_dependences,
+                     transfer_legality)
 from .ir import Statement
 
 
 class IllegalTransform(Exception):
     pass
+
+
+# --------------------------------------------------------------------------
+# basis-step recording (analytic dependence transfer, PR 4)
+# --------------------------------------------------------------------------
+# Every transform links the state it produces to the state it consumed,
+# together with the positional ``BasisMap`` step it applied, so that the
+# next dependence/trip/legality query *inherits* the parent state's facts
+# through the change-of-basis algebra instead of re-running FM.
+def _pre_step(stmt: Statement):
+    from . import caching
+    if not caching.analytic_on():
+        return None
+    return (stmt.xfer_sig(), stmt.is_original_order())
+
+def _post_step(stmt: Statement, pre, dep_step: Tuple,
+               trip_op: Optional[Tuple]) -> None:
+    if pre is not None:
+        stmt.record_basis_step(pre[0], pre[1], dep_step, trip_op)
 
 
 # --------------------------------------------------------------------------
@@ -28,22 +49,60 @@ def self_dependences(stmt: Statement):
     Memoized per statement on (domain, iter_subst) signature: the result is
     a pure function of those plus the immutable body accesses, so stage-1
     tightness checks, the II model, and depgraph construction stop
-    re-deriving identical dependence polyhedra.  The returned list is
-    shared — callers must treat it as read-only.
+    re-deriving identical dependence polyhedra.  When the state was
+    produced by a recorded basis step and the parent state's dependences
+    fit the transfer algebra, the list is *transferred* (pure integer
+    arithmetic) instead of recomputed — counted under
+    ``selfdep_transfers``.  The returned list is shared — callers must
+    treat it as read-only.
     """
     from . import caching
     if not caching.ENABLED:
         caching.COUNTS["selfdep_evals"] += 1
         return _self_dependences_compute(stmt)
-    key = (stmt.domain.key(), stmt.subst_signature())
+    key = stmt.xfer_sig()
     hit = stmt._selfdep_cache.get(key)
     if hit is not None:
         caching.COUNTS["selfdep_hits"] += 1
         return hit
+    deps = _self_dependences_transfer(stmt)
+    if deps is not None:
+        caching.COUNTS["selfdep_transfers"] += 1
+        stmt._selfdep_cache[key] = deps
+        stmt._xfer_keys["selfdep"].add(key)
+        return deps
     caching.COUNTS["selfdep_evals"] += 1
     deps = _self_dependences_compute(stmt)
     stmt._selfdep_cache[key] = deps
     return deps
+
+
+def _steps_transferable(steps) -> bool:
+    """Steps are dependence-transferable only while they stay clear of the
+    rational FM relaxation around split sub-dims: a permutation must keep
+    every (tile, intra) pair in order, and a skew must not touch a
+    sub-dim (a tile entry is zero only by rational *rounding* of the
+    coupled ``t*d0 + d1`` constraints, which a flip or a scale undoes —
+    FM's reported bounds and legality verdicts then differ from the pure
+    vector algebra).  Validated against the live pair set when each step
+    is recorded (``record_basis_step``)."""
+    return all(dep_ok for _dep, _trip, dep_ok in steps)
+
+
+def _self_dependences_transfer(stmt: Statement):
+    """Transferred self-dependence list, or None (fall back to FM)."""
+    from . import caching
+    if not caching.analytic_on():
+        return None
+    walk = stmt._walk_trace(
+        lambda sig, _orig: sig in stmt._selfdep_cache)
+    if walk is None:
+        return None
+    root_sig, steps = walk
+    if not _steps_transferable(steps):
+        return None
+    basis = BasisMap(len(root_sig[0][0]), [d for d, _t, _ok in steps])
+    return transfer_dependences(stmt._selfdep_cache[root_sig], basis)
 
 
 def _self_dependences_compute(stmt: Statement):
@@ -87,7 +146,7 @@ def _legal(stmt: Statement) -> bool:
     if not caching.ENABLED:
         caching.COUNTS["legal_evals"] += 1
         return _legal_compute(stmt)
-    key = (stmt.domain.key(), stmt.subst_signature())
+    key = stmt.xfer_sig()
     hit = stmt._legal_cache.get(key)
     if hit is not None:
         caching.COUNTS["legal_hits"] += 1
@@ -95,6 +154,12 @@ def _legal(stmt: Statement) -> bool:
     ckey = _legal_canon_key(stmt)
     ok = _LEGAL_CACHE.get(ckey)
     if ok is None:
+        ok = _legal_transfer(stmt)
+        if ok is not None:
+            caching.COUNTS["legal_transfers"] += 1
+            stmt._legal_cache[key] = ok
+            stmt._xfer_keys["legal"].add(key)
+            return ok
         caching.COUNTS["legal_evals"] += 1
         ok = _legal_compute(stmt)
         if len(_LEGAL_CACHE) >= 100_000:
@@ -107,6 +172,34 @@ def _legal(stmt: Statement) -> bool:
 
 
 _LEGAL_CACHE: dict = {}
+
+
+def _legal_transfer(stmt: Statement) -> Optional[bool]:
+    """Legality by dependence transfer: walk back to the nearest ancestor
+    state that is *known legal* (cached True verdict, or the original
+    program order, which is legal by construction) and whose dependence
+    list is cached, then check that every dependence class stays
+    lexicographically positive through the accumulated basis steps.
+    Sound because legality w.r.t. the original order composes: a legal
+    ancestor plus an order-preserving basis change is legal, and an exact
+    transfer that reverses a class exhibits an integer dependence pair
+    whose execution order flips."""
+    from . import caching
+    if not caching.analytic_on():
+        return None
+
+    def rooted(sig, is_original):
+        known = is_original or stmt._legal_cache.get(sig) is True
+        return known and sig in stmt._selfdep_cache
+
+    walk = stmt._walk_trace(rooted)
+    if walk is None:
+        return None
+    root_sig, steps = walk
+    if not _steps_transferable(steps):
+        return None
+    basis = BasisMap(len(root_sig[0][0]), [d for d, _t, _ok in steps])
+    return transfer_legality(stmt._selfdep_cache[root_sig], basis)
 
 
 def _legal_canon_key(stmt: Statement) -> tuple:
@@ -175,12 +268,26 @@ def _legal_compute(stmt: Statement) -> bool:
 # --------------------------------------------------------------------------
 # transforms
 # --------------------------------------------------------------------------
+def permute_dims(stmt: Statement, order: Sequence[str]) -> None:
+    """Reorder the statement's loop dims to ``order`` (no legality check —
+    callers decide), recording the positional basis step so dependence and
+    bound facts transfer across the permutation."""
+    old_dims = list(stmt.dims)
+    order = list(order)
+    if order == old_dims:
+        return
+    pre = _pre_step(stmt)
+    stmt.domain = stmt.domain.permute(order)
+    perm = tuple(old_dims.index(d) for d in order)
+    _post_step(stmt, pre, ("permute", perm), ("permute", tuple(order)))
+
+
 def interchange(stmt: Statement, a: str, b: str, check: bool = True) -> None:
     dims = list(stmt.dims)
     ia, ib = dims.index(a), dims.index(b)
     dims[ia], dims[ib] = dims[ib], dims[ia]
     old = stmt.domain
-    stmt.domain = stmt.domain.permute(dims)
+    permute_dims(stmt, dims)
     if check and not _legal(stmt):
         stmt.domain = old
         raise IllegalTransform(f"interchange({a},{b}) violates dependences of {stmt.name}")
@@ -189,11 +296,14 @@ def interchange(stmt: Statement, a: str, b: str, check: bool = True) -> None:
 def split(stmt: Statement, d: str, t: int, d0: str, d1: str, check: bool = True) -> None:
     """d = t*d0 + d1, 0 <= d1 < t.  (paper: s.split(i, t, i0, i1))"""
     assert t >= 1
+    pre = _pre_step(stmt)
+    pos = stmt.dims.index(d)
     repl = LinExpr.var(d0) * t + LinExpr.var(d1)
     extra = [ge(LinExpr.var(d1), 0), le(LinExpr.var(d1), t - 1)]
     stmt.domain = stmt.domain.substitute_dim(d, repl, [d0, d1], extra)
     for k in list(stmt.iter_subst):
         stmt.iter_subst[k] = stmt.iter_subst[k].substitute(d, repl)
+    _post_step(stmt, pre, ("split", pos, t), ("split", d, t, d0, d1))
     # splitting never reorders iterations => always legal; check for safety
     if check and not _legal(stmt):
         raise IllegalTransform(f"split({d}) unexpectedly illegal on {stmt.name}")
@@ -211,7 +321,7 @@ def tile(stmt: Statement, i: str, j: str, t1: int, t2: int,
     before = [d for d in stmt.dims[:pos] if d not in (i0, i1, j0, j1)]
     order = before + [i0, j0, i1, j1] + [d for d in dims if d not in before]
     old = stmt.domain
-    stmt.domain = stmt.domain.permute(order)
+    permute_dims(stmt, order)
     if check and not _legal(stmt):
         stmt.domain = old
         raise IllegalTransform(f"tile({i},{j}) violates dependences of {stmt.name}")
@@ -223,34 +333,45 @@ def skew(stmt: Statement, i: str, j: str, f: int, ip: str, jp: str,
 
     Substitution: i = ip, j = jp - f*ip.
     """
+    pre = _pre_step(stmt)
+    pos_i, pos_j = stmt.dims.index(i), stmt.dims.index(j)
     stmt.domain = stmt.domain.rename_dim(i, ip)
     repl_j = LinExpr.var(jp) - LinExpr.var(ip) * f
     stmt.domain = stmt.domain.substitute_dim(j, repl_j, [jp])
     for k in list(stmt.iter_subst):
         e = stmt.iter_subst[k].rename({i: ip})
         stmt.iter_subst[k] = e.substitute(j, repl_j)
+    # loop bounds of the skewed dim are order-dependent: re-derive by FM
+    _post_step(stmt, pre, ("skew", pos_i, pos_j, f), ("skew", i, j))
     if check and not _legal(stmt):
         raise IllegalTransform(f"skew({i},{j},{f}) violates dependences of {stmt.name}")
 
 
 def shift(stmt: Statement, d: str, c: int, new: Optional[str] = None) -> None:
     """d -> d' = d + c (always legal)."""
+    pre = _pre_step(stmt)
     nd = new or d
+    ops = []
     if nd != d:
         stmt.domain = stmt.domain.rename_dim(d, nd)
         for k in list(stmt.iter_subst):
             stmt.iter_subst[k] = stmt.iter_subst[k].rename({d: nd})
+        ops.append(("rename", {d: nd}))
         d = nd
     repl = LinExpr.var(d) - c
     stmt.domain = stmt.domain.substitute_dim(d, repl, [d])
     for k in list(stmt.iter_subst):
         stmt.iter_subst[k] = stmt.iter_subst[k].substitute(d, repl)
+    ops.append(("shift", d, c))
+    _post_step(stmt, pre, ("shift",), ("chain", tuple(ops)))
 
 
 def rename_dim(stmt: Statement, old: str, new: str) -> None:
+    pre = _pre_step(stmt)
     stmt.domain = stmt.domain.rename_dim(old, new)
     for k in list(stmt.iter_subst):
         stmt.iter_subst[k] = stmt.iter_subst[k].rename({old: new})
+    _post_step(stmt, pre, ("rename",), ("rename", {old: new}))
     if stmt.pipeline_at == old:
         stmt.pipeline_at = new
     if old in stmt.unrolls:
