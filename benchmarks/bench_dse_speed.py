@@ -32,6 +32,13 @@ The ``conv_stack`` workload mirrors ``bench_apps.run_dnn``'s per-layer
 pattern (unoptimized report + full-budget DSE + split-budget DSE over a
 ResNet-style stack with repeated layer shapes) — the exact load that made
 the ``image`` suite too slow for fast mode before this engine existed.
+``conv_chain`` is the same stack as ONE multi-statement function, the
+task-level-pipelining workload.
+
+Dataflow columns: per workload, the DSE'd designs are re-aggregated under
+``dataflow=False`` (sequential sum of fusion groups) and ``dataflow=True``
+(streaming task graph), recording summed latency and BRAM18 per mode plus
+the number of applied regions — the latency/BRAM price of task overlap.
 
 Search-strategy columns (PR 3): each workload is additionally searched
 with every registered stage-2 strategy — ``greedy``, ``beam:2``,
@@ -56,7 +63,7 @@ from repro.core import caching
 from repro.core.cost_model import XC7Z020, HlsModel
 from repro.core.dse import auto_dse
 
-from .workloads import bicg, conv_nest, gemm, mm2, mm3
+from .workloads import bicg, conv_chain, conv_nest, gemm, mm2, mm3
 
 # ResNet18-style critical-layer sub-stack (out_ch, in_ch, H=W) with the
 # repetition pattern real nets have; sized to keep the suite fast.
@@ -142,6 +149,37 @@ def _measure_strategies(builders: List[Callable],
     return out
 
 
+def _measure_dataflow(builders: List[Callable],
+                      max_parallel: int) -> Dict[str, float]:
+    """Task-level-pipelining columns: per workload, the summed latency and
+    BRAM18 of the DSE'd designs under the sequential aggregation
+    (``dataflow=False``) and the streaming task-graph aggregation
+    (``dataflow=True``), plus how many functions actually formed an
+    applied dataflow region.  Single-task functions report equal numbers
+    by construction."""
+    caching.clear_all()
+    caching.reset_counts()
+    out = {"latency_off": 0, "latency_on": 0,
+           "bram18_off": 0, "bram18_on": 0, "regions_applied": 0}
+    for build in builders:
+        fn = build()
+        model = HlsModel()
+        auto_dse(fn, max_parallel=max_parallel, model=model)
+        fn.dataflow = False
+        off = model.design_report(fn)
+        fn.dataflow = True
+        on = model.design_report(fn)
+        out["latency_off"] += off.latency
+        out["latency_on"] += on.latency
+        out["bram18_off"] += off.bram18
+        out["bram18_on"] += on.bram18
+        if on.dataflow is not None and on.dataflow.applied:
+            out["regions_applied"] += 1
+    out["latency_speedup"] = round(
+        out["latency_off"] / max(out["latency_on"], 1), 2)
+    return out
+
+
 def measure(name: str, builders: List[Callable], max_parallel: int = 256,
             dnn_style: bool = False) -> Dict:
     caching.clear_all()
@@ -167,6 +205,7 @@ def measure(name: str, builders: List[Callable], max_parallel: int = 256,
         "incremental_transfers": inc["transfers"],
         "identical_results": identical,
         "strategies": _measure_strategies(builders, max_parallel),
+        "dataflow": _measure_dataflow(builders, max_parallel),
     }
 
 
@@ -200,6 +239,9 @@ def _suites() -> List[Tuple]:
         ("bicg", [lambda: bicg(512).fn], 256, False),
         ("3mm", [lambda: mm3(256).fn], 256, False),
         ("conv_stack", _conv_builders(), 64, True),
+        # the multi-statement conv stack in ONE function: the task-level
+        # pipelining (dataflow) workload — conv/relu chains + rescale
+        ("conv_chain", [lambda: conv_chain(20, (3, 8, 8)).fn], 16, False),
     ]
 
 
@@ -287,6 +329,7 @@ def csv_rows() -> List[str]:
     out = []
     for r in rows:
         strat = r["strategies"]
+        df = r["dataflow"]
         out.append(
             f"dse_speed/{r['workload']},{r['incremental_seconds'] * 1e6:.0f},"
             f"wall_speedup={r['wall_speedup']}x;"
@@ -299,7 +342,11 @@ def csv_rows() -> List[str]:
             f"greedy_cost={strat['greedy']['best_cost']};"
             f"beam2_cost={strat['beam2']['best_cost']};"
             f"beam_le_greedy={strat['beam_cost_le_greedy']};"
-            f"parallel2_identical={strat['parallel_identical_to_greedy']}")
+            f"parallel2_identical={strat['parallel_identical_to_greedy']};"
+            f"dataflow_lat={df['latency_off']}->{df['latency_on']}"
+            f"({df['latency_speedup']}x);"
+            f"dataflow_bram18={df['bram18_off']}->{df['bram18_on']};"
+            f"dataflow_regions={df['regions_applied']}")
     for r in fusion:
         out.append(
             f"dse_speed/fuse_prepass_{r['workload']},"

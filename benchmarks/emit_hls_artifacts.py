@@ -1,0 +1,47 @@
+"""Emit the HLS C of the example workloads to a directory (CI artifact).
+
+Writes one ``<name>.c`` per workload — including the dataflow-enabled
+multi-statement conv stack, both pre-DSE and after ``auto_dse`` — so every
+CI run archives the exact synthesizable output the current engine
+produces.
+
+    PYTHONPATH=src python -m benchmarks.emit_hls_artifacts [outdir]
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+from repro.core import caching
+from repro.core.dse import auto_dse
+from repro.core.pipeline import compile as pom_compile
+
+from .workloads import blur, conv_chain, edge_detect, gemm, mm2, mm3
+
+
+def emit_all(outdir: str = "hls_out") -> None:
+    os.makedirs(outdir, exist_ok=True)
+    cases = [
+        ("gemm", lambda: gemm(64), None, False),
+        ("2mm", lambda: mm2(64), None, False),
+        ("3mm", lambda: mm3(64), None, False),
+        ("blur", lambda: blur(64), ["out"], False),
+        ("edge_detect", lambda: edge_detect(64), ["out"], False),
+        ("conv_chain", conv_chain, ["out"], False),
+        ("blur_dse", lambda: blur(64), ["out"], True),
+        ("conv_chain_dse", conv_chain, ["out"], True),
+    ]
+    for name, build, outputs, dse in cases:
+        caching.clear_all()
+        f = build()
+        if dse:
+            auto_dse(f.fn, max_parallel=16, outputs=outputs)
+        code = pom_compile(f.fn, target="hls", outputs=outputs)
+        path = os.path.join(outdir, f"{name}.c")
+        with open(path, "w") as fh:
+            fh.write(code)
+        print(f"wrote {path} ({len(code.splitlines())} lines)")
+
+
+if __name__ == "__main__":
+    emit_all(sys.argv[1] if len(sys.argv) > 1 else "hls_out")

@@ -9,9 +9,10 @@ Suites:
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Sequence, Tuple
 
 from repro.core import dsl as pom
+from repro.core.ir import Call, wrap
 
 
 # ---------------------------------------------------------------------------
@@ -231,6 +232,53 @@ def conv_nest(name: str, oc: int, ic: int, oh: int, ow: int, kh: int = 3,
         pom.compute("conv", [o, y, x, c, r, s],
                     out(o, y, x) + img(c, y + r, x + s) * w(o, c, r, s),
                     out(o, y, x))
+    return f
+
+
+def conv_chain(hw: int = 12, chans: Sequence[int] = (3, 4, 4)):
+    """Multi-statement conv stack in ONE function: conv -> relu per layer,
+    plus a final elementwise rescale — the task-level-pipelining flagship.
+
+    Each layer is a "valid" 3x3 convolution (spatial extent shrinks by 2),
+    so layer l+1 reads layer l's activation array directly.  The statement
+    chain gives the streaming analysis one of each channel kind: conv ->
+    relu and relu -> conv hand-offs are order-mismatched (sequential
+    edges after stage 1's interchange), while relu -> rescale is a pure
+    in-order elementwise chain (FIFO).
+    """
+    with pom.function("conv_chain", outputs=["out"]) as f:
+        img = pom.placeholder("img", (chans[0], hw, hw))
+        cur, cur_hw = img, hw
+        for l, (ic, oc) in enumerate(zip(chans, chans[1:])):
+            oh = cur_hw - 2
+            w = pom.placeholder(f"w{l}", (oc, ic, 3, 3))
+            t = pom.placeholder(f"t{l}", (oc, oh, oh))
+            r_arr = pom.placeholder(f"r{l}", (oc, oh, oh))
+            o = pom.var(f"o{l}", 0, oc)
+            y = pom.var(f"y{l}", 0, oh)
+            x = pom.var(f"x{l}", 0, oh)
+            c = pom.var(f"c{l}", 0, ic)
+            kr = pom.var(f"kr{l}", 0, 3)
+            kc = pom.var(f"kc{l}", 0, 3)
+            pom.compute(f"conv{l}", [o, y, x, c, kr, kc],
+                        t(o, y, x) + cur(c, y + kr, x + kc) * w(o, c, kr, kc),
+                        t(o, y, x))
+            # y-major loop order: the elementwise stage consumes the conv's
+            # activation rows in the order the conv finalizes them, so the
+            # producer→consumer edge stays block-streamable
+            ro = pom.var(f"ro{l}", 0, oc)
+            ry = pom.var(f"ry{l}", 0, oh)
+            rx = pom.var(f"rx{l}", 0, oh)
+            pom.compute(f"relu{l}", [ry, rx, ro],
+                        Call("max", (wrap(t(ro, ry, rx)), wrap(0.0))),
+                        r_arr(ro, ry, rx))
+            cur, cur_hw = r_arr, oh
+        out = pom.placeholder("out", (chans[-1], cur_hw, cur_hw))
+        so = pom.var("so", 0, chans[-1])
+        sy = pom.var("sy", 0, cur_hw)
+        sx = pom.var("sx", 0, cur_hw)
+        pom.compute("rescale", [sy, sx, so], cur(so, sy, sx) * 0.5,
+                    out(so, sy, sx))
     return f
 
 

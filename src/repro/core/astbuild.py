@@ -14,7 +14,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from .affine import Bound, Constraint, LinExpr, ge, le
 from .ir import Function, Statement
-from .loop_ir import ForNode, IfNode, LoopBound, Node, ProgramAST, StmtNode
+from .loop_ir import (Channel, DataflowRegion, ForNode, IfNode, LoopBound,
+                      Node, ProgramAST, StmtNode, TaskNode)
 
 
 def _program_order(fn: Function) -> List[Statement]:
@@ -106,12 +107,45 @@ def _in_same_run(order, i, target, share) -> bool:
     return False
 
 
-def build_ast(fn: Function) -> ProgramAST:
+def build_ast(fn: Function, dataflow: Optional[bool] = None) -> ProgramAST:
+    """Build the annotated loop IR of ``fn``.
+
+    With dataflow enabled (``dataflow=True``, or None + an effective
+    per-function/environment toggle — see ``graph_ir.dataflow_effective``)
+    and the function forming an eligible streaming task graph of >= 2
+    tasks, the top-level loop nests are wrapped into ``TaskNode``s inside
+    a ``DataflowRegion`` carrying the classified channels.  The region is
+    annotation-only: its task bodies are exactly the nodes a sequential
+    build produces, in the same order.
+    """
     order = _program_order(fn)
     share = _share_with_prev(order)
     used_names: set = set()
     body = _build_level(order, share, 0, {}, [], used_names)
+    from .graph_ir import dataflow_effective
+    effective = dataflow_effective(fn) if dataflow is None else dataflow
+    if effective:
+        region = _dataflow_region(fn, body)
+        if region is not None:
+            body = [region]
     return ProgramAST(body)
+
+
+def _dataflow_region(fn: Function, body: List[Node]) -> Optional[DataflowRegion]:
+    """Wrap the top-level nodes into a DataflowRegion when the function's
+    task graph is streaming-eligible; None keeps the sequential AST."""
+    from .graph_ir import analyze_task_graph
+    info = analyze_task_graph(fn)
+    if not info.eligible or len(info.tasks) < 2:
+        return None
+    if len(body) != len(info.tasks):       # grouping mismatch: stay flat
+        return None
+    tasks = [TaskNode(grp[0].name, [node])
+             for grp, node in zip(info.tasks, body)]
+    channels = [Channel(ch.array, ch.producer, ch.consumer, ch.kind,
+                        ch.depth, ch.chunks, ch.bits)
+                for ch in info.channels]
+    return DataflowRegion(tasks, channels)
 
 
 def _build_level(stmts: List[Statement], share: List[int], depth: int,

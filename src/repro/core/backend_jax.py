@@ -13,7 +13,8 @@ from typing import Callable, Dict
 import numpy as np
 
 from .ir import BinOp, Call, Const, Expr, Function, IterVal, Load, Statement
-from .loop_ir import ForNode, IfNode, Node, ProgramAST, StmtNode
+from .loop_ir import (DataflowRegion, ForNode, IfNode, Node, ProgramAST,
+                      StmtNode, TaskNode)
 
 _CALLS = {
     "exp": math.exp, "sqrt": math.sqrt, "abs": abs,
@@ -70,7 +71,9 @@ def compile_jax(fn: Function, ast: ProgramAST) -> Callable[[Dict[str, np.ndarray
             bufs[arr.name][idx] = val
 
         def exec_node(n: Node):
-            if isinstance(n, ProgramAST):
+            if isinstance(n, (ProgramAST, DataflowRegion, TaskNode)):
+                # a dataflow region is annotation-only: running its tasks
+                # in program order is a correct schedule of the region
                 for c in n.body:
                     exec_node(c)
             elif isinstance(n, ForNode):

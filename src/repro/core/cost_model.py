@@ -115,6 +115,33 @@ class NodeReport:
 
 
 @dataclass
+class DataflowReport:
+    """Task-level-pipelining view of one design (``DesignReport.dataflow``).
+
+    ``applied`` is True when the streaming schedule was adopted: the
+    region's latency (``max`` over task finish times + fill/drain control
+    overhead) beat the sequential sum *and* the channel storage fit the
+    device.  When False the report keeps the sequential numbers and
+    ``reason`` says why (ineligible graph, no latency gain, or channel
+    BRAM overflow)."""
+    applied: bool
+    tasks: int
+    sequential_latency: int
+    region_latency: int
+    channel_bits: float = 0.0
+    channel_lut: int = 0
+    # (array, producer, consumer, kind, depth) per channel
+    channels: Tuple[Tuple[str, str, str, str, int], ...] = ()
+    reason: str = ""
+
+    @property
+    def overlap(self) -> int:
+        """Cycles saved by task overlap (0 when not applied)."""
+        return (self.sequential_latency - self.region_latency
+                if self.applied else 0)
+
+
+@dataclass
 class DesignReport:
     latency: int
     nodes: Dict[str, NodeReport]
@@ -123,6 +150,7 @@ class DesignReport:
     ff: int
     bram_bits: float
     feasible: bool
+    dataflow: Optional[DataflowReport] = None
 
     @property
     def parallelism(self) -> float:
@@ -192,9 +220,11 @@ class HlsModel:
     read-only.
     """
 
-    def __init__(self, resources: Dict = XC7Z020, cache: Optional[bool] = None):
+    def __init__(self, resources: Dict = XC7Z020, cache: Optional[bool] = None,
+                 dataflow: Optional[bool] = None):
         self.resources = dict(resources)
         self._cache_flag = cache
+        self._dataflow_flag = dataflow
         self._node_cache: Dict[Tuple, NodeReport] = {}
         self._design_cache: Dict[Tuple, DesignReport] = {}
         self._expr_cache: Dict[int, ExprStats] = {}   # uid -> body stats
@@ -203,6 +233,17 @@ class HlsModel:
     def _caching(self) -> bool:
         from . import caching
         return caching.ENABLED if self._cache_flag is None else self._cache_flag
+
+    def _dataflow_on(self, fn: Function) -> bool:
+        """Effective dataflow toggle for this design: per-function override
+        first (the stage-2 search decision / DSL toggle), then the model's
+        constructor flag, then the ``POM_DATAFLOW`` environment default."""
+        if fn.dataflow is not None:
+            return bool(fn.dataflow)
+        if self._dataflow_flag is not None:
+            return bool(self._dataflow_flag)
+        from .graph_ir import dataflow_default
+        return dataflow_default()
 
     @staticmethod
     def _partition_sig(stmts: Sequence[Statement]) -> Tuple:
@@ -455,21 +496,23 @@ class HlsModel:
     def design_report(self, fn: Function) -> DesignReport:
         self.stats.design_evals += 1
         use_cache = self._caching()
+        df = self._dataflow_on(fn)
         key = None
         if use_cache:
             key = (tuple(s.schedule_signature() for s in fn.statements),
                    tuple(sorted((ph.name, tuple(sorted(ph.partitions.items())))
-                                for ph in fn.placeholders.values())))
+                                for ph in fn.placeholders.values())),
+                   df)
             hit = self._design_cache.get(key)
             if hit is not None:
                 self.stats.design_cache_hits += 1
                 return hit
-        rep = self._design_report_compute(fn)
+        rep = self._design_report_compute(fn, df)
         if use_cache:
             self._design_cache[key] = rep
         return rep
 
-    def _design_report_compute(self, fn: Function) -> DesignReport:
+    def _design_report_compute(self, fn: Function, df: bool = False) -> DesignReport:
         groups = _fusion_groups(fn)
         nodes: Dict[str, NodeReport] = {}
         dsp = lut = 0
@@ -498,9 +541,94 @@ class HlsModel:
         for grp in groups:
             total += max(nodes[s.name].latency for s in grp)
         ff = lut  # rough FF ~ LUT on these designs
-        feasible = (dsp <= self.resources["dsp"] and lut <= self.resources["lut"]
-                    and bram <= self.resources["bram_bits"] and ff <= self.resources["ff"])
-        return DesignReport(total, nodes, dsp, lut, ff, bram, feasible)
+
+        def feasible_at(l, b, f_):
+            return (dsp <= self.resources["dsp"] and l <= self.resources["lut"]
+                    and b <= self.resources["bram_bits"]
+                    and f_ <= self.resources["ff"])
+
+        dataflow = None
+        if df and len(groups) > 1:
+            dataflow = self._dataflow_schedule(fn, groups, nodes, total)
+            if dataflow.applied:
+                lut_df = lut + dataflow.channel_lut
+                bram_df = bram + dataflow.channel_bits
+                if feasible_at(lut_df, bram_df, lut_df) or not feasible_at(lut, bram, ff):
+                    total = dataflow.region_latency
+                    lut, bram, ff = lut_df, bram_df, lut_df
+                else:
+                    dataflow = DataflowReport(
+                        False, dataflow.tasks, dataflow.sequential_latency,
+                        dataflow.region_latency,
+                        reason="channel storage exceeds device BRAM")
+        feasible = feasible_at(lut, bram, ff)
+        return DesignReport(total, nodes, dsp, lut, ff, bram, feasible,
+                            dataflow)
+
+    def _dataflow_schedule(self, fn: Function, groups, nodes,
+                           sequential: int) -> DataflowReport:
+        """Streaming schedule of the task graph: per-task start times via
+        longest-path relaxation over the classified channels, region
+        latency = max task finish + fork/join overhead.
+
+        Each task's finish time obeys two lower bounds per in-edge
+        (``graph_ir`` channel kinds), relaxed in task order over the DAG:
+
+        * **fill-path** — a consumer cannot finish before its first input
+          arrives plus its own full latency: ``fillpath(c) >= fillpath(p)
+          + fill(p→c)``, where the edge fill is ``depth x II_p`` for a
+          ``fifo``, the producer's first ``fill_chunks`` chunk times for a
+          ``pipo``, and the producer's whole latency for a ``seq`` edge;
+        * **drain** — a consumer cannot finish before the producer's last
+          chunk plus the consumer's trailing window: ``finish(c) >=
+          finish(p) + tail``, with ``tail`` the consumer-paced mirror of
+          the fill (its whole latency on a ``seq`` edge).
+
+        ``finish(t) = max(fillpath(t) + lat(t), max over edges)``; region
+        latency = max finish + fork/join overhead.  A fully sequential
+        chain collapses to exactly the sequential sum, and the schedule is
+        only *applied* when it strictly beats that sum — the model never
+        reports dataflow making a design slower."""
+        from .graph_ir import (CHANNEL_LUT, DATAFLOW_OVERHEAD,
+                               analyze_task_graph)
+        info = analyze_task_graph(fn)
+        n = len(info.tasks)
+        if not info.eligible:
+            return DataflowReport(False, n, sequential, sequential,
+                                  reason=info.reason)
+        lat = [max(nodes[s.name].latency for s in grp) for grp in info.tasks]
+        fillpath = [0] * n
+        finish = [0] * n
+        by_dst: Dict[int, List] = {}
+        for ch in info.channels:      # src_task < dst_task always
+            by_dst.setdefault(ch.dst_task, []).append(ch)
+        for t in range(n):
+            drain = 0
+            for ch in by_dst.get(t, ()):
+                p_lat, c_lat = lat[ch.src_task], lat[ch.dst_task]
+                if ch.kind == "fifo":
+                    fill = ch.depth * nodes[ch.producer].ii
+                    tail = ch.depth * nodes[ch.consumer].ii
+                elif ch.kind == "pipo":
+                    frac = ch.fill_chunks / max(ch.chunks, 1)
+                    fill = int(math.ceil(p_lat * frac))
+                    tail = int(math.ceil(c_lat * frac))
+                else:                 # seq: full producer drain
+                    fill, tail = p_lat, c_lat
+                fillpath[t] = max(fillpath[t], fillpath[ch.src_task] + fill)
+                drain = max(drain, finish[ch.src_task] + tail)
+            finish[t] = max(fillpath[t] + lat[t], drain)
+        region = max(finish) + DATAFLOW_OVERHEAD
+        channels = tuple((ch.array, ch.producer, ch.consumer, ch.kind,
+                          ch.depth) for ch in info.channels)
+        if region >= sequential:
+            return DataflowReport(False, n, sequential, region,
+                                  channels=channels,
+                                  reason="no latency gain over sequential")
+        bits = sum(ch.bits for ch in info.channels)
+        chan_lut = CHANNEL_LUT * len(info.channels)
+        return DataflowReport(True, n, sequential, region, bits, chan_lut,
+                              channels)
 
 
 # --------------------------------------------------------------------------
@@ -647,16 +775,11 @@ def _find_ph(group: Sequence[Statement], name: str) -> Optional[Placeholder]:
 
 
 def _fusion_groups(fn: Function) -> List[List[Statement]]:
-    from .astbuild import _program_order, _share_with_prev
-    order = _program_order(fn)
-    share = _share_with_prev(order)
-    groups: List[List[Statement]] = []
-    for s, sh in zip(order, share):
-        if sh > 0 and groups:
-            groups[-1].append(s)
-        else:
-            groups.append([s])
-    return groups
+    # one definition of record: the streaming task graph and the cost
+    # aggregation must index the exact same grouping, or the dataflow
+    # schedule would mis-attribute task latencies
+    from .graph_ir import fusion_tasks
+    return fusion_tasks(fn)
 
 
 # --------------------------------------------------------------------------

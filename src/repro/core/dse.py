@@ -296,6 +296,7 @@ class DseResult:
     cost_stats: Optional["CostStats"] = None   # model eval/hit counters
     archive: Optional[ParetoArchive] = None    # latency/resource frontier
     strategy: str = "greedy"                   # which searcher produced it
+    dataflow: Optional[bool] = None            # stage-2 dataflow decision
 
 
 # --------------------------------------------------------------------------
@@ -307,7 +308,8 @@ def auto_dse(fn: Function, target: str = "fpga", max_parallel: int = 256,
              strategy=None, beam_width: Optional[int] = None,
              workers: Optional[int] = None,
              archive=None, graph_passes: Sequence[str] = (),
-             outputs: Optional[Sequence[str]] = None) -> DseResult:
+             outputs: Optional[Sequence[str]] = None,
+             dataflow: Optional[bool] = None) -> DseResult:
     """Run both DSE stages as a ``pipeline.PassManager`` pipeline:
 
         build graph → verify graph → [dce if outputs narrow the graph]
@@ -329,11 +331,15 @@ def auto_dse(fn: Function, target: str = "fpga", max_parallel: int = 256,
     frontier after the run.  ``outputs`` names the externally observable
     arrays (enables graph-level dead-op elimination); ``graph_passes``
     inserts extra named graph passes (e.g. ``("fuse",)``) ahead of the
-    polyhedral stages."""
+    polyhedral stages.  ``dataflow`` pins the task-level-pipelining toggle
+    on the function (True/False; None keeps the ``POM_DATAFLOW``-defaulted
+    stage-2 on/off search — see ``search._dataflow_step``)."""
     from .pipeline import (GRAPH_PASSES, BuildGraph, GraphCSE, GraphDCE,
                            LowerToPoly, PassManager, PipelineContext,
                            Stage1DSE, Stage2DSE, VerifyGraph, VerifyPoly)
     t0 = time.perf_counter()
+    if dataflow is not None:
+        fn.dataflow = bool(dataflow)
     model = model or HlsModel(resources)
     if archive is True:
         archive = ParetoArchive()
@@ -369,4 +375,4 @@ def auto_dse(fn: Function, target: str = "fpga", max_parallel: int = 256,
         # report unroll factor per current loop dim (1 when untouched)
         tiles[s.name] = [s.unrolls.get(d, 1) for d in s.dims]
     return DseResult(report, log, actions, dt, tiles, model.stats,
-                     archive, strat)
+                     archive, strat, ctx.fn.dataflow)

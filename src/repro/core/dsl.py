@@ -99,10 +99,13 @@ class PomFunction:
     dead.
     """
 
-    def __init__(self, name: str, outputs: Optional[Sequence[str]] = None):
+    def __init__(self, name: str, outputs: Optional[Sequence[str]] = None,
+                 dataflow: Optional[bool] = None):
         self.fn = Function(name)
         self.outputs: Optional[List[str]] = (
             None if outputs is None else [str(o) for o in outputs])
+        if dataflow is not None:
+            self.fn.dataflow = bool(dataflow)
         self._entered = False
 
     # context manager so computes auto-register
@@ -120,6 +123,13 @@ class PomFunction:
 
     def stmt(self, name: str) -> "ComputeHandle":
         return ComputeHandle(self.fn.stmt(name))
+
+    def set_dataflow(self, flag: Optional[bool]) -> "PomFunction":
+        """Pin task-level pipelining for this function: ``True``/``False``
+        override the ``POM_DATAFLOW`` environment default, ``None``
+        restores it (and lets the stage-2 DSE decide)."""
+        self.fn.dataflow = None if flag is None else bool(flag)
+        return self
 
     def auto_DSE(self, target: str = "fpga", **kw):
         """paper: f.auto_DSE("PATH") -- run the two-stage DSE engine
@@ -143,11 +153,14 @@ class PomFunction:
         return f"PomFunction({self.fn.name})"
 
 
-def function(name: str, outputs: Optional[Sequence[str]] = None) -> PomFunction:
+def function(name: str, outputs: Optional[Sequence[str]] = None,
+             dataflow: Optional[bool] = None) -> PomFunction:
     """Open a POM function scope; ``outputs`` optionally names the
     externally observable arrays (enables graph-level dead-op elimination
-    in the pipeline — see ``graph_ir.eliminate_dead_ops``)."""
-    return PomFunction(name, outputs=outputs)
+    in the pipeline — see ``graph_ir.eliminate_dead_ops``); ``dataflow``
+    pins task-level pipelining on or off for the function (default: the
+    ``POM_DATAFLOW`` environment toggle + the stage-2 DSE decision)."""
+    return PomFunction(name, outputs=outputs, dataflow=dataflow)
 
 
 # --------------------------------------------------------------------------

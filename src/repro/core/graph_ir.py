@@ -23,6 +23,7 @@ the layers together and verifies each boundary.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -306,6 +307,304 @@ def op_structural_key(stmt: Statement) -> Tuple:
     store = (c.id("@" + stmt.store.array.name),
              tuple(c.expr(e) for e in stmt.store.idx))
     return (dkey, subst, store, _body_key(stmt.body, c))
+
+
+# --------------------------------------------------------------------------
+# streaming task graph (task-level pipelining / HLS dataflow)
+# --------------------------------------------------------------------------
+# A *task* is one fusion group (one top-level loop nest after `after`
+# grouping); a producer→consumer edge between tasks is realized by a
+# *channel* whose kind is decided by a streaming-legality analysis over the
+# composed access functions:
+#
+#   * ``fifo``  — the consumer reads the producer's array in exactly the
+#     monotone affine order the producer writes it: both accesses are the
+#     identity over their (current) loop dims, positional loop bounds agree,
+#     each element is written once (no write→write self-dependence, i.e. no
+#     reduction dim outside the store footprint), and the task is the
+#     array's only consumer.  Channel = a small ``hls::stream`` FIFO.
+#   * ``pipo``  — both sides walk the array in the same *major-block* order:
+#     some index position p is driven by each task's outermost loop dim
+#     (unit coefficient), so array slices along dim p are finalized and
+#     consumed in the same strictly increasing order, and the consumer may
+#     start once the producer has finished the first ``fill_chunks``
+#     chunks.  Channel = a ping-pong buffer of ``fill_chunks + 1`` chunks.
+#     Constant offsets (stencil rows) only widen the fill window.
+#   * ``seq``   — no streaming order exists (e.g. the consumer's leading
+#     read dim is an inner loop): the consumer waits for the producer to
+#     finish.  No on-chip channel storage; the edge only orders the tasks.
+#
+# Loop bounds come from ``Statement.dim_bounds`` — the fact the analytic
+# transfer layer (PR 4) pushes through every recorded basis step — so
+# re-classifying a channel after a DSE transform costs dictionary lookups,
+# not Fourier–Motzkin projections.
+
+FIFO_DEPTH = 4                 # element slots per FIFO channel
+CHANNEL_LUT = 60               # handshake/control LUTs per channel
+DATAFLOW_OVERHEAD = 8          # region fork/join control cycles
+
+
+def dataflow_default() -> bool:
+    """Ambient dataflow toggle: ``POM_DATAFLOW=0`` disables task-level
+    pipelining everywhere (bit-identical to the pre-dataflow engine)."""
+    return os.environ.get("POM_DATAFLOW", "1") != "0"
+
+
+def dataflow_effective(fn: Function) -> bool:
+    """Per-function dataflow setting: an explicit ``fn.dataflow`` (DSL
+    toggle / ``compile(dataflow=...)`` / the stage-2 search decision) wins
+    over the ``POM_DATAFLOW`` environment default."""
+    flag = getattr(fn, "dataflow", None)
+    return dataflow_default() if flag is None else bool(flag)
+
+
+@dataclass(frozen=True)
+class ChannelSpec:
+    """One producer→consumer array edge between two tasks."""
+    array: str
+    producer: str              # writer statement name
+    consumer: str              # reader statement name
+    src_task: int
+    dst_task: int
+    kind: str                  # "fifo" | "pipo" | "seq"
+    depth: int                 # fifo: element slots; pipo: chunk buffers
+    chunks: int                # pipo: producer outer-dim chunk count
+    fill_chunks: int           # pipo: chunks produced before consumer starts
+    bits: float                # on-chip channel storage (0 for seq)
+
+
+@dataclass
+class TaskGraphInfo:
+    """The streaming task graph of one function (``analyze_task_graph``)."""
+    tasks: List[List[Statement]]
+    channels: List[ChannelSpec]
+    eligible: bool
+    reason: str = ""
+
+    def describe(self) -> str:
+        """Readable dump (the ``POM_DUMP_IR=taskgraph`` format)."""
+        head = (f"taskgraph ({len(self.tasks)} task"
+                f"{'s' if len(self.tasks) != 1 else ''}, "
+                + ("dataflow-eligible" if self.eligible
+                   else f"not eligible: {self.reason}") + ")")
+        lines = [head]
+        for t, grp in enumerate(self.tasks):
+            for s in grp:
+                arr, _ = s.store_access()
+                reads = sorted({a.name for a, _ in s.load_accesses()})
+                lines.append(f"  task {t}: {s.name}  "
+                             f"[{', '.join(reads)}] -> {arr.name}")
+        for ch in self.channels:
+            extra = ""
+            if ch.kind == "pipo":
+                extra = f" chunks={ch.chunks} fill={ch.fill_chunks}"
+            lines.append(
+                f"  channel {ch.array}: {ch.producer} -> {ch.consumer}  "
+                f"kind={ch.kind} depth={ch.depth}{extra} "
+                f"bits={int(ch.bits)}")
+        return "\n".join(lines)
+
+
+def fusion_tasks(fn: Function) -> List[List[Statement]]:
+    """Statements grouped into tasks = fusion groups in program order (the
+    same grouping the AST builder opens one top-level nest per)."""
+    from .astbuild import _program_order, _share_with_prev
+    order = _program_order(fn)
+    share = _share_with_prev(order)
+    tasks: List[List[Statement]] = []
+    for s, sh in zip(order, share):
+        if sh > 0 and tasks:
+            tasks[-1].append(s)
+        else:
+            tasks.append([s])
+    return tasks
+
+
+def _perm_access(stmt: Statement, idx: Sequence) -> Optional[Tuple]:
+    """Positional shape of a permutation access: per index position, the
+    (loop depth of the driving dim, constant offset), or None when some
+    position is not a distinct single dim with unit coefficient.  Such an
+    access touches each element exactly once per sweep, in an order fully
+    determined by the positional tuple — two statements with equal tuples
+    (and equal positional loop bounds) write/read the array in the *same*
+    element order, which is the FIFO condition."""
+    if len(idx) != len(stmt.dims):
+        return None
+    pos = {d: i for i, d in enumerate(stmt.dims)}
+    out = []
+    seen = set()
+    for e in idx:
+        key = e.key()
+        if len(key[0]) != 1:
+            return None
+        (var, coeff), = key[0]
+        if coeff != 1 or var not in pos or var in seen:
+            return None
+        seen.add(var)
+        out.append((pos[var], key[1]))
+    return tuple(out)
+
+
+def _chunk_stride(stmt: Statement, idx: Sequence, p: int,
+                  writer: bool) -> Optional[Tuple[int, int, int]]:
+    """Major-block decomposition of index position ``p``: returns
+    ``(a, lo, hi)`` when ``idx[p] = a*outer + r`` with ``outer`` the
+    statement's outermost loop dim (coefficient ``a > 0``) and the
+    residual ``r`` (inner dims + constant) confined to ``[lo, hi]`` — so
+    the window of array slices touched along dim ``p`` advances
+    monotonically, ``a`` slices per outer-loop iteration.  For a *writer*
+    the residual must fit inside one stride (``hi - lo <= a - 1``):
+    blocks may not overlap, or a block would be revisited after the next
+    one started.  A reader's window may span several blocks (a stencil
+    halo) — that only widens the fill lag.  Survives DSE splits
+    (``idx = f*i_o + i_u``, ``i_u in [0, f)``): the residual bounds come
+    from ``Statement.dim_bounds``, the fact the PR-4 transfer algebra
+    pushes through every recorded basis step.  None when the access is
+    not block-monotone in ``p``."""
+    if p >= len(idx) or not stmt.dims:
+        return None
+    e = idx[p]
+    outer = stmt.dims[0]
+    a = e.coeffs.get(outer, 0)
+    if a <= 0:
+        return None
+    bounds = stmt.dim_bounds()
+    lo = hi = e.const
+    for v, c in e.coeffs.items():
+        if v == outer or c == 0:
+            continue
+        b = bounds.get(v)
+        if b is None:
+            return None
+        lo += min(c * b[0], c * b[1])
+        hi += max(c * b[0], c * b[1])
+    if writer and hi - lo > a - 1:
+        return None
+    return (a, lo, hi)
+
+
+def _elem_bits(fn: Function, array: str) -> float:
+    ph = fn.placeholders.get(array)
+    return float(ph.dtype.bits) if ph is not None else 32.0
+
+
+def _array_bits(fn: Function, array: str) -> float:
+    ph = fn.placeholders.get(array)
+    if ph is None:
+        return 0.0
+    n = 1
+    for s in ph.shape:
+        n *= s
+    return float(n * ph.dtype.bits)
+
+
+def _classify_edge(fn: Function, writer: Statement, readers: List[Statement],
+                   array: str, multi_consumer: bool) -> Tuple[str, int, int, int, float]:
+    """(kind, depth, chunks, fill_chunks, bits) of one producer→consumer
+    array edge, weakest kind over all reader access functions."""
+    w_arr, w_idx = writer.store_access()
+    # ---- FIFO: exact in-order elementwise hand-off --------------------------
+    if not multi_consumer and len(readers) == 1:
+        r = readers[0]
+        r_accs = [idx for a, idx in r.load_accesses() if a.name == array]
+        distinct = {tuple(e.key() for e in idx) for idx in r_accs}
+        # a permutation store covers every loop dim injectively, so each
+        # element is written exactly once (no write→write self-dependence)
+        w_perm = _perm_access(writer, w_idx)
+        r_perm = _perm_access(r, r_accs[0]) if len(distinct) == 1 else None
+        if w_perm is not None and w_perm == r_perm:
+            wb, rb = writer.dim_bounds(), r.dim_bounds()
+            w_bounds = [wb.get(d) for d in writer.dims]
+            r_bounds = [rb.get(d) for d in r.dims]
+            if (None not in w_bounds and w_bounds == r_bounds):
+                bits = FIFO_DEPTH * _elem_bits(fn, array)
+                return ("fifo", FIFO_DEPTH, 0, 0, bits)
+    # ---- PIPO: major-block monotone on both sides at some index position ----
+    wb = writer.dim_bounds().get(writer.dims[0]) if writer.dims else None
+    for p in range(len(w_idx)):
+        w = _chunk_stride(writer, w_idx, p, writer=True)
+        if w is None or wb is None:
+            continue
+        stride, _w_lo, w_hi = w
+        chunks = max(1, wb[1] - wb[0] + 1)
+        max_lag = 0
+        ok = True
+        for r in readers:
+            for arr, idx in r.load_accesses():
+                if arr.name != array:
+                    continue
+                rc = _chunk_stride(r, idx, p, writer=False)
+                if rc is None:
+                    ok = False
+                    break
+                # producer chunks the consumer's window runs ahead of the
+                # writer's block (stencil halo): widens the fill window
+                lag = -(-max(0, rc[2] - w_hi) // stride)    # ceil division
+                max_lag = max(max_lag, lag)
+            if not ok:
+                break
+        if ok:
+            fill = 1 + max_lag
+            depth = fill + 1
+            # one chunk = the block one producer outer-iteration finalizes
+            bits = depth * _array_bits(fn, array) / chunks
+            return ("pipo", depth, chunks, fill, bits)
+    # ---- fallback: pure ordering edge ---------------------------------------
+    return ("seq", 0, 0, 0, 0.0)
+
+
+def analyze_task_graph(fn: Function) -> TaskGraphInfo:
+    """Build the streaming task graph of ``fn``: fusion groups as tasks,
+    classified channels on every cross-task producer→consumer array.
+
+    A function is dataflow-*eligible* when tasks form a single-writer
+    forward DAG: every array is written by at most one task, and no task
+    reads an array a *later* task writes (such an anti-dependence would
+    race under concurrent task start — HLS rejects the region, and so do
+    we).  Ineligible functions keep the sequential schedule; the info
+    still carries the tasks and the reason for the dump."""
+    tasks = fusion_tasks(fn)
+    if len(tasks) < 2:
+        return TaskGraphInfo(tasks, [], False, "single task")
+    writer_of: Dict[str, int] = {}
+    writer_stmt: Dict[str, Statement] = {}
+    for t, grp in enumerate(tasks):
+        for s in grp:
+            arr, _ = s.store_access()
+            prev = writer_of.get(arr.name)
+            if prev is not None and prev != t:
+                return TaskGraphInfo(
+                    tasks, [], False,
+                    f"array {arr.name} written by tasks {prev} and {t}")
+            writer_of[arr.name] = t
+            writer_stmt[arr.name] = s
+    readers_of: Dict[Tuple[str, int], List[Statement]] = {}
+    consumer_tasks: Dict[str, Set[int]] = {}
+    for t, grp in enumerate(tasks):
+        for s in grp:
+            for a, _ in s.load_accesses():
+                w = writer_of.get(a.name)
+                if w is None or w == t:
+                    continue
+                if w > t:
+                    return TaskGraphInfo(
+                        tasks, [], False,
+                        f"task {t} reads {a.name} before task {w} writes it")
+                lst = readers_of.setdefault((a.name, t), [])
+                if s not in lst:
+                    lst.append(s)
+                consumer_tasks.setdefault(a.name, set()).add(t)
+    channels: List[ChannelSpec] = []
+    for (array, t), readers in sorted(
+            readers_of.items(), key=lambda kv: (kv[0][1], kv[0][0])):
+        w = writer_stmt[array]
+        multi = len(consumer_tasks[array]) > 1
+        kind, depth, chunks, fill, bits = _classify_edge(
+            fn, w, readers, array, multi)
+        channels.append(ChannelSpec(
+            array, w.name, readers[0].name, writer_of[array], t,
+            kind, depth, chunks, fill, bits))
+    return TaskGraphInfo(tasks, channels, True)
 
 
 def share_structural_memos(g: GraphIR, warm: Sequence[str] = ()) -> Dict[Tuple, List[str]]:

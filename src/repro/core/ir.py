@@ -600,6 +600,11 @@ class Function:
         self.name = name
         self.statements: List[Statement] = []
         self.placeholders: Dict[str, Placeholder] = {}
+        # task-level pipelining toggle: None follows the POM_DATAFLOW
+        # environment default; True/False is an explicit per-function
+        # decision (DSL toggle, compile(dataflow=...), or the stage-2
+        # dataflow search step).  See graph_ir.dataflow_effective.
+        self.dataflow: Optional[bool] = None
 
     def add(self, stmt: Statement):
         stmt.function = self

@@ -75,6 +75,43 @@ class StmtNode(Node):
 
 
 @dataclass
+class Channel:
+    """One inter-task array channel of a dataflow region.
+
+    ``kind`` is decided by the streaming-legality analysis
+    (``graph_ir.analyze_task_graph``): ``fifo`` = in-order elementwise
+    stream (``depth`` element slots), ``pipo`` = ping-pong chunk buffer
+    (``depth`` chunks of the array's outer-dim blocks), ``seq`` = no
+    streaming order exists — the edge only sequences the two tasks and
+    declares no on-chip storage.
+    """
+    array: str
+    producer: str              # writer statement name
+    consumer: str              # reader statement name
+    kind: str                  # "fifo" | "pipo" | "seq"
+    depth: int
+    chunks: int = 0            # pipo: producer outer-dim chunk count
+    bits: float = 0.0          # on-chip channel storage
+
+
+@dataclass
+class TaskNode(Node):
+    """One dataflow task: a full top-level loop nest (fusion group)."""
+    name: str
+    body: List[Node] = field(default_factory=list)
+
+
+@dataclass
+class DataflowRegion(Node):
+    """A ``#pragma HLS dataflow`` region: tasks run as concurrent
+    processes connected by ``channels``.  Semantically the region is an
+    annotation — executing the tasks in order (what the JAX/Pallas
+    backends do) is always a correct schedule of it."""
+    body: List[Node] = field(default_factory=list)   # TaskNodes
+    channels: List[Channel] = field(default_factory=list)
+
+
+@dataclass
 class ProgramAST(Node):
     body: List[Node] = field(default_factory=list)
 
@@ -110,6 +147,18 @@ def describe(node: Node, indent: int = 0) -> str:
     if isinstance(node, StmtNode):
         dm = ", ".join(f"{k}->{v}" for k, v in node.dim_map.items())
         return f"{pad}{node.stmt.name}({dm})"
+    if isinstance(node, DataflowRegion):
+        lines = [f"{pad}dataflow region ({len(node.body)} tasks):"]
+        for ch in node.channels:
+            extra = f" chunks={ch.chunks}" if ch.kind == "pipo" else ""
+            lines.append(f"{pad}  channel {ch.array}: {ch.producer} -> "
+                         f"{ch.consumer}  kind={ch.kind} depth={ch.depth}"
+                         f"{extra}")
+        lines += [describe(c, indent + 1) for c in node.body]
+        return "\n".join(lines)
+    if isinstance(node, TaskNode):
+        return "\n".join([f"{pad}task {node.name}:"]
+                         + [describe(c, indent + 1) for c in node.body])
     raise TypeError(node)
 
 

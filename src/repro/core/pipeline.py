@@ -82,6 +82,7 @@ class PassManager:
         self.dump = dump if dump is not None else os.environ.get("POM_DUMP_IR")
 
     def run(self, ctx: PipelineContext) -> PipelineContext:
+        ctx.options.setdefault("_dump", self.dump)
         for p in self.passes:
             p.run(ctx)
             if p.dumps and self.dump and self.dump in (p.dumps, "all"):
@@ -93,6 +94,8 @@ class PassManager:
         print(f"// POM_DUMP_IR [{p.dumps}] after pass '{p.name}'", file=out)
         if p.dumps == "graph" and ctx.graph is not None:
             print(ctx.graph.describe(), file=out)
+        elif p.dumps == "taskgraph" and ctx.records.get("taskgraph") is not None:
+            print(ctx.records["taskgraph"].describe(), file=out)
         elif p.dumps == "poly":
             print(ctx.fn.describe(), file=out)
         elif p.dumps == "loops" and ctx.ast is not None:
@@ -344,6 +347,24 @@ def stage2_pass(spec: Optional[str] = None) -> Stage2DSE:
 # --------------------------------------------------------------------------
 # loop stage
 # --------------------------------------------------------------------------
+class BuildTaskGraph(Pass):
+    """Streaming task-graph analysis (``graph_ir.analyze_task_graph``).
+
+    Runs only when dataflow is effective for the function (or the
+    ``taskgraph`` dump was requested), so a ``POM_DATAFLOW=0`` pipeline
+    issues zero extra analysis queries.  The info lands in
+    ``ctx.records["taskgraph"]`` and feeds the ``POM_DUMP_IR=taskgraph``
+    dump; the loop-IR build re-derives its own region (the analysis is
+    memoized at the access/bound layer, so this costs dictionary hits)."""
+    name, stage, dumps = "task-graph", "loops", "taskgraph"
+
+    def run(self, ctx: PipelineContext) -> None:
+        from .graph_ir import analyze_task_graph, dataflow_effective
+        want_dump = ctx.options.get("_dump") in ("taskgraph", "all")
+        if dataflow_effective(ctx.fn) or want_dump:
+            ctx.records["taskgraph"] = analyze_task_graph(ctx.fn)
+
+
 class BuildLoopIR(Pass):
     name, stage, dumps = "build-loop-ir", "loops", "loops"
 
@@ -353,8 +374,11 @@ class BuildLoopIR(Pass):
 
 
 def verify_loop_ir(fn: Function, ast) -> None:
-    """Loop-stage verifier: bound sanity + statement coverage."""
-    from .loop_ir import ForNode, IfNode, ProgramAST, StmtNode
+    """Loop-stage verifier: bound sanity + statement coverage.  Dataflow
+    regions/tasks are transparent containers: their bodies are verified in
+    place, and a region's channels must name arrays of the function."""
+    from .loop_ir import (DataflowRegion, ForNode, IfNode, ProgramAST,
+                          StmtNode, TaskNode)
     params = set()
     for s in fn.statements:
         params |= set(s.domain.params)
@@ -362,6 +386,15 @@ def verify_loop_ir(fn: Function, ast) -> None:
 
     def rec(node, scope: frozenset):
         if isinstance(node, ProgramAST):
+            for c in node.body:
+                rec(c, scope)
+        elif isinstance(node, (DataflowRegion, TaskNode)):
+            if isinstance(node, DataflowRegion):
+                for ch in node.channels:
+                    if ch.array not in fn.placeholders:
+                        raise VerifyError(
+                            f"loop verifier: dataflow channel names unknown "
+                            f"array {ch.array!r}")
             for c in node.body:
                 rec(c, scope)
         elif isinstance(node, ForNode):
@@ -538,7 +571,8 @@ def compile(fn, target: str = "hls",
             outputs: Optional[Sequence[str]] = None,
             dse: bool = False, max_parallel: int = 256,
             model=None, dump: Optional[str] = None,
-            strategy=None, archive=None, **backend_kw):
+            strategy=None, archive=None,
+            dataflow: Optional[bool] = None, **backend_kw):
     """Compile a POM function through the full three-level pipeline.
 
     ``fn`` is an ``ir.Function`` or a DSL ``PomFunction``.  ``target``
@@ -556,10 +590,16 @@ def compile(fn, target: str = "hls",
     backend artifact, so pass an instance you keep a reference to — or
     set ``POM_DUMP_PARETO`` to dump the frontier; ``archive=True`` is
     only useful through ``auto_dse``, which returns the archive).
-    Backend keyword arguments (``top_name``, ``interpret``, …) pass
-    through.
+    ``dataflow`` sets the function's task-level-pipelining toggle
+    (True/False override the ``POM_DATAFLOW`` environment default; None
+    keeps the function's current setting) — with it on, an eligible
+    multi-task function is emitted as a dataflow region (HLS) or an
+    annotation-only region (JAX/Pallas — numerics unchanged).  Backend
+    keyword arguments (``top_name``, ``interpret``, …) pass through.
     """
     real_fn = fn if isinstance(fn, Function) else fn.fn
+    if dataflow is not None:
+        real_fn.dataflow = bool(dataflow)
     effective = list(graph_passes)
     if outputs is not None and "dce" not in effective:
         effective.insert(0, "dce")
@@ -570,7 +610,10 @@ def compile(fn, target: str = "hls",
     if dse:
         passes += [Stage1DSE(), VerifyPoly(), stage2_pass(strategy),
                    VerifyPoly()]
-    passes += [BuildLoopIR(), VerifyLoopIR(), backend_pass(target, **backend_kw)]
+    if target in ("hls", "fpga") and outputs is not None:
+        backend_kw.setdefault("outputs", outputs)
+    passes += [BuildTaskGraph(), BuildLoopIR(), VerifyLoopIR(),
+               backend_pass(target, **backend_kw)]
     ctx = PipelineContext(fn=real_fn, target=target,
                           options={"max_parallel": max_parallel, "model": model,
                                    "archive": archive})

@@ -148,11 +148,16 @@ def apply_parallel(stmt: Statement, factors: Tuple[int, ...]) -> bool:
 
 
 def design_signature(fn: Function) -> Tuple:
-    """Structural signature of the whole design (schedules + partitions);
-    the same tuple the cost model keys its whole-design cache on."""
+    """Structural signature of the whole design (schedules + partitions +
+    the effective dataflow toggle); the same shape the cost model keys its
+    whole-design cache on.  The dataflow flag distinguishes the sequential
+    and task-pipelined aggregations of one schedule in the Pareto archive
+    (same loops, different latency/BRAM point)."""
+    from .graph_ir import dataflow_effective
     return (tuple(s.schedule_signature() for s in fn.statements),
             tuple(sorted((ph.name, tuple(sorted(ph.partitions.items())))
-                         for ph in fn.placeholders.values())))
+                         for ph in fn.placeholders.values())),
+            dataflow_effective(fn))
 
 
 # --------------------------------------------------------------------------
@@ -1079,23 +1084,84 @@ def resolve_strategy(spec=None, beam_width: Optional[int] = None,
     return STRATEGIES[name]()
 
 
+def _dataflow_step(ctx: SearchContext, st: LadderState) -> None:
+    """Stage-2 dataflow search dimension: evaluate the final design under
+    both aggregations — sequential and task-pipelined — archive both
+    points (latency vs channel-BRAM trade-off), and pin the winner on the
+    function (``fn.dataflow``), so downstream codegen emits exactly the
+    schedule the search chose.
+
+    An explicit ``fn.dataflow = True`` pin (``auto_dse(dataflow=True)``,
+    DSL toggle, or ``HlsModel(dataflow=True)``) is honored: the step
+    records both archive points but never un-pins the function — codegen
+    then emits the requested region even when the model judged the
+    overlap not beneficial.
+
+    Skipped entirely (zero model/analysis calls) when dataflow is off for
+    the function (``POM_DATAFLOW=0`` or an explicit ``dataflow=False``) or
+    the design has fewer than two tasks — which is what keeps the
+    dataflow-off engine bit-identical to the sequential one."""
+    from .graph_ir import dataflow_effective, fusion_tasks
+    fn = ctx.fn
+    if not dataflow_effective(fn):
+        return
+    if len(fusion_tasks(fn)) < 2:
+        return
+    pinned = fn.dataflow is True
+    prev = fn.dataflow
+    try:
+        fn.dataflow = False
+        rep_off = ctx.design_report()
+        fn.dataflow = True
+        rep_on = ctx.design_report()
+    except Exception:
+        fn.dataflow = prev
+        raise
+    applied = rep_on.dataflow is not None and rep_on.dataflow.applied
+    if pinned or (applied and rep_on.latency < rep_off.latency and (
+            rep_on.feasible or not rep_off.feasible)):
+        fn.dataflow = True
+        st.report = rep_on
+        d = rep_on.dataflow
+        kinds = ",".join(f"{c[0]}:{c[3]}" for c in (d.channels if d else ()))
+        st.actions.append(
+            f"dataflow on{' (pinned)' if pinned and not applied else ''}: "
+            f"lat {rep_on.latency} vs {rep_off.latency} "
+            f"sequential (+{rep_on.bram18 - rep_off.bram18} bram18; "
+            f"channels {kinds or 'none'})")
+    else:
+        fn.dataflow = False
+        st.report = rep_off
+        reason = ("not beneficial" if rep_on.dataflow is None
+                  else rep_on.dataflow.reason or "not beneficial")
+        st.actions.append(f"dataflow off: {reason}")
+
+
 def run_stage2(fn: Function, model: Optional[HlsModel] = None,
                max_parallel: int = 256,
                actions: Optional[List[str]] = None,
                strategy=None, archive: Optional[ParetoArchive] = None,
                beam_width: Optional[int] = None,
                workers: Optional[int] = None) -> DesignReport:
-    """Stage-2 entry point: run the selected search strategy.
+    """Stage-2 entry point: run the selected search strategy, then the
+    dataflow on/off decision step (``_dataflow_step``).
 
     This is what ``dse.stage2`` and the stage-2 pipeline passes call; with
-    the default (greedy) strategy it is bit-identical — schedules, reports,
-    action logs, evaluation counters — to the pre-subsystem ladder.
+    the default (greedy) strategy — and dataflow off — it is bit-identical
+    — schedules, reports, action logs, evaluation counters — to the
+    pre-subsystem ladder.
     """
     model = model or HlsModel()
+    # a model-level dataflow override is materialized on the function so
+    # the search decision, the Pareto-archive signatures, and downstream
+    # codegen all agree with what the evaluator actually modeled
+    if fn.dataflow is None and model._dataflow_flag is not None:
+        fn.dataflow = bool(model._dataflow_flag)
     strat = resolve_strategy(strategy, beam_width=beam_width, workers=workers)
     ctx = SearchContext(fn=fn, model=model, max_parallel=max_parallel,
                         archive=archive, strategy_name=strat.describe())
     st = strat.run(ctx)
+    _dataflow_step(ctx, st)
     if actions is not None:
         actions.extend(st.actions)
     return st.report

@@ -1,0 +1,66 @@
+#include <math.h>
+#include <hls_stream.h>
+#define MAX(a,b) ((a)>(b)?(a):(b))
+#define MIN(a,b) ((a)<(b)?(a):(b))
+
+void conv_chain(float t0[4][10][10], float img[3][12][12], float w0[4][3][3][3], float t1[4][8][8], float w1[4][4][3][3], float out[4][8][8]) {
+  static float r0[4][10][10];
+  static float r1[4][8][8];
+  #pragma HLS dataflow
+  // channel t0: conv0 -> relu0 (sequential hand-off, not streamable)
+  // channel r0: relu0 -> conv1 (sequential hand-off, not streamable)
+  // channel t1: conv1 -> relu1 (sequential hand-off, not streamable)
+  #pragma HLS stream variable=r1 type=fifo depth=4
+  // dataflow task: conv0
+  for (int o0 = 0; o0 <= 3; ++o0) {
+    for (int y0 = 0; y0 <= 9; ++y0) {
+      for (int x0 = 0; x0 <= 9; ++x0) {
+        for (int c0 = 0; c0 <= 2; ++c0) {
+          for (int kr0 = 0; kr0 <= 2; ++kr0) {
+            for (int kc0 = 0; kc0 <= 2; ++kc0) {
+              t0[o0][y0][x0] = (t0[o0][y0][x0] + (img[c0][kr0 + y0][kc0 + x0] * w0[o0][c0][kr0][kc0]));  // conv0
+            }
+          }
+        }
+      }
+    }
+  }
+  // dataflow task: relu0
+  for (int ry0 = 0; ry0 <= 9; ++ry0) {
+    for (int rx0 = 0; rx0 <= 9; ++rx0) {
+      for (int ro0 = 0; ro0 <= 3; ++ro0) {
+        r0[ro0][ry0][rx0] = fmax(t0[ro0][ry0][rx0], 0);  // relu0
+      }
+    }
+  }
+  // dataflow task: conv1
+  for (int o1 = 0; o1 <= 3; ++o1) {
+    for (int y1 = 0; y1 <= 7; ++y1) {
+      for (int x1 = 0; x1 <= 7; ++x1) {
+        for (int c1 = 0; c1 <= 3; ++c1) {
+          for (int kr1 = 0; kr1 <= 2; ++kr1) {
+            for (int kc1 = 0; kc1 <= 2; ++kc1) {
+              t1[o1][y1][x1] = (t1[o1][y1][x1] + (r0[c1][kr1 + y1][kc1 + x1] * w1[o1][c1][kr1][kc1]));  // conv1
+            }
+          }
+        }
+      }
+    }
+  }
+  // dataflow task: relu1
+  for (int ry1 = 0; ry1 <= 7; ++ry1) {
+    for (int rx1 = 0; rx1 <= 7; ++rx1) {
+      for (int ro1 = 0; ro1 <= 3; ++ro1) {
+        r1[ro1][ry1][rx1] = fmax(t1[ro1][ry1][rx1], 0);  // relu1
+      }
+    }
+  }
+  // dataflow task: rescale
+  for (int sy = 0; sy <= 7; ++sy) {
+    for (int sx = 0; sx <= 7; ++sx) {
+      for (int so = 0; so <= 3; ++so) {
+        out[so][sy][sx] = (r1[so][sy][sx] * 0.5f);  // rescale
+      }
+    }
+  }
+}

@@ -1,0 +1,22 @@
+#include <math.h>
+#define MAX(a,b) ((a)>(b)?(a):(b))
+#define MIN(a,b) ((a)<(b)?(a):(b))
+
+void gemm(float A[32][32], float B[32][32], float C[32][32]) {
+#pragma HLS array_partition variable=A cyclic factor=4 dim=1
+#pragma HLS array_partition variable=A cyclic factor=4 dim=2
+  for (int k = 0; k <= 31; ++k) {
+    for (int i0 = ((-3) + 3) / 4; i0 <= (31) / 4; ++i0) {
+      for (int j0 = ((-3) + 3) / 4; j0 <= (31) / 4; ++j0) {
+      #pragma HLS pipeline II=1
+        for (int i1 = MAX(-4*i0, 0); i1 <= MIN(-4*i0 + 31, 3); ++i1) {
+        #pragma HLS unroll factor=4
+          for (int j1 = MAX(-4*j0, 0); j1 <= MIN(-4*j0 + 31, 3); ++j1) {
+          #pragma HLS unroll factor=4
+            A[4*i0 + i1][4*j0 + j1] = (A[4*i0 + i1][4*j0 + j1] + (B[4*i0 + i1][k] * C[k][4*j0 + j1]));  // s
+          }
+        }
+      }
+    }
+  }
+}

@@ -1,0 +1,107 @@
+"""Golden-file snapshots of the HLS C backend.
+
+``emit_hls`` previously had no dedicated test beyond smoke usage; these
+snapshots catch pragma/structure regressions.  The comparison is
+*structural* — per-line, whitespace-runs collapsed, blank lines dropped —
+so re-indentation does not churn the goldens, but a lost pragma, a
+changed loop bound, or a dropped dataflow channel fails loudly.
+
+Regenerate after an intentional emission change with:
+
+    PYTHONPATH=src python -m tests.test_backend_hls_golden
+"""
+import os
+
+from benchmarks import workloads
+from repro.core import dsl as pom
+from repro.core.astbuild import build_ast
+from repro.core.backend_hls import emit_hls
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden")
+
+
+def build_gemm_fig6():
+    """The paper's Fig. 5/6 GEMM schedule: tile + pipeline + unroll +
+    array partition (single task — no dataflow region)."""
+    n = 32
+    with pom.function("gemm") as f:
+        i, j, k = pom.var("i", 0, n), pom.var("j", 0, n), pom.var("k", 0, n)
+        A = pom.placeholder("A", (n, n))
+        B = pom.placeholder("B", (n, n))
+        C = pom.placeholder("C", (n, n))
+        s = pom.compute("s", [k, i, j], A(i, j) + B(i, k) * C(k, j), A(i, j))
+    s = f.stmt("s")
+    s.tile("i", "j", 4, 4, "i0", "j0", "i1", "j1")
+    s.pipeline("j0", 1)
+    s.unroll("i1", 4)
+    s.unroll("j1", 4)
+    A.partition({0: 4, 1: 4}, "cyclic")
+    return f.fn, None
+
+
+def build_conv_chain_dataflow():
+    """The multi-statement conv stack with task-level pipelining on:
+    dataflow pragma, FIFO stream pragma, localized channel buffers."""
+    f = workloads.conv_chain()
+    f.fn.dataflow = True
+    return f.fn, ["out"]
+
+
+CASES = {
+    "gemm_hls.c": build_gemm_fig6,
+    "conv_chain_hls.c": build_conv_chain_dataflow,
+}
+
+
+def _emit(builder):
+    fn, outputs = builder()
+    return emit_hls(fn, build_ast(fn), outputs=outputs)
+
+
+def _structural(text: str):
+    lines = []
+    for ln in text.splitlines():
+        norm = " ".join(ln.split())
+        if norm:
+            lines.append(norm)
+    return lines
+
+
+def _diff(got, want):
+    import difflib
+    return "\n".join(difflib.unified_diff(want, got, "golden", "emitted",
+                                          lineterm=""))
+
+
+def test_golden_files_exist():
+    for name in CASES:
+        assert os.path.exists(os.path.join(GOLDEN_DIR, name)), (
+            f"missing golden file {name}; regenerate with "
+            f"`PYTHONPATH=src python -m tests.test_backend_hls_golden`")
+
+
+def test_gemm_hls_matches_golden():
+    with open(os.path.join(GOLDEN_DIR, "gemm_hls.c")) as fh:
+        want = _structural(fh.read())
+    got = _structural(_emit(CASES["gemm_hls.c"]))
+    assert got == want, _diff(got, want)
+
+
+def test_conv_chain_hls_matches_golden():
+    with open(os.path.join(GOLDEN_DIR, "conv_chain_hls.c")) as fh:
+        want = _structural(fh.read())
+    got = _structural(_emit(CASES["conv_chain_hls.c"]))
+    assert got == want, _diff(got, want)
+
+
+def main():
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name, builder in CASES.items():
+        path = os.path.join(GOLDEN_DIR, name)
+        with open(path, "w") as fh:
+            fh.write(_emit(builder))
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,466 @@
+"""Streaming task graph / task-level pipelining (dataflow) tests.
+
+Covers the full stack of the dataflow refactor:
+
+  * streaming-legality classification (``graph_ir.analyze_task_graph``):
+    FIFO for exact in-order hand-offs, PIPO for major-block-monotone
+    producers/consumers (incl. stencil halos and post-split strided
+    accesses), ``seq`` fallbacks, and region ineligibility rules;
+  * cost-model semantics: with dataflow off the design latency is exactly
+    the sequential sum of fusion-group maxima; with dataflow on, an
+    applied region is strictly faster and pays for its channels in BRAM;
+  * ``POM_DATAFLOW=0`` bit-identity: no dataflow code runs at all
+    (asserted by poisoning the analysis entry point);
+  * backend semantics: the region is annotation-only — JAX/Pallas results
+    are identical with dataflow on and off;
+  * the stage-2 search dimension: the Pareto archive captures both the
+    sequential and the task-pipelined aggregation of the final design;
+  * loop-IR plumbing: region nodes verify, dump, and emit.
+"""
+import numpy as np
+import pytest
+
+from benchmarks import workloads
+from repro.core import caching
+from repro.core import dsl as pom
+from repro.core import graph_ir
+from repro.core.astbuild import build_ast
+from repro.core.backend_hls import emit_hls
+from repro.core.backend_jax import compile_jax
+from repro.core.cost_model import HlsModel
+from repro.core.dse import auto_dse
+from repro.core.graph_ir import analyze_task_graph, dataflow_default
+from repro.core.loop_ir import DataflowRegion, TaskNode
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    caching.clear_all()
+    caching.reset_counts()
+    yield
+
+
+def _channels(fn):
+    info = analyze_task_graph(fn)
+    return info, {ch.array: ch for ch in info.channels}
+
+
+# --------------------------------------------------------------------------
+# streaming-legality classification
+# --------------------------------------------------------------------------
+def test_fifo_elementwise_chain():
+    n = 8
+    with pom.function("chain") as f:
+        i, j = pom.var("i", 0, n), pom.var("j", 0, n)
+        i2, j2 = pom.var("i2", 0, n), pom.var("j2", 0, n)
+        A = pom.placeholder("A", (n, n))
+        T = pom.placeholder("T", (n, n))
+        B = pom.placeholder("B", (n, n))
+        pom.compute("s1", [i, j], A(i, j) * 2.0, T(i, j))
+        pom.compute("s2", [i2, j2], T(i2, j2) + 1.0, B(i2, j2))
+    info, by = _channels(f.fn)
+    assert info.eligible and by["T"].kind == "fifo"
+    assert by["T"].depth == graph_ir.FIFO_DEPTH
+    assert by["T"].bits == graph_ir.FIFO_DEPTH * 32
+
+
+def test_fifo_requires_matching_traversal_order():
+    """Same element set, different orders: consumer reads B transposed
+    relative to the write order — not a FIFO, and with the leading read
+    index driven by an inner loop, not block-streamable either."""
+    n = 8
+    with pom.function("perm") as f:
+        i, j = pom.var("i", 0, n), pom.var("j", 0, n)
+        i2, j2 = pom.var("i2", 0, n), pom.var("j2", 0, n)
+        A = pom.placeholder("A", (n, n))
+        T = pom.placeholder("T", (n, n))
+        B = pom.placeholder("B", (n, n))
+        pom.compute("s1", [i, j], A(i, j) * 2.0, T(i, j))
+        pom.compute("s2", [i2, j2], T(j2, i2) + 1.0, B(i2, j2))
+    _, by = _channels(f.fn)
+    assert by["T"].kind == "seq"
+    assert by["T"].bits == 0
+
+
+def test_fifo_permuted_but_identical_orders():
+    """Both sides traverse x-major while the array is laid out (o, x):
+    orders match exactly, so the hand-off still streams as a FIFO."""
+    n, m = 4, 6
+    with pom.function("permfifo") as f:
+        o, x = pom.var("o", 0, n), pom.var("x", 0, m)
+        o2, x2 = pom.var("o2", 0, n), pom.var("x2", 0, m)
+        A = pom.placeholder("A", (n, m))
+        T = pom.placeholder("T", (n, m))
+        B = pom.placeholder("B", (n, m))
+        pom.compute("s1", [x, o], A(o, x) * 2.0, T(o, x))
+        pom.compute("s2", [x2, o2], T(o2, x2) + 1.0, B(o2, x2))
+    _, by = _channels(f.fn)
+    assert by["T"].kind == "fifo"
+
+
+def test_pipo_stencil_halo_widens_fill():
+    f = workloads.blur(32)
+    _, by = _channels(f.fn)
+    ch = by["bx"]
+    assert ch.kind == "pipo"
+    assert ch.fill_chunks == 2          # +1 row halo
+    assert ch.depth == 3                # fill + 1 ping-pong slot
+    assert ch.chunks == 32
+    # channel holds `depth` row-chunks of the 32x32 fp32 array
+    assert ch.bits == pytest.approx(3 * 32 * 32 * 32 / 32)
+
+
+def test_pipo_survives_dse_splits():
+    """After split+unroll the leading access becomes f*i_o + i_u; the
+    stride decomposition must still see the block-monotone traversal."""
+    f = workloads.blur(32)
+    f.stmt("blurx").split("i", 4, "i_o", "i_u").unroll("i_u", 4)
+    f.stmt("blury").split("i2", 4, "i2_o", "i2_u").unroll("i2_u", 4)
+    _, by = _channels(f.fn)
+    ch = by["bx"]
+    assert ch.kind == "pipo"
+    assert ch.chunks == 8               # i_o chunks of 4 rows each
+    assert ch.fill_chunks == 2          # halo still inside one extra chunk
+
+
+def test_reduction_producer_is_pipo_not_fifo():
+    """An accumulation writes each element k times — streaming every
+    partial through a FIFO would be wrong, but its chunks still finalize
+    in outer order, so a same-order consumer gets a PIPO."""
+    n = 8
+    with pom.function("accchain") as f:
+        i, j, k = pom.var("i", 0, n), pom.var("j", 0, n), pom.var("k", 0, n)
+        i2, j2 = pom.var("i2", 0, n), pom.var("j2", 0, n)
+        A = pom.placeholder("A", (n, n))
+        B = pom.placeholder("B", (n, n))
+        T = pom.placeholder("T", (n, n))
+        C = pom.placeholder("C", (n, n))
+        pom.compute("mm", [i, j, k], T(i, j) + A(i, k) * B(k, j), T(i, j))
+        pom.compute("sc", [i2, j2], T(i2, j2) * 2.0, C(i2, j2))
+    _, by = _channels(f.fn)
+    assert by["T"].kind == "pipo"
+    assert by["T"].chunks == n and by["T"].fill_chunks == 1
+
+
+def test_conv_chain_pre_stage1_classification():
+    """Before stage 1, conv0 is o-major while relu0 is y-major: the
+    orders mismatch, so the accumulator hand-off is only a sequential
+    edge; the final elementwise pair matches exactly and streams as a
+    FIFO."""
+    f = workloads.conv_chain()
+    _, by = _channels(f.fn)
+    assert by["t0"].kind == "seq"
+    assert by["r1"].kind == "fifo"
+
+
+def test_multi_writer_ineligible():
+    f = workloads.gesummv(16)
+    info = analyze_task_graph(f.fn)
+    assert not info.eligible
+    assert "written by tasks" in info.reason
+
+
+def test_backward_read_ineligible():
+    n = 8
+    with pom.function("anti") as f:
+        i = pom.var("i", 0, n)
+        i2 = pom.var("i2", 0, n)
+        A = pom.placeholder("A", (n,))
+        B = pom.placeholder("B", (n,))
+        C = pom.placeholder("C", (n,))
+        pom.compute("s1", [i], B(i) * 2.0, A(i))      # reads B
+        pom.compute("s2", [i2], C(i2) + 1.0, B(i2))   # later writes B
+    info = analyze_task_graph(f.fn)
+    assert not info.eligible
+    assert "before task" in info.reason
+
+
+def test_single_task_ineligible():
+    f = workloads.gemm(16)
+    info = analyze_task_graph(f.fn)
+    assert not info.eligible and info.reason == "single task"
+
+
+def test_multi_consumer_downgrades_fifo():
+    n = 8
+    with pom.function("fanout") as f:
+        i = pom.var("i", 0, n)
+        i2 = pom.var("i2", 0, n)
+        i3 = pom.var("i3", 0, n)
+        A = pom.placeholder("A", (n,))
+        T = pom.placeholder("T", (n,))
+        B = pom.placeholder("B", (n,))
+        C = pom.placeholder("C", (n,))
+        pom.compute("s1", [i], A(i) * 2.0, T(i))
+        pom.compute("s2", [i2], T(i2) + 1.0, B(i2))
+        pom.compute("s3", [i3], T(i3) - 1.0, C(i3))
+    info, by = _channels(f.fn)
+    assert info.eligible
+    # two consumer tasks: a FIFO would be drained by the first reader
+    assert by["T"].kind == "pipo"
+
+
+# --------------------------------------------------------------------------
+# cost-model semantics
+# --------------------------------------------------------------------------
+def _sequential_latency(model, fn):
+    from repro.core.cost_model import _fusion_groups
+    total = 0
+    for grp in _fusion_groups(fn):
+        total += max(model.node_report(s, grp).latency for s in grp)
+    return total
+
+
+@pytest.mark.parametrize("name,build", [
+    ("blur", lambda: workloads.blur(24)),
+    ("2mm", lambda: workloads.mm2(16)),
+    ("conv_chain", workloads.conv_chain),
+    ("gemm", lambda: workloads.gemm(16)),
+])
+def test_dataflow_off_latency_is_sequential_sum(name, build):
+    fn = build().fn
+    model = HlsModel(dataflow=False)
+    rep = model.design_report(fn)
+    assert rep.dataflow is None
+    assert rep.latency == _sequential_latency(HlsModel(dataflow=False), fn)
+
+
+def test_dataflow_on_region_beats_sequential_and_pays_bram():
+    fn = workloads.blur(24).fn
+    on = HlsModel(dataflow=True).design_report(fn)
+    off = HlsModel(dataflow=False).design_report(fn)
+    d = on.dataflow
+    assert d is not None and d.applied
+    assert on.latency == d.region_latency < off.latency
+    assert d.sequential_latency == off.latency
+    assert on.bram_bits == pytest.approx(off.bram_bits + d.channel_bits)
+    assert d.channel_bits > 0
+    # node-level reports are aggregation-independent
+    for name, node in off.nodes.items():
+        assert on.nodes[name] == node
+
+
+def test_dataflow_never_applied_when_slower():
+    """A fully sequential chain (seq edges only) cannot beat the
+    sequential sum, so the model must keep the sequential numbers."""
+    n = 8
+    with pom.function("perm") as f:
+        i, j = pom.var("i", 0, n), pom.var("j", 0, n)
+        i2, j2 = pom.var("i2", 0, n), pom.var("j2", 0, n)
+        A = pom.placeholder("A", (n, n))
+        T = pom.placeholder("T", (n, n))
+        B = pom.placeholder("B", (n, n))
+        pom.compute("s1", [i, j], A(i, j) * 2.0, T(i, j))
+        pom.compute("s2", [i2, j2], T(j2, i2) + 1.0, B(i2, j2))
+    on = HlsModel(dataflow=True).design_report(f.fn)
+    off = HlsModel(dataflow=False).design_report(f.fn)
+    assert on.latency == off.latency
+    assert on.bram_bits == off.bram_bits
+    assert on.dataflow is not None and not on.dataflow.applied
+    assert "no latency gain" in on.dataflow.reason
+
+
+def test_dataflow_cached_and_uncached_reports_identical():
+    fn = workloads.conv_chain().fn
+    cached = HlsModel(dataflow=True).design_report(fn)
+    with caching.disabled():
+        uncached = HlsModel(cache=False, dataflow=True).design_report(fn)
+    assert cached.latency == uncached.latency
+    assert cached.bram_bits == uncached.bram_bits
+    assert cached.dataflow.applied == uncached.dataflow.applied
+    assert cached.dataflow.channels == uncached.dataflow.channels
+
+
+# --------------------------------------------------------------------------
+# POM_DATAFLOW=0: bit-identity with the sequential engine
+# --------------------------------------------------------------------------
+def test_env_off_runs_no_dataflow_code(monkeypatch):
+    """With POM_DATAFLOW=0, the dataflow layer must be completely inert:
+    the analysis entry point is never called, no stage-2 dataflow step
+    runs, and reports carry no dataflow summary."""
+    monkeypatch.setenv("POM_DATAFLOW", "0")
+    assert not dataflow_default()
+
+    def boom(fn):
+        raise AssertionError("analyze_task_graph called with dataflow off")
+
+    monkeypatch.setattr(graph_ir, "analyze_task_graph", boom)
+    for build in (lambda: workloads.blur(16), lambda: workloads.mm3(16),
+                  workloads.conv_chain):
+        caching.clear_all()
+        fn = build().fn
+        res = auto_dse(fn, max_parallel=8)
+        assert fn.dataflow is None
+        assert res.dataflow is None
+        assert res.report.dataflow is None
+        assert not any("dataflow" in a for a in res.actions)
+
+
+def test_env_off_ast_and_hls_have_no_region(monkeypatch):
+    monkeypatch.setenv("POM_DATAFLOW", "0")
+    f = workloads.conv_chain()
+    ast = build_ast(f.fn)
+    assert not any(isinstance(n, DataflowRegion) for n in ast.body)
+    code = emit_hls(f.fn, ast)
+    assert "dataflow" not in code
+
+
+# --------------------------------------------------------------------------
+# backends: the region is annotation-only
+# --------------------------------------------------------------------------
+def _conv_chain_arrays(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"img": rng.normal(size=(3, 12, 12)),
+            "w0": rng.normal(size=(4, 3, 3, 3)),
+            "w1": rng.normal(size=(4, 4, 3, 3))}
+
+
+def test_jax_numerics_identical_on_off():
+    arrays = _conv_chain_arrays()
+    f = workloads.conv_chain()
+    out_on = f.codegen("jax", dataflow=True)(dict(arrays))
+    f2 = workloads.conv_chain()
+    out_off = f2.codegen("jax", dataflow=False)(dict(arrays))
+    np.testing.assert_array_equal(np.asarray(out_on["out"]),
+                                  np.asarray(out_off["out"]))
+
+
+def test_pallas_numerics_match_oracle_with_dataflow():
+    jax = pytest.importorskip("jax")
+    arrays = _conv_chain_arrays(1)
+    f = workloads.conv_chain()
+    ref = f.codegen("jax", dataflow=True)(dict(arrays))
+    f2 = workloads.conv_chain()
+    run = f2.codegen("pallas", dataflow=True)
+    out = run({k: np.asarray(v, dtype=np.float32) for k, v in arrays.items()})
+    np.testing.assert_allclose(np.asarray(out["out"], dtype=np.float64),
+                               np.asarray(ref["out"]), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# the stage-2 search dimension + Pareto archive
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("build", [
+    lambda: workloads.blur(48),
+    lambda: workloads.edge_detect(48),
+    workloads.conv_chain,
+], ids=["blur", "edge_detect", "conv_chain"])
+def test_dse_dataflow_strictly_lower_latency(build):
+    """Acceptance: the dataflow-enabled design beats the sequential
+    schedule at feasible resources, and the latency/BRAM trade-off shows
+    up in the Pareto archive."""
+    f = build()
+    model = HlsModel()
+    res = auto_dse(f.fn, max_parallel=16, model=model, archive=True)
+    assert res.dataflow is True
+    assert res.report.feasible
+    assert res.report.dataflow is not None and res.report.dataflow.applied
+    # same final schedule, sequential aggregation: strictly slower
+    f.fn.dataflow = False
+    off = model.design_report(f.fn)
+    f.fn.dataflow = True
+    assert res.report.latency < off.latency
+    assert any("dataflow on" in a for a in res.actions)
+    # the archive holds both aggregations of the final design: the
+    # pipelined point is faster, the sequential one cheaper in BRAM
+    pts = res.archive.frontier()
+    assert pts and min(p.latency for p in pts) <= res.report.latency
+    trade = [(p, q) for p in pts for q in pts
+             if p.latency < q.latency and p.bram18 > q.bram18]
+    assert trade, f"no latency/BRAM trade-off on the frontier: {pts}"
+
+
+def test_dse_dataflow_off_for_sequential_chains():
+    res = auto_dse(workloads.mm2(16).fn, max_parallel=8)
+    assert res.dataflow is False
+    assert any(a.startswith("dataflow off") for a in res.actions)
+    assert res.report.dataflow is None or not res.report.dataflow.applied
+
+
+def test_explicit_dataflow_false_skips_search_dimension():
+    res = auto_dse(workloads.blur(24).fn, max_parallel=8, dataflow=False)
+    assert res.dataflow is False
+    assert not any("dataflow" in a for a in res.actions)
+    assert res.report.dataflow is None
+
+
+def test_explicit_dataflow_true_pin_survives_no_gain():
+    """2mm's hand-off is order-mismatched after stage 1 (no overlap), but
+    an explicit dataflow=True pin must not be silently un-pinned — the
+    user asked for the region, codegen should emit it."""
+    fn = workloads.mm2(16).fn
+    res = auto_dse(fn, max_parallel=8, dataflow=True)
+    assert res.dataflow is True and fn.dataflow is True
+    assert any(a.startswith("dataflow on") for a in res.actions)
+
+
+def test_model_dataflow_flag_materializes_on_function(monkeypatch):
+    """An HlsModel(dataflow=True) override must reach the function, so
+    the report the search returns and the code later emitted agree even
+    when the environment default says off."""
+    monkeypatch.setenv("POM_DATAFLOW", "0")
+    f = workloads.blur(24)
+    res = auto_dse(f.fn, max_parallel=8, model=HlsModel(dataflow=True))
+    assert f.fn.dataflow is True
+    assert res.report.dataflow is not None and res.report.dataflow.applied
+    assert "#pragma HLS dataflow" in f.codegen("hls", outputs=["out"])
+
+
+# --------------------------------------------------------------------------
+# DSL / pipeline plumbing
+# --------------------------------------------------------------------------
+def test_dsl_toggles():
+    f = pom.function("t", dataflow=False)
+    assert f.fn.dataflow is False
+    f.set_dataflow(True)
+    assert f.fn.dataflow is True
+    f.set_dataflow(None)
+    assert f.fn.dataflow is None
+
+
+def test_compile_dataflow_kwarg_controls_region():
+    f = workloads.conv_chain()
+    code_off = f.codegen("hls", dataflow=False)
+    assert "#pragma HLS dataflow" not in code_off
+    f2 = workloads.conv_chain()
+    code_on = f2.codegen("hls", dataflow=True)
+    assert "#pragma HLS dataflow" in code_on
+    assert "#pragma HLS stream variable=r1 type=fifo depth=4" in code_on
+    # write-once channel arrays outside `outputs` become local buffers ...
+    assert "static float r1[4][8][8];" in code_on
+    sig = next(ln for ln in code_on.splitlines() if ln.startswith("void "))
+    assert "r1" not in sig
+    # ... but accumulator channels stay caller-zeroed arguments: a static
+    # local would carry partial sums across invocations
+    assert "static float t0" not in code_on
+    assert "t0[4][10][10]" in sig
+
+
+def test_taskgraph_dump(capsys):
+    f = workloads.conv_chain()
+    f.codegen("hls", dump="taskgraph")
+    err = capsys.readouterr().err
+    assert "POM_DUMP_IR [taskgraph]" in err
+    assert "kind=fifo" in err and "task 0: conv0" in err
+
+
+def test_loop_verifier_accepts_region_and_checks_channels():
+    from repro.core.pipeline import VerifyError, verify_loop_ir
+    f = workloads.conv_chain()
+    ast = build_ast(f.fn, dataflow=True)
+    region = ast.body[0]
+    assert isinstance(region, DataflowRegion)
+    assert all(isinstance(t, TaskNode) for t in region.body)
+    verify_loop_ir(f.fn, ast)          # passes
+    region.channels[0].array = "nonsense"
+    with pytest.raises(VerifyError):
+        verify_loop_ir(f.fn, ast)
+
+
+def test_describe_region():
+    from repro.core import loop_ir
+    f = workloads.conv_chain()
+    ast = build_ast(f.fn, dataflow=True)
+    text = loop_ir.describe(ast)
+    assert "dataflow region (5 tasks)" in text
+    assert "channel r1: relu1 -> rescale  kind=fifo depth=4" in text
