@@ -61,6 +61,7 @@ from typing import Callable, Dict, List, Tuple
 
 from repro.core import caching
 from repro.core.cost_model import XC7Z020, HlsModel
+from repro.core.designdb import atomic_write_json
 from repro.core.dse import auto_dse
 
 from .workloads import bicg, conv_chain, conv_nest, gemm, mm2, mm3
@@ -324,8 +325,9 @@ def csv_rows() -> List[str]:
     snap = {"suite": "dse_speed", "results": rows, "fusion_prepass": fusion}
     path = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_dse_speed.json")
-    with open(path, "w") as fh:
-        json.dump(snap, fh, indent=2)
+    # atomic: an interrupted run must not corrupt the committed snapshot
+    # that the --check CI gate diffs against
+    atomic_write_json(path, snap)
     out = []
     for r in rows:
         strat = r["strategies"]

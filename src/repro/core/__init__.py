@@ -19,15 +19,19 @@ Layers (paper Fig. 7), top to bottom:
   dse.py         — two-stage DSE engine, run as pipeline passes
 """
 from .dsl import ComputeHandle, PomFunction, Var, compute, function, placeholder, var
+from .errors import PomError, PomUserError, PomWarning
 from .ir import (Placeholder, p_bfloat16, p_float32, p_float64, p_int8, p_int16,
                  p_int32, p_int64, p_uint8, p_uint16, p_uint32, p_uint64)
-from .pipeline import PassManager, VerifyError, compile
+from .pipeline import (CompileService, PassManager, ServiceResult, VerifyError,
+                       compile, compile_many, serve)
 
 # NOTE: `compile` is importable explicitly (`from repro.core import compile`)
 # but deliberately left out of __all__ so `import *` never shadows the builtin.
 __all__ = [
     "function", "var", "placeholder", "compute", "PomFunction", "ComputeHandle",
     "Var", "Placeholder", "PassManager", "VerifyError",
+    "serve", "compile_many", "CompileService", "ServiceResult",
+    "PomError", "PomUserError", "PomWarning",
     "p_int8", "p_int16", "p_int32", "p_int64",
     "p_uint8", "p_uint16", "p_uint32", "p_uint64",
     "p_float32", "p_float64", "p_bfloat16",

@@ -585,6 +585,20 @@ _DEPVEC_CACHE: Dict[Tuple, DependenceInfo] = {}
 _DEPVEC_CACHE_MAX = 200_000
 
 
+def _depvec_cache_limit() -> int:
+    """Effective depvec cache bound: ``POM_DEPVEC_CACHE_MAX`` when set
+    (tests use a tiny bound to force mid-search eviction), else the
+    module attribute (which tests may also monkeypatch directly)."""
+    import os
+    raw = os.environ.get("POM_DEPVEC_CACHE_MAX")
+    if raw:
+        try:
+            return max(2, int(raw))
+        except ValueError:
+            pass
+    return _DEPVEC_CACHE_MAX
+
+
 def _evict_half(cache: Dict) -> None:
     """Drop the older half of a memo table (insertion order) instead of
     clearing it: mid-search overflow keeps the recent working set warm."""
@@ -624,7 +638,7 @@ def dependence_vector(domain_src: BasicSet, acc_src: Sequence[LinExpr],
     info = _dependence_vector_compute(domain_src, acc_src, domain_sink,
                                       acc_sink, n)
     if key is not None:
-        if len(_DEPVEC_CACHE) >= _DEPVEC_CACHE_MAX:
+        if len(_DEPVEC_CACHE) >= _depvec_cache_limit():
             _evict_half(_DEPVEC_CACHE)
         _DEPVEC_CACHE[key] = info
     return info

@@ -33,8 +33,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .affine import LinExpr
+from .errors import warn_structured
 from .ir import BinOp, Call, Const, Expr, Function, IterVal, Load, Placeholder, Statement
 from .ir import loads_of
+from . import faultinject
 
 
 class PallasLowerError(Exception):
@@ -273,9 +275,12 @@ def _lower_stmt_pallas_compute(stmt: Statement, interpret: bool) -> Callable:
     # one pallas_call per observed output shape/dtype; repeated run() calls
     # (the common case in autotuning sweeps) reuse the built callable
     call_cache: Dict[Tuple, Callable] = {}
+    # compiled (Mosaic) lowering may fail on hosts without TPU lowering
+    # support; after one failure the runner pins itself to interpret mode
+    state = {"interpret": interpret}
 
-    def _call_for(shape: Tuple[int, ...], dtype) -> Callable:
-        ck = (shape, jnp.dtype(dtype).name)
+    def _call_for(shape: Tuple[int, ...], dtype, interp: bool) -> Callable:
+        ck = (shape, jnp.dtype(dtype).name, interp)
         fn = call_cache.get(ck)
         if fn is None:
             fn = pl.pallas_call(
@@ -289,7 +294,7 @@ def _lower_stmt_pallas_compute(stmt: Statement, interpret: bool) -> Callable:
                 out_specs=pl.BlockSpec(out_spec.block,
                                        idx_fn(out_spec.index_map_exprs)),
                 out_shape=jax.ShapeDtypeStruct(shape, dtype),
-                interpret=interpret,
+                interpret=interp,
             )
             call_cache[ck] = fn
         return fn
@@ -298,7 +303,16 @@ def _lower_stmt_pallas_compute(stmt: Statement, interpret: bool) -> Callable:
         x = jnp.asarray(arrays[x_arr.name])
         y = jnp.asarray(arrays[y_arr.name])
         o = jnp.asarray(arrays[store_arr.name])
-        return _call_for(o.shape, o.dtype)(x, y, o)
+        if not state["interpret"]:
+            try:
+                if faultinject.fires("backend.lower"):
+                    raise RuntimeError("injected Mosaic lowering failure")
+                return _call_for(o.shape, o.dtype, False)(x, y, o)
+            except Exception as e:  # Mosaic/XLA raise backend-specific types
+                warn_structured("backend_pallas", "mosaic_fallback_interpret",
+                                stmt=stmt.name, error=type(e).__name__)
+                state["interpret"] = True
+        return _call_for(o.shape, o.dtype, True)(x, y, o)
 
     return run
 

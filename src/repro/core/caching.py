@@ -167,6 +167,12 @@ def merge_memo_delta(delta: Dict[str, Dict],
                     origin[name].add(k)
         converted[name] = dup
         converted[f"{name}_xfer"] = dup_x
+    # a merged delta must respect the depvec bound too (a tiny
+    # POM_DEPVEC_CACHE_MAX otherwise grows without limit through merges);
+    # results stay bit-identical — eviction only forgets memo entries
+    from . import affine
+    while len(affine._DEPVEC_CACHE) > affine._depvec_cache_limit() > 1:
+        affine._evict_half(affine._DEPVEC_CACHE)
     return converted
 
 

@@ -25,7 +25,10 @@ import contextlib
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .affine import BasicSet, LinExpr, ge, le
-from .ir import (DType, Expr, Function, Load, Placeholder, Statement, p_float32, wrap)
+from .errors import PomError, PomUserError, PomWarning
+from .ir import (DType, Expr, Function, IterVal, Load, Placeholder, Statement,
+                 loads_of, p_float32, walk_expr, wrap)
+from .pipeline import CompileService, ServiceResult, compile_many, serve
 from . import transforms as T
 
 
@@ -225,6 +228,43 @@ def _name(x: Union[str, Var]) -> str:
     return x.name if isinstance(x, Var) else str(x)
 
 
+def _validate_compute(name: str, declared: Sequence[str], body: Expr,
+                      dest: Load) -> None:
+    """Reject malformed programs at the DSL boundary with a
+    :class:`PomUserError` naming the statement, array, and expected rank —
+    instead of a bare ``KeyError``/``IndexError`` from deep inside
+    ``graph_ir``/``affine`` long after the user's call site."""
+    if not isinstance(dest, Load):
+        raise PomUserError(
+            f"compute({name!r}): dest must be an array access like A(i, j), "
+            f"got {type(dest).__name__}")
+    known = set(declared)
+    for load in loads_of(body) + [dest]:
+        arr = load.array
+        if len(load.idx) != len(arr.shape):
+            raise PomUserError(
+                f"compute({name!r}): array {arr.name!r} has rank "
+                f"{len(arr.shape)} (shape {arr.shape}) but is accessed "
+                f"with {len(load.idx)} "
+                f"{'index' if len(load.idx) == 1 else 'indices'}: {load!r}")
+        for e in load.idx:
+            for v in e.vars():
+                if v not in known:
+                    raise PomUserError(
+                        f"compute({name!r}): access {load!r} of array "
+                        f"{arr.name!r} references undeclared iterator "
+                        f"{v!r} (declared iterators: "
+                        f"{', '.join(declared)})")
+    for node in walk_expr(body):
+        if isinstance(node, IterVal):
+            for v in node.expr.vars():
+                if v not in known:
+                    raise PomUserError(
+                        f"compute({name!r}): expression references "
+                        f"undeclared iterator {v!r} (declared iterators: "
+                        f"{', '.join(declared)})")
+
+
 def compute(name: str, iters: Sequence[Var], expr, dest: Load,
             where: Sequence = ()) -> ComputeHandle:
     """paper Fig. 4 L8: ``compute s("s", [k,i,j], A(i,j)+B(i,k)*C(k,j), A(i,j))``.
@@ -241,7 +281,9 @@ def compute(name: str, iters: Sequence[Var], expr, dest: Load,
     for c in where:
         cons.append(c)
     dom = BasicSet([it.name for it in iters], cons)
-    stmt = Statement(name, dom, wrap(expr), dest, [it.name for it in iters])
+    body = wrap(expr)
+    _validate_compute(name, [it.name for it in iters], body, dest)
+    stmt = Statement(name, dom, body, dest, [it.name for it in iters])
     if _current:
         _current[-1].fn.add(stmt)
     return ComputeHandle(stmt)

@@ -619,3 +619,131 @@ def compile(fn, target: str = "hls",
                                    "archive": archive})
     PassManager(passes, dump=dump).run(ctx)
     return ctx.artifact
+
+
+# --------------------------------------------------------------------------
+# resilient compile service (crash-safe design database + serve entry point)
+# --------------------------------------------------------------------------
+@dataclass
+class ServiceResult:
+    """One served compile: the DSE outcome plus where it came from."""
+    key: str                          # content address in the design db
+    report: Any                      # cost_model.DesignReport
+    actions: List[str]                # stage-2 action log
+    tile_sizes: Dict[str, List[int]]  # per statement: unroll factor per dim
+    strategy: str
+    from_db: bool                     # True: served in O(lookup), no DSE run
+    seconds: float
+
+
+class CompileService:
+    """Serve ``auto_dse`` results out of a crash-safe design database.
+
+    A request is addressed by ``designdb.function_key`` — the
+    name-canonical structure of the program plus the design-relevant
+    options — so any process that compiled the same program before
+    (under the same db path) serves the finished design in O(lookup):
+    no graph build, no polyhedral analysis, no search.  A miss runs the
+    full DSE and persists the outcome atomically; a corrupted entry is
+    quarantined by the db layer and simply recomputed here.
+
+    The ``parallel`` strategy is keyed as ``greedy``: the supervised
+    pool is bit-identical to the serial ladder by invariant (asserted in
+    ``tests/test_search.py``), so worker counts must not split the
+    address space.  The db stores the *outcome* (report, action log,
+    tile sizes) — backend artifacts are still emitted by ``compile``;
+    what the service removes is the search, which is where the time is.
+    """
+
+    def __init__(self, db=None, path: Optional[str] = None, **dse_defaults):
+        from . import designdb
+        self.db = db if db is not None else designdb.open_db(path)
+        self.defaults = dse_defaults
+
+    # -- request normalization ----------------------------------------------
+    def _normalize(self, kw: Dict[str, Any]) -> Tuple[Dict, Dict]:
+        """Split a request into ``auto_dse`` kwargs and the option dict
+        that participates in the content address (everything that changes
+        the produced design; nothing that only changes how fast it is
+        produced)."""
+        from .cost_model import XC7Z020
+        from .search import resolve_strategy
+        merged = dict(self.defaults)
+        merged.update(kw)
+        strat = resolve_strategy(merged.get("strategy"),
+                                 beam_width=merged.get("beam_width"),
+                                 workers=merged.get("workers"))
+        desc = strat.describe()
+        if desc.split(":")[0] == "parallel":
+            desc = "greedy"
+        resources = merged.get("resources", XC7Z020)
+        opts = {"strategy": desc,
+                "max_parallel": merged.get("max_parallel", 256),
+                "resources": tuple(sorted(resources.items())),
+                "dataflow": merged.get("dataflow"),
+                "graph_passes": tuple(merged.get("graph_passes", ())),
+                "outputs": (tuple(merged["outputs"])
+                            if merged.get("outputs") else None)}
+        return merged, opts
+
+    # -- serving -------------------------------------------------------------
+    def compile_one(self, f, **kw) -> ServiceResult:
+        """Serve one function: db hit → the stored outcome (the input
+        function is left unscheduled); miss → full ``auto_dse`` + store."""
+        import time
+        from . import designdb
+        from .ir import Function
+        fn = f if isinstance(f, Function) else f.fn
+        merged, opts = self._normalize(kw)
+        key = designdb.function_key(fn, opts)
+        t0 = time.perf_counter()
+        payload = self.db.get(key)
+        if payload is not None:
+            return ServiceResult(
+                key, designdb.report_from_json(payload["report"]),
+                list(payload["actions"]),
+                {k: list(v) for k, v in payload["tile_sizes"].items()},
+                payload["strategy"], True, time.perf_counter() - t0)
+        from .dse import auto_dse
+        res = auto_dse(fn, **{k: v for k, v in merged.items()
+                              if k in ("target", "max_parallel", "resources",
+                                       "model", "strategy", "beam_width",
+                                       "workers", "archive", "graph_passes",
+                                       "outputs", "dataflow")})
+        payload = {"report": designdb.report_to_json(res.report),
+                   "actions": list(res.actions),
+                   "tile_sizes": {k: list(v)
+                                  for k, v in res.tile_sizes.items()},
+                   "strategy": res.strategy,
+                   "dse_seconds": res.dse_seconds}
+        self.db.put(key, payload)
+        if res.archive is not None:
+            self.db.store_archive(key, res.archive)
+        return ServiceResult(key, res.report, list(res.actions),
+                             {k: list(v) for k, v in res.tile_sizes.items()},
+                             res.strategy, False, time.perf_counter() - t0)
+
+    def compile_many(self, fns: Sequence, **kw) -> List[ServiceResult]:
+        """Serve a batch of functions through the db (replay traffic)."""
+        return [self.compile_one(f, **kw) for f in fns]
+
+    @property
+    def stats(self):
+        """The underlying db's hit/miss/write/quarantine counters."""
+        return self.db.stats
+
+
+def serve(db=None, path: Optional[str] = None, **dse_defaults
+          ) -> CompileService:
+    """Open the compile service: ``pom.serve()`` (the ROADMAP's
+    many-users entry point).  ``path`` (or ``POM_DESIGN_DB``) selects the
+    persistent database; with neither set the service is a per-process
+    memo — same API, no disk."""
+    return CompileService(db=db, path=path, **dse_defaults)
+
+
+def compile_many(fns: Sequence, service: Optional[CompileService] = None,
+                 **kw) -> List[ServiceResult]:
+    """One-shot batch compile through a (new or given) service."""
+    svc = service if service is not None else serve()
+    return svc.compile_many(fns, **kw)

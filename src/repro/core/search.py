@@ -19,14 +19,22 @@ strategy registry:
   the incremental engine (PR 1), so revisiting a design another beam
   already evaluated is a dictionary hit;
 * ``parallel`` — the greedy ladder with the per-rung candidate set
-  evaluated concurrently by forked worker processes.  Each worker
-  evaluates one ``unroll_candidates`` snapshot against a copy-on-write
-  image of the parent's caches; results are merged back **in candidate
-  order** (never completion order), with ``CostStats`` counters and the
-  name-canonical memo tables deduplicated by replay so the merged
-  ``CostStats`` and every evaluation counter equal a serial run's
-  exactly (hit counters can exceed serial's by a few repeated
-  dictionary lookups — see ``_merge_candidate_result``).
+  evaluated concurrently by a **supervised pool of warm worker
+  processes** (forked once per search, primed per rung with the parent's
+  schedule snapshot and cache delta, so every candidate evaluation still
+  starts from exactly the serial engine's rung-start state).  Results
+  are merged back **in candidate order** (never completion order), with
+  ``CostStats`` counters and the name-canonical memo tables deduplicated
+  by replay so the merged ``CostStats`` and every evaluation counter
+  equal a serial run's exactly (hit counters can exceed serial's by a
+  few repeated dictionary lookups — see ``_merge_candidate_result``).
+  A worker that crashes, hangs past its deadline
+  (``POM_WORKER_DEADLINE_S``), or returns a malformed reply is killed
+  and its candidate retried with backoff on a fresh worker; after
+  ``POM_WORKER_MAX_FAILURES`` consecutive failures the evaluator
+  degrades to the serial path for the rest of the search with a
+  structured :class:`~repro.core.errors.PomWarning` instead of an
+  exception — same results, same eval counters, no crash.
 
 Every evaluated design additionally lands in a :class:`ParetoArchive` of
 ``(latency, DSP, BRAM18, schedule signature)`` points with
@@ -43,12 +51,16 @@ from __future__ import annotations
 
 import copy
 import json
+import multiprocessing
 import os
 import sys
+from multiprocessing import connection as _mpc
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from . import caching
+from . import faultinject
+from .errors import warn_structured
 from .cost_model import CostStats, DesignReport, HlsModel
 from .depgraph import DepGraph, build_depgraph
 from .ir import Function, Statement
@@ -387,6 +399,9 @@ class SerialEvaluator:
 
     workers = 1
 
+    def close(self) -> None:
+        """Evaluators own no resources by default (pool symmetry)."""
+
     def evaluate(self, ctx: SearchContext, st: LadderState, s: Statement,
                  uid: int, P: int, sweep=None) -> List[Candidate]:
         out: List[Candidate] = []
@@ -403,9 +418,8 @@ class SerialEvaluator:
 
 
 # ---- worker-pool evaluation ------------------------------------------------
-# Module-level state handed to forked workers by copy-on-write (set only
-# for the duration of one pool fan-out; never pickled).
-_FORK_STATE: Optional[Tuple] = None
+# Warm workers are forked once per search and inherit the parent's whole
+# object graph copy-on-write; per-rung state travels over a Pipe.
 
 
 def _stmt_cache_tables(s: Statement) -> Dict[str, dict]:
@@ -534,15 +548,19 @@ class _CandidateResult:
     report_delta: Optional[Dict] = None
 
 
-def _candidate_eval_task(factors: Tuple[int, ...]) -> _CandidateResult:
-    """Worker-side evaluation of one candidate.  Runs in a freshly forked
-    process (``maxtasksperchild=1``), so the starting cache/counter state is
-    exactly the parent's at fan-out time regardless of scheduling order."""
-    fn, model, uid, base_snap, sweep = _FORK_STATE
+def _candidate_eval_body(fn: Function, model: HlsModel, s: Statement,
+                         base_snap, sweep,
+                         factors: Tuple[int, ...]) -> _CandidateResult:
+    """Worker-side evaluation of one candidate against the current cache
+    state — the counter-accounting twin of one ``SerialEvaluator`` loop
+    iteration, split into apply/report phases for the replay merge.  A
+    warm worker's caches hold the parent's rung-start state (per-rung
+    sync) plus entries from candidates this worker already evaluated —
+    always a subset of what a serial run would hold at the same point, so
+    the merge conversion reproduces serial's counters exactly."""
     cp0 = _checkpoint(fn, model)
-    s = next(x for x in fn.statements if x.uid == uid)
     _restore_node(fn, s, base_snap)
-    ok = apply_parallel(s, factors)
+    ok = apply_parallel(s, tuple(factors))
     if ok:
         model.prime_recurrence_ii(s, sweep, factors)
         _refresh_partitions(fn)
@@ -683,14 +701,166 @@ def _pool_min_candidates() -> int:
         return 4
 
 
-class PoolEvaluator:
-    """Evaluate a rung's candidates concurrently in forked worker processes.
+# ---- warm-worker pool ------------------------------------------------------
+def _env_float(name: str, default: float) -> float:
+    try:
+        return float(os.environ.get(name, "") or default)
+    except ValueError:
+        return default
 
-    Requires the ``fork`` start method (Linux): workers inherit the whole
-    incremental-cache state copy-on-write, so each candidate evaluation
-    starts from exactly the serial engine's rung-start state.  Falls back
-    to serial evaluation when ``fork`` is unavailable, ``workers <= 1``,
-    or the rung has fewer candidates than ``POM_POOL_MIN_CANDIDATES``.
+
+def _env_int(name: str, default: int) -> int:
+    try:
+        return int(os.environ.get(name, "") or default)
+    except ValueError:
+        return default
+
+
+def _ship_fn_snapshot(fn: Function):
+    """Picklable image of the parent's live schedule state: per-statement
+    snapshots *without* ``after_spec`` (it holds Statement object
+    references; workers keep their own — stage 2 never changes it) plus
+    the placeholder partition maps."""
+    return ({s.uid: _snapshot(s)[:5] for s in fn.statements},
+            {ph.name: dict(ph.partitions) for ph in fn.placeholders.values()})
+
+
+def _apply_shipped_snapshot(fn: Function, shipped) -> None:
+    stmts, parts = shipped
+    for s in fn.statements:
+        snap5 = stmts.get(s.uid)
+        if snap5 is not None:
+            _restore(s, tuple(snap5) + (s.after_spec,))
+    for ph in fn.placeholders.values():
+        if ph.name in parts:
+            ph.partitions = dict(parts[ph.name])
+
+
+def _insert_delta(fn: Function, model: HlsModel, delta: Dict) -> None:
+    """Raw (uncounted, unconditional) insert of a ``_cache_delta`` into
+    this process's caches — the worker side of the per-rung sync.  Keys
+    are structural, so an overwrite re-inserts the identical value."""
+    gtables = caching.global_memo_tables()
+    for name, entries in delta.get("global", {}).items():
+        gtables[name].update(entries)
+    xfer = delta.get("xfer", {})
+    gx = caching.global_xfer_sets()
+    for name, keys in xfer.get("global", {}).items():
+        if name in gx:
+            gx[name].update(keys)
+    by_uid = {s.uid: s for s in fn.statements}
+    for uid, per in delta.get("stmt", {}).items():
+        s = by_uid.get(uid)
+        if s is None:
+            continue
+        tables = _stmt_cache_tables(s)
+        for name, entries in per.items():
+            tables[name].update(entries)
+    for uid, perx in xfer.get("stmt", {}).items():
+        s = by_uid.get(uid)
+        if s is None:
+            continue
+        for name, keys in perx.items():
+            s._xfer_keys[name].update(keys)
+    mtables = _model_cache_tables(model)
+    for name, entries in delta.get("model", {}).items():
+        mtables[name].update(entries)
+
+
+def _warm_worker_main(conn, fn: Function, model: HlsModel) -> None:
+    """Warm-worker loop: forked once, primed per rung, evaluates candidates
+    until told to stop (or killed by the supervisor).
+
+    Messages: ``("rung", fn_snap|None, uid, base5, sweep, delta)`` syncs
+    this worker to the parent's rung-start state (``fn_snap=None`` for a
+    worker forked mid-search, whose inherited state is already current);
+    ``("cand", idx, factors, poison)`` evaluates one candidate and
+    replies ``("result", idx, _CandidateResult)``.  ``poison`` carries an
+    injected fault from the parent's ``worker.dispatch`` site — the
+    worker SIGKILLs itself, hangs past the deadline, or replies with a
+    malformed tuple, exercising each supervision path deterministically.
+    """
+    import signal
+    import time
+    signal.signal(signal.SIGINT, signal.SIG_IGN)
+    rung = None
+    try:
+        while True:
+            try:
+                msg = conn.recv()
+            except (EOFError, OSError):
+                break
+            tag = msg[0]
+            if tag == "stop":
+                break
+            if tag == "rung":
+                _, fn_snap, uid, base5, sweep, delta = msg
+                if fn_snap is not None:
+                    _apply_shipped_snapshot(fn, fn_snap)
+                if delta:
+                    _translate_placeholders(fn, delta)
+                    _insert_delta(fn, model, delta)
+                s = next(x for x in fn.statements if x.uid == uid)
+                rung = (s, tuple(base5) + (s.after_spec,), sweep)
+                continue
+            _, idx, factors, poison = msg
+            if poison == "crash":
+                os.kill(os.getpid(), signal.SIGKILL)
+            if poison == "hang":
+                time.sleep(3600.0)
+            s, base, sweep = rung
+            res = _candidate_eval_body(fn, model, s, base, sweep, factors)
+            if poison == "pickle":
+                conn.send(("garbled", idx, "<malformed-reply>"))
+            else:
+                conn.send(("result", idx, res))
+    except BaseException:
+        pass  # any worker-side failure surfaces to the parent as EOF
+    finally:
+        try:
+            conn.close()
+        except OSError:
+            pass
+        os._exit(0)   # forked child: skip inherited atexit/JAX teardown
+
+
+class _WarmWorker:
+    __slots__ = ("proc", "conn")
+
+    def __init__(self, proc, conn):
+        self.proc = proc
+        self.conn = conn
+
+
+_CAND_ATTEMPTS_MAX = 3
+_PIPELINE_DEPTH = 2
+
+
+class PoolEvaluator:
+    """Evaluate a rung's candidates concurrently on supervised warm workers.
+
+    Requires the ``fork`` start method (Linux).  Workers are forked once
+    per search (inheriting the incremental-cache state copy-on-write) and
+    re-primed each rung with the parent's schedule snapshot plus the
+    cache delta since the last sync, so every candidate evaluation starts
+    from exactly the serial engine's rung-start state — the invariant the
+    replay merge's counter parity rests on — without the old
+    fork-per-candidate re-import cost.
+
+    Supervision: each dispatched candidate has a deadline
+    (``POM_WORKER_DEADLINE_S``); a worker that dies, exceeds it, or
+    returns a malformed reply is killed and replaced, and the candidate
+    is retried with backoff (``POM_WORKER_RETRY_BACKOFF_S``) on a fresh
+    worker, up to 3 attempts.  After ``POM_WORKER_MAX_FAILURES``
+    consecutive failures the evaluator emits a structured ``PomWarning``
+    and degrades to the serial path for the rest of the search.
+    Candidates without a pooled result are evaluated serially *in
+    candidate order during the merge* — at that point the parent's caches
+    hold exactly a serial run's state, so counters stay exact either way.
+
+    Falls back to serial evaluation when ``fork`` is unavailable,
+    ``workers <= 1``, or the rung has fewer candidates than
+    ``POM_POOL_MIN_CANDIDATES``.
     """
 
     def __init__(self, workers: Optional[int] = None,
@@ -699,38 +869,265 @@ class PoolEvaluator:
         self.min_candidates = (int(min_candidates)
                                if min_candidates is not None
                                else _pool_min_candidates())
+        self.deadline_s = _env_float("POM_WORKER_DEADLINE_S", 30.0)
+        self.max_failures = max(1, _env_int("POM_WORKER_MAX_FAILURES", 3))
+        self.backoff_s = _env_float("POM_WORKER_RETRY_BACKOFF_S", 0.02)
         self._serial = SerialEvaluator()
+        self._procs: List[_WarmWorker] = []
+        self._pool_fn: Optional[Function] = None
+        self._pool_model: Optional[HlsModel] = None
+        self._sync_keys: Optional[Dict] = None
+        self._degraded = False
+        self._consec_failures = 0
 
     @staticmethod
     def _fork_available() -> bool:
-        import multiprocessing
         return "fork" in multiprocessing.get_all_start_methods()
 
+    # -- pool lifecycle ------------------------------------------------------
+    def _spawn(self, ctx: SearchContext) -> _WarmWorker:
+        mp = multiprocessing.get_context("fork")
+        parent_conn, child_conn = mp.Pipe()
+        proc = mp.Process(target=_warm_worker_main,
+                          args=(child_conn, ctx.fn, ctx.model), daemon=True)
+        proc.start()
+        child_conn.close()
+        w = _WarmWorker(proc, parent_conn)
+        self._procs.append(w)
+        return w
+
+    def _ensure_pool(self, ctx: SearchContext, n_cands: int) -> bool:
+        if self._pool_fn is not ctx.fn or self._pool_model is not ctx.model:
+            # a new search reuses the evaluator: fresh pool, fresh health
+            self.close()
+            self._degraded = False
+            self._consec_failures = 0
+        if self._procs:
+            return True
+        try:
+            # nothing may touch the caches between this snapshot and the
+            # forks below: a fresh worker's inherited state must equal
+            # the delta baseline exactly
+            self._sync_keys = _cache_key_snapshot(ctx.fn, ctx.model)
+            for _ in range(max(2, min(self.workers, n_cands))):
+                self._spawn(ctx)
+        except OSError as e:
+            self._degrade(ctx, f"fork_failed:{type(e).__name__}")
+            return False
+        self._pool_fn, self._pool_model = ctx.fn, ctx.model
+        return True
+
+    def _kill(self, w: _WarmWorker) -> None:
+        if w in self._procs:
+            self._procs.remove(w)
+        try:
+            w.proc.kill()
+        except OSError:
+            pass
+        w.proc.join(timeout=5.0)
+        try:
+            w.conn.close()
+        except OSError:
+            pass
+
+    def close(self) -> None:
+        """Stop and reap every warm worker (end of search / pool reset)."""
+        for w in list(self._procs):
+            try:
+                w.conn.send(("stop",))
+            except (OSError, ValueError):
+                pass
+        for w in list(self._procs):
+            try:
+                w.conn.close()
+            except OSError:
+                pass
+            w.proc.join(timeout=1.0)
+            if w.proc.is_alive():
+                w.proc.kill()
+                w.proc.join(timeout=5.0)
+        self._procs = []
+        self._pool_fn = self._pool_model = None
+        self._sync_keys = None
+
+    def _degrade(self, ctx: SearchContext, reason: str) -> None:
+        self._degraded = True
+        consec = self._consec_failures
+        self.close()
+        self._degraded = True   # close() must not clear the degrade flag
+        warn_structured("search.pool", "degraded_to_serial", reason=reason,
+                        consecutive_failures=consec,
+                        max_failures=self.max_failures)
+
+    # -- supervision ---------------------------------------------------------
+    def _send(self, w: _WarmWorker, msg) -> bool:
+        try:
+            w.conn.send(msg)
+            return True
+        except (OSError, ValueError):
+            return False
+
+    def _send_bytes(self, w: _WarmWorker, payload: bytes) -> bool:
+        try:
+            w.conn.send_bytes(payload)
+            return True
+        except (OSError, ValueError):
+            return False
+
+    def _respawn(self, ctx: SearchContext, uid: int, base, sweep) -> None:
+        """Replace a killed worker mid-rung.  The fork inherits the
+        parent's caches exactly as they were at rung start (results merge
+        only after collection), so it needs the rung header but no
+        snapshot or delta."""
+        try:
+            w = self._spawn(ctx)
+        except OSError as e:
+            self._degrade(ctx, f"respawn_failed:{type(e).__name__}")
+            return
+        if not self._send(w, ("rung", None, uid, base[:5], sweep, {})):
+            self._kill(w)
+            self._degrade(ctx, "respawn_sync_failed")
+
+    def _pooled_results(self, ctx: SearchContext, s: Statement, uid: int,
+                        base, sweep, factor_list: List[Tuple[int, ...]]
+                        ) -> List[Optional[_CandidateResult]]:
+        """Dispatch the rung's candidates across the warm pool under
+        supervision; ``None`` slots fall back to in-order serial
+        evaluation during the merge."""
+        import pickle
+        import time
+        from collections import deque
+        n = len(factor_list)
+        results: List[Optional[_CandidateResult]] = [None] * n
+        if not self._ensure_pool(ctx, n):
+            return results
+        # per-rung sync: the parent's schedule state plus its cache delta
+        # since the last sync makes every worker's cache key-set equal the
+        # parent's rung-start key-set (fresh-fork semantics, no fork)
+        delta = _cache_delta(ctx.fn, ctx.model, self._sync_keys)
+        self._sync_keys = _cache_key_snapshot(ctx.fn, ctx.model)
+        header = pickle.dumps(
+            ("rung", _ship_fn_snapshot(ctx.fn), uid, base[:5], sweep, delta))
+        for w in list(self._procs):
+            if not self._send_bytes(w, header):
+                self._kill(w)
+                self._consec_failures += 1
+                if self._consec_failures >= self.max_failures:
+                    self._degrade(ctx, "sync_send_failed")
+                    return results
+                self._respawn(ctx, uid, base, sweep)
+        pending = deque(range(n))
+        attempts = [0] * n
+        # in-flight candidates per worker, in dispatch order, as
+        # (idx, deadline) pairs.  Keeping up to _PIPELINE_DEPTH queued per
+        # worker lets workers stream results back-to-back instead of
+        # idling one parent round-trip between candidates.
+        flight: Dict[_WarmWorker, deque] = {}
+
+        def fail(w: _WarmWorker, reason: str) -> None:
+            lost = [i for i, _ in flight.pop(w, ())]
+            self._kill(w)
+            self._consec_failures += 1
+            warn_structured("search.pool", "worker_failed", reason=reason,
+                            candidates=",".join(map(str, lost)) or "-",
+                            consecutive_failures=self._consec_failures)
+            if self._consec_failures >= self.max_failures:
+                self._degrade(ctx, reason)
+                return
+            retry = [i for i in lost if attempts[i] < _CAND_ATTEMPTS_MAX]
+            if retry:
+                time.sleep(self.backoff_s
+                           * max(attempts[i] for i in retry))
+                for i in reversed(retry):
+                    pending.appendleft(i)
+            # exhausted candidates keep results[i] = None -> serial fill-in
+            self._respawn(ctx, uid, base, sweep)
+
+        while (pending or any(flight.values())) and not self._degraded:
+            for w in list(self._procs):
+                q = flight.setdefault(w, deque())
+                while pending and len(q) < _PIPELINE_DEPTH:
+                    i = pending.popleft()
+                    attempts[i] += 1
+                    kind = faultinject.fires("worker.dispatch")
+                    poison = kind if kind in ("crash", "hang", "pickle") \
+                        else None
+                    if not self._send(w, ("cand", i, factor_list[i], poison)):
+                        q.append((i, 0.0))
+                        fail(w, "dispatch_send_failed")
+                        break
+                    q.append((i, time.monotonic() + self.deadline_s))
+                if self._degraded:
+                    return results
+            active = {w: q for w, q in flight.items() if q}
+            if not active:
+                if pending and not self._procs:
+                    self._degrade(ctx, "no_workers_left")
+                continue
+            now = time.monotonic()
+            timeout = max(0.0, min(q[0][1] for q in active.values()) - now)
+            ready = _mpc.wait([w.conn for w in active], timeout=timeout)
+            for conn in ready:
+                if self._degraded:
+                    break
+                w = next(x for x in active if x.conn is conn)
+                q = flight.get(w)
+                if not q:
+                    continue   # worker already failed this round
+                try:
+                    reply = w.conn.recv()
+                except (EOFError, OSError):
+                    fail(w, "worker_died")
+                    continue
+                head = q[0][0]
+                if (not isinstance(reply, tuple) or len(reply) != 3
+                        or reply[0] != "result" or reply[1] != head
+                        or not isinstance(reply[2], _CandidateResult)):
+                    fail(w, "malformed_reply")
+                    continue
+                results[head] = reply[2]
+                q.popleft()
+                if q:
+                    # the queued-behind candidate only starts running now:
+                    # its deadline clock starts here, not at dispatch
+                    i2, _ = q.popleft()
+                    q.appendleft((i2, time.monotonic() + self.deadline_s))
+                self._consec_failures = 0
+            now = time.monotonic()
+            for w in [w for w, q in flight.items() if q and now >= q[0][1]]:
+                if self._degraded:
+                    break
+                fail(w, "deadline_exceeded")
+        return results
+
+    # -- evaluation ----------------------------------------------------------
     def evaluate(self, ctx: SearchContext, st: LadderState, s: Statement,
                  uid: int, P: int, sweep=None) -> List[Candidate]:
         factor_list = [tuple(f) for f in unroll_candidates(P)]
         if (self.workers <= 1 or len(factor_list) < self.min_candidates
-                or not self._fork_available()):
+                or self._degraded or not self._fork_available()):
             return self._serial.evaluate(ctx, st, s, uid, P, sweep)
-        import multiprocessing
-        global _FORK_STATE
         base = st.base_snaps[uid]
-        _FORK_STATE = (ctx.fn, ctx.model, uid, base, sweep)
-        try:
-            mp = multiprocessing.get_context("fork")
-            n = min(self.workers, len(factor_list))
-            with mp.Pool(n, maxtasksperchild=1) as pool:
-                results = pool.map(_candidate_eval_task, factor_list,
-                                   chunksize=1)
-        finally:
-            _FORK_STATE = None
+        results = self._pooled_results(ctx, s, uid, base, sweep, factor_list)
         out: List[Candidate] = []
-        for factors, res in zip(factor_list, results):
+        for i, factors in enumerate(factor_list):
+            res = results[i]
+            if res is None:
+                # failed / degraded candidate: evaluate serially, in
+                # candidate order — the merges above have brought the
+                # parent's caches to exactly a serial run's state here
+                _restore_node(ctx.fn, s, base)
+                if not apply_parallel(s, factors):
+                    continue
+                ctx.model.prime_recurrence_ii(s, sweep, factors)
+                _refresh_partitions(ctx.fn)
+                rep = ctx.model.design_report(ctx.fn)
+                out.append(Candidate(factors, rep, _snapshot(s)))
+                continue
             _merge_candidate_result(ctx, res)
             if not res.ok:
                 continue
-            snap = res.snap[:5] + (base[5],)
-            out.append(Candidate(factors, res.report, snap))
+            out.append(Candidate(factors, res.report, res.snap[:5] + (base[5],)))
         if ctx.archive is not None:
             # archive points carry the *candidate's* design signature, so
             # the candidate schedule must be live on ctx.fn when recorded
@@ -852,8 +1249,11 @@ class GreedySearch(SearchStrategy):
     def run(self, ctx: SearchContext) -> LadderState:
         st = _init_ladder(ctx)
         st.lineage = True
-        while _rung(ctx, st, self.evaluator):
-            pass
+        try:
+            while _rung(ctx, st, self.evaluator):
+                pass
+        finally:
+            self.evaluator.close()
         return st
 
 
@@ -927,26 +1327,29 @@ class BeamSearch(SearchStrategy):
         st.snap = _snapshot_fn(ctx.fn)
         st.sig = design_signature(ctx.fn)
         live, done = [st], []
-        while live:
-            successors: List[Tuple[int, LadderState]] = []
-            seq = 0
-            for cur in live:
-                _restore_fn(ctx.fn, cur.snap)
-                pre = cur.clone()
-                pre.lineage = False
-                progressed = _rung(ctx, cur, self.evaluator)
-                if not progressed:
-                    done.append(cur)
-                    continue
-                cur.snap = _snapshot_fn(ctx.fn)
-                cur.sig = design_signature(ctx.fn)
-                successors.append((seq, cur))
-                seq += 1
-                if self.width > 1 and cur.last_rung is not None:
-                    for alt in self._branches(ctx, pre, cur.last_rung):
-                        successors.append((seq, alt))
-                        seq += 1
-            live = self._select(successors)
+        try:
+            while live:
+                successors: List[Tuple[int, LadderState]] = []
+                seq = 0
+                for cur in live:
+                    _restore_fn(ctx.fn, cur.snap)
+                    pre = cur.clone()
+                    pre.lineage = False
+                    progressed = _rung(ctx, cur, self.evaluator)
+                    if not progressed:
+                        done.append(cur)
+                        continue
+                    cur.snap = _snapshot_fn(ctx.fn)
+                    cur.sig = design_signature(ctx.fn)
+                    successors.append((seq, cur))
+                    seq += 1
+                    if self.width > 1 and cur.last_rung is not None:
+                        for alt in self._branches(ctx, pre, cur.last_rung):
+                            successors.append((seq, alt))
+                            seq += 1
+                live = self._select(successors)
+        finally:
+            self.evaluator.close()
         best = min(enumerate(done),
                    key=lambda t: (t[1].report.latency,
                                   0 if t[1].lineage else 1, t[0]))[1]

@@ -261,6 +261,36 @@ def test_evict_half_drops_insertion_order():
     assert list(d) == [5, 6, 7, 8, 9]
 
 
+def test_depvec_cache_limit_env_toggle(monkeypatch):
+    from repro.core import affine
+
+    monkeypatch.setenv("POM_DEPVEC_CACHE_MAX", "8")
+    assert affine._depvec_cache_limit() == 8
+    monkeypatch.setenv("POM_DEPVEC_CACHE_MAX", "junk")
+    assert affine._depvec_cache_limit() == affine._DEPVEC_CACHE_MAX
+    monkeypatch.delenv("POM_DEPVEC_CACHE_MAX")
+    assert affine._depvec_cache_limit() == affine._DEPVEC_CACHE_MAX
+
+
+@pytest.mark.parametrize("name", ["gemm", "bicg", "3mm"])
+def test_eviction_mid_search_bit_identical(name, monkeypatch):
+    """Half-eviction firing repeatedly *during* the search — in the
+    parent's own lookups and inside the parallel pool's delta merges —
+    must only forget memo entries, never change a result."""
+    from repro.core import affine
+
+    ref = auto_dse(_fresh(name), max_parallel=16, model=HlsModel())
+    monkeypatch.setenv("POM_DEPVEC_CACHE_MAX", "4")
+    small = auto_dse(_fresh(name), max_parallel=16, model=HlsModel())
+    assert len(affine._DEPVEC_CACHE) <= 4, "tiny bound was never enforced"
+    assert _result_tuple(small) == _result_tuple(ref)
+    par = auto_dse(_fresh(name), max_parallel=16, model=HlsModel(),
+                   strategy="parallel", workers=2)
+    assert len(affine._DEPVEC_CACHE) <= 4, (
+        "merged worker deltas escaped the depvec bound")
+    assert _result_tuple(par) == _result_tuple(ref)
+
+
 # --------------------------------------------------------------------------
 # search satellites: pool threshold + beam rank scalarization
 # --------------------------------------------------------------------------

@@ -1,0 +1,199 @@
+"""Design-database tests: atomicity, content addressing, validation.
+
+The db's contract (``core/designdb.py``):
+  * writes are atomic + checksummed envelopes; any corruption is caught
+    on read, quarantined with a structured warning, and reads report a
+    miss — never a crash, never a silently wrong payload;
+  * keys are *name-canonical*: renaming statements/arrays/iterators does
+    not change the address, while anything that changes the produced
+    design (shapes, schedule state, DSE options) does;
+  * ``DesignReport`` round-trips bit-identically through JSON, dataflow
+    section included.
+"""
+import json
+import os
+
+import pytest
+
+from benchmarks import workloads
+from repro.core import caching, designdb
+from repro.core import dsl as pom
+from repro.core.cost_model import HlsModel
+from repro.core.dse import auto_dse
+from repro.core.errors import PomWarning
+
+
+# --------------------------------------------------------------------------
+# atomic writes
+# --------------------------------------------------------------------------
+def test_atomic_write_replaces_whole_file(tmp_path):
+    p = str(tmp_path / "f.json")
+    designdb.atomic_write_json(p, {"a": 1})
+    designdb.atomic_write_json(p, {"a": 2})
+    with open(p) as fh:
+        assert json.load(fh) == {"a": 2}
+    # no leftover tempfiles
+    assert os.listdir(tmp_path) == ["f.json"]
+
+
+def test_atomic_write_failure_leaves_no_droppings(tmp_path):
+    p = str(tmp_path / "f.json")
+    designdb.atomic_write_text(p, "old")
+    with pytest.raises(TypeError):
+        designdb.atomic_write_json(p, {"bad": object()})
+    with open(p) as fh:
+        assert fh.read() == "old"
+    assert os.listdir(tmp_path) == ["f.json"]
+
+
+# --------------------------------------------------------------------------
+# envelope validation
+# --------------------------------------------------------------------------
+def test_roundtrip_and_persistence(tmp_path):
+    db = designdb.DesignDB(str(tmp_path / "db"))
+    key = "ef" + "0" * 62
+    db.put(key, {"v": [1, 2]})
+    assert db.get(key) == {"v": [1, 2]}        # hot
+    db2 = designdb.DesignDB(str(tmp_path / "db"))  # fresh process view
+    assert db2.get(key) == {"v": [1, 2]}       # verified from disk
+    assert db2.stats.hits == 1
+
+
+def test_memory_only_db(tmp_path):
+    db = designdb.DesignDB()                    # no path: pure memo
+    key = "a" * 64
+    assert db.get(key) is None
+    db.put(key, {"v": 1})
+    assert db.get(key) == {"v": 1}
+    assert not (tmp_path / "designs").exists()
+
+
+def test_version_mismatch_quarantined(tmp_path):
+    db = designdb.DesignDB(str(tmp_path / "db"))
+    key = "ab" + "0" * 62
+    db.put(key, {"v": 1})
+    path = db._entry_path(key)
+    with open(path) as fh:
+        env = json.load(fh)
+    env["version"] = designdb.DB_VERSION + 1
+    designdb.atomic_write_json(path, env)
+    db.forget(key)
+    with pytest.warns(PomWarning, match="entry_quarantined"):
+        assert db.get(key) is None
+    assert db.stats.quarantined == 1
+    assert not os.path.exists(path)             # moved aside, not re-read
+    assert len(os.listdir(tmp_path / "db" / "quarantine")) == 1
+
+
+def test_checksum_mismatch_quarantined(tmp_path):
+    db = designdb.DesignDB(str(tmp_path / "db"))
+    key = "ab" + "1" * 62
+    db.put(key, {"v": 1})
+    path = db._entry_path(key)
+    with open(path) as fh:
+        env = json.load(fh)
+    env["payload"]["v"] = 2                     # silent payload tamper
+    designdb.atomic_write_json(path, env)
+    db.forget(key)
+    with pytest.warns(PomWarning, match="checksum"):
+        assert db.get(key) is None
+
+
+def test_garbage_file_quarantined(tmp_path):
+    db = designdb.DesignDB(str(tmp_path / "db"))
+    key = "ab" + "2" * 62
+    path = db._entry_path(key)
+    with open(path, "w") as fh:
+        fh.write("not json {{{")
+    with pytest.warns(PomWarning, match="entry_quarantined"):
+        assert db.get(key) is None
+
+
+# --------------------------------------------------------------------------
+# content addressing
+# --------------------------------------------------------------------------
+def _gemm_named(fname, sname, arrs, dims, n=16):
+    a0, a1, a2 = arrs
+    d0, d1, d2 = dims
+    with pom.function(fname) as f:
+        i = pom.var(d0, 0, n); j = pom.var(d1, 0, n); k = pom.var(d2, 0, n)
+        A = pom.placeholder(a0, (n, n))
+        B = pom.placeholder(a1, (n, n))
+        C = pom.placeholder(a2, (n, n))
+        pom.compute(sname, [i, j, k], C(i, j) + A(i, k) * B(k, j), C(i, j))
+    return f.fn
+
+
+def test_key_invariant_under_renaming():
+    k1 = designdb.function_key(
+        _gemm_named("gemm", "s", ("A", "B", "C"), ("i", "j", "k")))
+    k2 = designdb.function_key(
+        _gemm_named("mat", "prod", ("X", "Y", "Z"), ("a", "b", "c")))
+    assert k1 == k2
+
+
+def test_key_changes_with_shape_and_schedule_and_options():
+    base = _gemm_named("gemm", "s", ("A", "B", "C"), ("i", "j", "k"))
+    k0 = designdb.function_key(base)
+    bigger = _gemm_named("gemm", "s", ("A", "B", "C"), ("i", "j", "k"), n=32)
+    assert designdb.function_key(bigger) != k0
+    sched = _gemm_named("gemm", "s", ("A", "B", "C"), ("i", "j", "k"))
+    sched.statements[0].unrolls["j"] = 4
+    assert designdb.function_key(sched) != k0
+    assert designdb.function_key(base, {"max_parallel": 64}) != k0
+    # None-valued options do not perturb the address
+    assert designdb.function_key(base, {"dataflow": None}) == k0
+
+
+# --------------------------------------------------------------------------
+# DesignReport serialization
+# --------------------------------------------------------------------------
+def test_report_roundtrip():
+    caching.clear_all()
+    caching.reset_counts()
+    rep = auto_dse(workloads.bicg(24).fn, max_parallel=16,
+                   model=HlsModel()).report
+    assert designdb.report_from_json(designdb.report_to_json(rep)) == rep
+    # and through an actual JSON wire format (what lands on disk)
+    wire = json.loads(json.dumps(designdb.report_to_json(rep)))
+    assert designdb.report_from_json(wire) == rep
+
+
+def test_report_roundtrip_with_dataflow():
+    caching.clear_all()
+    caching.reset_counts()
+    rep = auto_dse(workloads.blur(48).fn, max_parallel=16,
+                   model=HlsModel()).report
+    assert rep.dataflow is not None and rep.dataflow.applied
+    wire = json.loads(json.dumps(designdb.report_to_json(rep)))
+    assert designdb.report_from_json(wire) == rep
+
+
+# --------------------------------------------------------------------------
+# archives
+# --------------------------------------------------------------------------
+def test_archive_persistence(tmp_path):
+    caching.clear_all()
+    caching.reset_counts()
+    res = auto_dse(workloads.gemm(24).fn, max_parallel=16, model=HlsModel(),
+                   archive=True)
+    db = designdb.DesignDB(str(tmp_path / "db"))
+    key = designdb.function_key(workloads.gemm(24).fn)
+    db.store_archive(key, res.archive)
+    loaded = designdb.DesignDB(str(tmp_path / "db")).load_archive(key)
+    assert loaded == res.archive.to_json()
+
+
+def test_archive_corruption_quarantined(tmp_path):
+    caching.clear_all()
+    caching.reset_counts()
+    res = auto_dse(workloads.gemm(24).fn, max_parallel=16, model=HlsModel(),
+                   archive=True)
+    db = designdb.DesignDB(str(tmp_path / "db"))
+    key = designdb.function_key(workloads.gemm(24).fn)
+    db.store_archive(key, res.archive)
+    path = db._archive_path(key)
+    from repro.core.faultinject import corrupt_file
+    corrupt_file(path, "truncate")
+    with pytest.warns(PomWarning, match="entry_quarantined"):
+        assert designdb.DesignDB(str(tmp_path / "db")).load_archive(key) is None

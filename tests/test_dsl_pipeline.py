@@ -214,3 +214,73 @@ def test_non_divisible_split():
     x = np.arange(n, dtype=float)
     out, ast = _run(f, {"X": x, "Y": np.zeros(n)})
     np.testing.assert_allclose(out["Y"], x + 1.0)
+
+
+# --------------------------------------------------------------------------
+# DSL boundary validation (PomUserError instead of deep KeyError/IndexError)
+# --------------------------------------------------------------------------
+def test_rank_mismatch_raises_pom_user_error():
+    n = 8
+    with pom.function("bad"):
+        i, j = pom.var("i", 0, n), pom.var("j", 0, n)
+        A = pom.placeholder("A", (n, n))
+        with pytest.raises(pom.PomUserError, match=r"rank 2.*1 index"):
+            pom.compute("s", [i, j], A(i) + 1.0, A(i, j))
+
+
+def test_dest_rank_mismatch_raises_pom_user_error():
+    n = 8
+    with pom.function("bad"):
+        i, j = pom.var("i", 0, n), pom.var("j", 0, n)
+        A = pom.placeholder("A", (n, n))
+        with pytest.raises(pom.PomUserError, match="'A'"):
+            pom.compute("s", [i, j], A(i, j) + 1.0, A(i, j, j))
+
+
+def test_undeclared_iterator_in_access_raises_pom_user_error():
+    n = 8
+    with pom.function("bad"):
+        i = pom.var("i", 0, n)
+        k = pom.var("k", 0, n)          # declared as a Var, not an iterator
+        A = pom.placeholder("A", (n, n))
+        with pytest.raises(pom.PomUserError,
+                           match=r"undeclared iterator 'k'"):
+            pom.compute("s", [i], A(i, k) + 1.0, A(i, i))
+
+
+def test_undeclared_iterator_in_expression_raises_pom_user_error():
+    n = 8
+    with pom.function("bad"):
+        i = pom.var("i", 0, n)
+        k = pom.var("k", 0, n)
+        X = pom.placeholder("X", (n,))
+        with pytest.raises(pom.PomUserError,
+                           match=r"undeclared iterator 'k'"):
+            pom.compute("s", [i], X(i) + k, X(i))
+
+
+def test_non_load_dest_raises_pom_user_error():
+    n = 8
+    with pom.function("bad"):
+        i = pom.var("i", 0, n)
+        X = pom.placeholder("X", (n,))
+        with pytest.raises(pom.PomUserError, match="dest"):
+            pom.compute("s", [i], X(i) + 1.0, X)
+
+
+def test_error_names_statement_and_array():
+    n = 8
+    with pom.function("bad"):
+        i = pom.var("i", 0, n)
+        Q = pom.placeholder("Q", (n, n))
+        with pytest.raises(pom.PomUserError, match=r"compute\('sname'\).*'Q'"):
+            pom.compute("sname", [i], Q(i) + 1.0, Q(i))
+
+
+def test_valid_program_unaffected_by_validation():
+    n = 8
+    f, s, A, B, C = _gemm(n)
+    rng = np.random.default_rng(3)
+    b, c = rng.normal(size=(n, n)), rng.normal(size=(n, n))
+    out, _ = _run(f, {"A": np.zeros((n, n)), "B": b, "C": c})
+    np.testing.assert_allclose(out["A"], b @ c, rtol=1e-12)
