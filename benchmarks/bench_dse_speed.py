@@ -40,11 +40,22 @@ Dataflow columns: per workload, the DSE'd designs are re-aggregated under
 (streaming task graph), recording summed latency and BRAM18 per mode plus
 the number of applied regions — the latency/BRAM price of task overlap.
 
-Search-strategy columns (PR 3): each workload is additionally searched
-with every registered stage-2 strategy — ``greedy``, ``beam:2``,
-``parallel:2`` — recording wall-seconds *and* best design cost (summed
-report latency), so the snapshot tracks search **quality** alongside
-search speed.  The ``fusion_prepass`` section runs graph-level fusion
+Search-strategy columns (PR 3, widened for the parallel beam): each
+workload is additionally searched with ``greedy``, ``beam:2``,
+``beam:4``, the pooled ``beam:8:parallel``, and ``parallel:2``,
+recording wall-seconds *and* best design cost (summed report latency),
+so the snapshot tracks search **quality** alongside search speed.  Each
+strategy wall is the best (min) of ``STRATEGY_REPEATS`` cold-cache
+repeats, interleaved round-robin across strategies so machine drift
+lands evenly — and the ``beam_scaling`` ratio (``beam8`` wall /
+``greedy`` wall) is the headline number for the cross-state wave:
+instead of the naive ~8x it sits near 1x where sibling states collapse
+onto shared rungs (gemm) and ~2-3x where the eight states genuinely
+diverge (3mm evaluates ~6x the rungs of ``beam:1``; the
+transformed-node/whole-design caches absorb the rest).  The snapshot
+records the host ``cpus``: on a multi-core box the pooled wave
+dispatches states concurrently on top of that; on one core it degrades
+to the bit-identical serial wave.  The ``fusion_prepass`` section runs graph-level fusion
 (``graph_passes=("fuse",)``) ahead of DSE on the multi-statement
 workloads and records the final cost against the default flow, where
 stage 1 distributes conflicting fusion groups and conservatively
@@ -117,36 +128,64 @@ def _run_workload(builders: List[Callable], max_parallel: int,
             "actions": actions, "latencies": latencies}
 
 
-# search strategies measured per workload: label -> auto_dse kwargs
+# search strategies measured per workload: label -> auto_dse kwargs.
+# ``beam8`` runs the *pooled* wave beam (``beam:8:parallel``) — on a box
+# where the pool cannot win (single core, or fork unavailable) the
+# evaluator falls back to the serial wave, which is bit-identical by
+# construction, so the column is always the pooled spec's honest wall.
 STRATEGY_SPECS: List[Tuple[str, Dict]] = [
     ("greedy", {}),
     ("beam2", {"strategy": "beam", "beam_width": 2}),
+    ("beam4", {"strategy": "beam:4"}),
+    ("beam8", {"strategy": "beam:8:parallel"}),
     ("parallel2", {"strategy": "parallel", "workers": 2}),
 ]
+
+STRATEGY_REPEATS = 3
 
 
 def _measure_strategies(builders: List[Callable],
                         max_parallel: int) -> Dict[str, Dict]:
-    """One full-budget DSE per strategy per function (cold caches per
-    strategy so the wall times are comparable): wall-seconds + best cost."""
+    """Full-budget DSE per strategy per function, repeated
+    ``STRATEGY_REPEATS`` times with cold caches each (``clear_all`` per
+    repeat), reporting the **minimum** wall across repeats — the min is
+    the standard noise filter on shared hardware — plus best design cost
+    (identical across repeats by the determinism invariants)."""
     out: Dict[str, Dict] = {}
-    for label, kw in STRATEGY_SPECS:
-        caching.clear_all()
-        caching.reset_counts()
-        t0 = time.perf_counter()
-        cost = 0
-        resources: Dict[str, float] = {}
-        for build in builders:
-            res = auto_dse(build(), max_parallel=max_parallel, **kw)
-            cost += res.report.latency
-            for k, v in res.report.resource_totals().items():
-                resources[k] = resources.get(k, 0) + v
-        out[label] = {"seconds": round(time.perf_counter() - t0, 3),
-                      "best_cost": cost, "resources": resources}
+    walls: Dict[str, List[float]] = {label: [] for label, _ in STRATEGY_SPECS}
+    # repeats are interleaved round-robin across strategies (repeat 1 of
+    # every strategy, then repeat 2, ...) so slow machine drift within the
+    # measurement window lands evenly on every column instead of
+    # penalizing whichever strategy happens to run last
+    for rep in range(STRATEGY_REPEATS):
+        for label, kw in STRATEGY_SPECS:
+            caching.clear_all()
+            caching.reset_counts()
+            cost = 0
+            resources: Dict[str, float] = {}
+            t0 = time.perf_counter()
+            for build in builders:
+                res = auto_dse(build(), max_parallel=max_parallel, **kw)
+                cost += res.report.latency
+                for k, v in res.report.resource_totals().items():
+                    resources[k] = resources.get(k, 0) + v
+            walls[label].append(time.perf_counter() - t0)
+            out[label] = {"seconds": 0.0,
+                          "repeats": STRATEGY_REPEATS,
+                          "best_cost": cost, "resources": resources}
+    for label, _ in STRATEGY_SPECS:
+        out[label]["seconds"] = round(min(walls[label]), 3)
     out["beam_cost_le_greedy"] = (
-        out["beam2"]["best_cost"] <= out["greedy"]["best_cost"])
+        out["beam2"]["best_cost"] <= out["greedy"]["best_cost"]
+        and out["beam4"]["best_cost"] <= out["greedy"]["best_cost"]
+        and out["beam8"]["best_cost"] <= out["greedy"]["best_cost"])
     out["parallel_identical_to_greedy"] = (
         out["parallel2"]["best_cost"] == out["greedy"]["best_cost"])
+    # wall-clock price of widening the beam 8x over the greedy trajectory
+    # (cross-state dedup + the transformed-node/whole-design caches are
+    # what keep this near 1 instead of near 8)
+    out["beam_scaling"] = round(
+        out["beam8"]["seconds"] / max(out["greedy"]["seconds"], 1e-9), 2)
     return out
 
 
@@ -322,7 +361,12 @@ def run_fusion_compare() -> List[Dict]:
 def csv_rows() -> List[str]:
     rows = run_all()
     fusion = run_fusion_compare()
-    snap = {"suite": "dse_speed", "results": rows, "fusion_prepass": fusion}
+    # the host's core count contextualizes the beam_scaling columns: on a
+    # single-core box the pooled beam degrades to the (bit-identical)
+    # serial wave, so the ratio there measures pure algorithmic dedup,
+    # not parallel dispatch
+    snap = {"suite": "dse_speed", "cpus": os.cpu_count(),
+            "results": rows, "fusion_prepass": fusion}
     path = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_dse_speed.json")
     # atomic: an interrupted run must not corrupt the committed snapshot
@@ -343,6 +387,10 @@ def csv_rows() -> List[str]:
             f"identical={r['identical_results']};"
             f"greedy_cost={strat['greedy']['best_cost']};"
             f"beam2_cost={strat['beam2']['best_cost']};"
+            f"beam4_cost={strat['beam4']['best_cost']};"
+            f"beam8_cost={strat['beam8']['best_cost']};"
+            f"beam8_wall={strat['beam8']['seconds']};"
+            f"beam_scaling={strat['beam_scaling']}x;"
             f"beam_le_greedy={strat['beam_cost_le_greedy']};"
             f"parallel2_identical={strat['parallel_identical_to_greedy']};"
             f"dataflow_lat={df['latency_off']}->{df['latency_on']}"

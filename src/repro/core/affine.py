@@ -24,6 +24,8 @@ from dataclasses import dataclass, field
 from fractions import Fraction
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from . import caching
+
 
 # --------------------------------------------------------------------------
 # Affine expressions
@@ -626,7 +628,6 @@ def dependence_vector(domain_src: BasicSet, acc_src: Sequence[LinExpr],
     DependenceInfo is a shared read-only instance.
     """
     n = shared_levels or min(len(domain_src.dims), len(domain_sink.dims))
-    from . import caching
     key = None
     if caching.ENABLED:
         c = NameCanon()

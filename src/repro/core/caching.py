@@ -82,6 +82,16 @@ def clear_all() -> None:
     _LEGAL_CACHE.clear()
     _REC_II_CACHE.clear()
     _REC_II_XFER.clear()
+    from .graph_ir import (_EDGE_CACHE, _FUSION_CACHE, _SKELETON_CACHE,
+                           _TASKGRAPH_CACHE)
+    _TASKGRAPH_CACHE.clear()
+    _EDGE_CACHE.clear()
+    _SKELETON_CACHE.clear()
+    _FUSION_CACHE.clear()
+    from .search import _APPLY_CACHE
+    _APPLY_CACHE.clear()
+    from .dse import _REFRESH_CACHE
+    _REFRESH_CACHE.clear()
     # don't *import* the pallas backend (pulls in jax) just to clear it
     pallas = sys.modules.get("repro.core.backend_pallas")
     if pallas is not None:

@@ -41,12 +41,14 @@ counters because they are stable across machines, unlike wall time.
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .depgraph import DepGraph, NodeInfo
 from .ir import BinOp, Call, Const, Expr, Function, IterVal, Load, Placeholder, Statement
 from .ir import loads_of
+from . import caching
 
 
 # --------------------------------------------------------------------------
@@ -228,10 +230,19 @@ class HlsModel:
         self._node_cache: Dict[Tuple, NodeReport] = {}
         self._design_cache: Dict[Tuple, DesignReport] = {}
         self._expr_cache: Dict[int, ExprStats] = {}   # uid -> body stats
+        # derived-structure memos (pure functions of schedule state the
+        # rung-evaluation hot path re-derives per candidate otherwise):
+        # group uids -> {array name: Placeholder} (which arrays a group
+        # touches never changes — only their partition dicts do)
+        self._arrays_cache: Dict[Tuple, Dict[str, Placeholder]] = {}
+        # (uid, subst sig) -> ((array name, used-dims frozenset), ...) per
+        # access ref — the memory-port II inputs that survive unrolling
+        self._refdims_cache: Dict[Tuple, Tuple] = {}
+        # (uid, domain key, subst sig) -> name-canonical II-key prefix
+        self._reckey_cache: Dict[Tuple, Tuple] = {}
         self.stats = CostStats()
 
     def _caching(self) -> bool:
-        from . import caching
         return caching.ENABLED if self._cache_flag is None else self._cache_flag
 
     def _dataflow_on(self, fn: Function) -> bool:
@@ -245,28 +256,46 @@ class HlsModel:
         from .graph_ir import dataflow_default
         return dataflow_default()
 
-    @staticmethod
-    def _partition_sig(stmts: Sequence[Statement]) -> Tuple:
-        """Signature of the partition state of every array the statements
-        touch (the only placeholder state the cost model reads)."""
+    def _group_arrays(self, stmts: Sequence[Statement]) -> Dict[str, Placeholder]:
+        """{array name: Placeholder} touched by ``stmts``.  Which arrays a
+        statement reads/writes is structural (schedules only reshape the
+        index functions), so the map is memoized per uid tuple; the live
+        partition dicts are read off the shared Placeholder objects."""
+        key = tuple(s.uid for s in stmts)
+        hit = self._arrays_cache.get(key)
+        if hit is not None:
+            return hit
         arrays: Dict[str, Placeholder] = {}
         for s in stmts:
             arr, _ = s.store_access()
             arrays.setdefault(arr.name, _find_ph([s], arr.name) or arr)
             for a, _ in s.load_accesses():
                 arrays.setdefault(a.name, _find_ph([s], a.name) or a)
-        return tuple(sorted((n, tuple(sorted(ph.partitions.items())))
-                            for n, ph in arrays.items()))
+        if self._caching():
+            self._arrays_cache[key] = arrays
+        return arrays
+
+    def _partition_sig(self, stmts: Sequence[Statement]) -> Tuple:
+        """Signature of the partition state of every array the statements
+        touch (the only placeholder state the cost model reads)."""
+        return tuple(sorted((n, ph.part_sig())
+                            for n, ph in self._group_arrays(stmts).items()))
 
     # -- per statement ---------------------------------------------------------
-    def node_report(self, stmt: Statement, group: Sequence[Statement] = ()) -> NodeReport:
+    def node_report(self, stmt: Statement, group: Sequence[Statement] = (),
+                    _sigs: Optional[Dict[int, Tuple]] = None) -> NodeReport:
         group = list(group) or [stmt]
         if not self._caching():
             self.stats.node_evals += 1
             return self._node_report_compute(stmt, group)
-        key = (stmt.uid, stmt.schedule_signature(),
-               tuple(s.schedule_signature() for s in group),
-               self._partition_sig(group))
+        # ``stmt`` is always a member of ``group``, so the group signature
+        # tuple already pins its schedule; ``_sigs`` (design_report's key,
+        # threaded down) spares rebuilding signatures per node
+        if _sigs is not None:
+            gsigs = tuple(_sigs[s.uid] for s in group)
+        else:
+            gsigs = tuple(s.schedule_signature() for s in group)
+        key = (stmt.uid, gsigs, self._partition_sig(group))
         hit = self._node_cache.get(key)
         if hit is not None:
             self.stats.node_cache_hits += 1
@@ -348,20 +377,30 @@ class HlsModel:
         ii_mem = self._memory_ii(stmt, group)
         return max(ii_rec, ii_mem)
 
-    @staticmethod
-    def _rec_ii_key(stmt: Statement, p: int, unrolls: Dict[str, int],
+    def _rec_ii_key(self, stmt: Statement, p: int, unrolls: Dict[str, int],
                     st: ExprStats) -> Tuple:
         """Name-canonical key of the recurrence-II memo (shared by the
-        lookup path and the closed-form rung sweep's cache priming)."""
-        from .affine import NameCanon
-        c = NameCanon()
-        w_arr, w_idx = stmt.store_access()
-        return (c.set_key(stmt.domain),
-                tuple(c.expr(e) for e in w_idx),
-                tuple((arr.name == w_arr.name, tuple(c.expr(e) for e in idx))
-                      for arr, idx in stmt.load_accesses()),
-                p, tuple(unrolls.get(d, 1) for d in stmt.dims),
-                stmt.pipeline_ii, st.latency)
+        lookup path and the closed-form rung sweep's cache priming).
+
+        The canonical prefix (domain + composed accesses through one
+        ``NameCanon``) depends only on (domain, substitution) — not on the
+        unroll/pipeline state a rung's candidates vary — so it is memoized
+        per schedule basis and only the cheap suffix is rebuilt per call."""
+        pre_key = (stmt.uid, stmt.domain.key(), stmt.subst_signature())
+        pre = self._reckey_cache.get(pre_key)
+        if pre is None:
+            from .affine import NameCanon
+            c = NameCanon()
+            w_arr, w_idx = stmt.store_access()
+            pre = (c.set_key(stmt.domain),
+                   tuple(c.expr(e) for e in w_idx),
+                   tuple((arr.name == w_arr.name,
+                          tuple(c.expr(e) for e in idx))
+                         for arr, idx in stmt.load_accesses()))
+            if self._caching():
+                self._reckey_cache[pre_key] = pre
+        return pre + (p, tuple(unrolls.get(d, 1) for d in stmt.dims),
+                      stmt.pipeline_ii, st.latency)
 
     def prime_recurrence_ii(self, stmt: Statement, sweep: Optional["ClosedFormII"],
                             factors: Tuple[int, ...]) -> None:
@@ -371,7 +410,6 @@ class HlsModel:
         the later lookup during ``design_report`` is a dictionary hit.
         A no-op when the sweep (or this candidate's transfer) is
         unavailable — the lookup then derives the II as before."""
-        from . import caching
         if sweep is None or not self._caching() or not caching.analytic_on():
             return
         pipe = stmt.pipeline_at
@@ -463,26 +501,43 @@ class HlsModel:
         return ClosedFormII(list(stmt.dims), dict(bounds), list(deps),
                             _link_latency(stmt, self._expr_stats(stmt)))
 
+    def _ref_dims(self, s: Statement) -> Tuple:
+        """Per access ref of ``s``: (array name, frozenset of loop dims its
+        composed index reads).  A pure function of the substitution basis —
+        unroll candidates never touch it — memoized so the memory-port II
+        of a rung's candidates is dict arithmetic over these sets."""
+        key = (s.uid, s.subst_signature())
+        hit = self._refdims_cache.get(key)
+        if hit is not None:
+            return hit
+        refs = []
+        for ld in [s.store] + loads_of(s.body):
+            used = set()
+            for e in ld.idx:
+                used |= set(s.subst_lin(e).vars())
+            refs.append((ld.array.name, frozenset(used)))
+        out = tuple(refs)
+        if self._caching():
+            self._refdims_cache[key] = out
+        return out
+
     def _memory_ii(self, stmt: Statement, group: Sequence[Statement]) -> int:
         # memory-port II (dual-port BRAM banks per partitioned array),
         # shared across fused statements in the same pipelined body.
         # A ref only multiplies by the unroll factors of dims that appear in
         # its index (replicas hitting the same address broadcast).
-        # Pure dict arithmetic over memoized composed accesses — recomputed
+        # Pure dict arithmetic over memoized ref dim-sets — recomputed
         # on every (cheap) node re-aggregation when partitions change.
         ii_mem = 1
         arrays: Dict[str, int] = {}
         for s in group:
-            refs = [s.store] + loads_of(s.body)
-            for ld in refs:
+            unrolls = s.unrolls
+            for name, used in self._ref_dims(s):
                 distinct = 1
-                used = set()
-                for e in ld.idx:
-                    used |= set(s.subst_lin(e).vars())
-                for d, f in s.unrolls.items():
+                for d, f in unrolls.items():
                     if d in used:
                         distinct *= max(f, 1)
-                arrays[ld.array.name] = arrays.get(ld.array.name, 0) + distinct
+                arrays[name] = arrays.get(name, 0) + distinct
         for name, accesses in arrays.items():
             ph = _find_ph(group, name)
             banks = 1
@@ -498,27 +553,31 @@ class HlsModel:
         use_cache = self._caching()
         df = self._dataflow_on(fn)
         key = None
+        sig_of = None
         if use_cache:
-            key = (tuple(s.schedule_signature() for s in fn.statements),
-                   tuple(sorted((ph.name, tuple(sorted(ph.partitions.items())))
+            sig_of = {s.uid: s.schedule_signature() for s in fn.statements}
+            key = (tuple(sig_of.values()),
+                   tuple(sorted((ph.name, ph.part_sig())
                                 for ph in fn.placeholders.values())),
                    df)
             hit = self._design_cache.get(key)
             if hit is not None:
                 self.stats.design_cache_hits += 1
                 return hit
-        rep = self._design_report_compute(fn, df)
+        rep = self._design_report_compute(fn, df, sig_of)
         if use_cache:
             self._design_cache[key] = rep
         return rep
 
-    def _design_report_compute(self, fn: Function, df: bool = False) -> DesignReport:
+    def _design_report_compute(self, fn: Function, df: bool = False,
+                               sig_of: Optional[Dict[int, Tuple]] = None
+                               ) -> DesignReport:
         groups = _fusion_groups(fn)
         nodes: Dict[str, NodeReport] = {}
         dsp = lut = 0
         for grp in groups:
             for s in grp:
-                r = self.node_report(s, grp)
+                r = self.node_report(s, grp, _sigs=sig_of)
                 nodes[s.name] = r
                 dsp += r.dsp
                 lut += r.lut
@@ -597,6 +656,23 @@ class HlsModel:
             return DataflowReport(False, n, sequential, sequential,
                                   reason=info.reason)
         lat = [max(nodes[s.name].latency for s in grp) for grp in info.tasks]
+        # the relaxation below is a pure function of the task latencies, the
+        # producer/consumer IIs, and the (memoized) channel structure — memo
+        # it on the TaskGraphInfo object itself, so its lifetime can never
+        # outlive the graph analysis it belongs to
+        memo = None
+        if self._caching():
+            mkey = (tuple(lat),
+                    tuple((nodes[ch.producer].ii, nodes[ch.consumer].ii)
+                          for ch in info.channels),
+                    sequential)
+            memo = getattr(info, "_sched_memo", None)
+            if memo is None:
+                memo = {}
+                info._sched_memo = memo
+            hit = memo.get(mkey)
+            if hit is not None:
+                return hit
         fillpath = [0] * n
         finish = [0] * n
         by_dst: Dict[int, List] = {}
@@ -622,13 +698,19 @@ class HlsModel:
         channels = tuple((ch.array, ch.producer, ch.consumer, ch.kind,
                           ch.depth) for ch in info.channels)
         if region >= sequential:
-            return DataflowReport(False, n, sequential, region,
-                                  channels=channels,
-                                  reason="no latency gain over sequential")
-        bits = sum(ch.bits for ch in info.channels)
-        chan_lut = CHANNEL_LUT * len(info.channels)
-        return DataflowReport(True, n, sequential, region, bits, chan_lut,
-                              channels)
+            rep = DataflowReport(False, n, sequential, region,
+                                 channels=channels,
+                                 reason="no latency gain over sequential")
+        else:
+            bits = sum(ch.bits for ch in info.channels)
+            chan_lut = CHANNEL_LUT * len(info.channels)
+            rep = DataflowReport(True, n, sequential, region, bits, chan_lut,
+                                 channels)
+        if memo is not None:
+            if len(memo) >= 4096:
+                memo.clear()
+            memo[mkey] = rep
+        return rep
 
 
 # --------------------------------------------------------------------------
@@ -690,6 +772,22 @@ def recurrence_ii_arith(dims: Sequence[str], p: int, trips: Dict[str, int],
     return ii_rec
 
 
+def _ii_threads() -> int:
+    """``POM_II_THREADS``: thread count for sharding a rung's closed-form
+    II sweep (:meth:`ClosedFormII.prefetch`).  The sweep is pure integer
+    arithmetic on immutable facts — no pickling, no fork — so sharding it
+    across threads is safe by construction; on GIL-serialized builds the
+    speedup is modest, which is why the default is 1 (compute on demand,
+    single thread)."""
+    try:
+        return max(1, int(os.environ.get("POM_II_THREADS", "1") or 1))
+    except ValueError:
+        return 1
+
+
+_II_MISS = object()
+
+
 @dataclass
 class ClosedFormII:
     """Closed-form ``ii(unroll_vector)`` for one ladder rung.
@@ -703,13 +801,52 @@ class ClosedFormII:
     model runs.  Returns None for candidates the ladder would reject
     (factor exceeds a trip count) and falls back to None when a class
     resists exact transfer.
+
+    ``ii`` is memoized per rung (``_memo``); ``prefetch`` fills the memo
+    for a whole candidate set at once, sharded across ``POM_II_THREADS``
+    threads when that is > 1.  ``_compute_ii`` touches only the frozen
+    rung facts and thread-local state (``DependenceInfo.transform`` is
+    pure), so concurrent computes are data-race-free; the memo itself is
+    only written from the calling thread.
     """
     dims: List[str]
     bounds: Dict[str, Tuple[int, int]]
     deps: List
     link: int
+    _memo: Dict[Tuple[int, ...], Optional[int]] = field(
+        default_factory=dict, repr=False, compare=False)
 
     def ii(self, factors: Tuple[int, ...]) -> Optional[int]:
+        key = tuple(factors)
+        hit = self._memo.get(key, _II_MISS)
+        if hit is not _II_MISS:
+            return hit
+        val = self._compute_ii(key)
+        self._memo[key] = val
+        return val
+
+    def prefetch(self, factor_lists, threads: Optional[int] = None) -> None:
+        """Fill the memo for ``factor_lists`` (a rung's candidate set).
+
+        With ``threads`` (default ``POM_II_THREADS``) > 1 and at least
+        two uncomputed vectors, the computes run on a thread pool —
+        values and every counter are identical either way (the sweep
+        charges nothing; ``prime_recurrence_ii`` does the accounting when
+        a candidate consumes a value).  With one thread this is a no-op:
+        values are computed on demand by ``ii``, preserving the serial
+        engine's work order exactly."""
+        n = _ii_threads() if threads is None else max(1, int(threads))
+        todo = [f for f in dict.fromkeys(tuple(f) for f in factor_lists)
+                if f not in self._memo]
+        if n <= 1 or len(todo) < 2:
+            return
+        from concurrent.futures import ThreadPoolExecutor
+        with ThreadPoolExecutor(max_workers=min(n, len(todo))) as ex:
+            vals = list(ex.map(self._compute_ii, todo))
+        for f, v in zip(todo, vals):
+            self._memo[f] = v
+
+    def _compute_ii(self, factors: Tuple[int, ...]) -> Optional[int]:
         from .affine import BasisMap
         from .ir import _apply_trip_op
         dims = list(self.dims)

@@ -68,6 +68,7 @@ from . import transforms as T
 from .search import (ParetoArchive, _restore, _restore_fn, _snapshot,
                      _snapshot_fn, apply_parallel as _apply_parallel,
                      run_stage2, unroll_candidates as _unroll_candidates)
+from . import caching
 
 
 # --------------------------------------------------------------------------
@@ -214,7 +215,6 @@ def _partition_contribution(stmt: Statement) -> List[Tuple]:
     ``(array, dim_no, capped_factor)`` triples — a pure function of
     (iter_subst, unrolls), memoized on that signature so a candidate
     evaluation only recomputes the mutated statement's contribution."""
-    from . import caching
     key = None
     if caching.ENABLED:
         key = (stmt.subst_signature(), tuple(sorted(stmt.unrolls.items())))
@@ -237,12 +237,44 @@ def _partition_contribution(stmt: Statement) -> List[Tuple]:
     return contrib
 
 
+# Whole-function partition-state memo: the derived partition maps are a
+# pure function of every statement's (composed accesses, unrolls), so one
+# rebuild serves every later revisit of the same design state — the search
+# restores/reapplies the same few dozen schedule states hundreds of times
+# per run.  Values are stored immutably (items + ready signature) and
+# fresh dicts are installed on a hit.  Cleared by ``caching.clear_all``.
+_REFRESH_CACHE: Dict[Tuple, Tuple] = {}
+
+
 def refresh_partitions(fn: Function) -> None:
     """Derive array partitioning from every statement's current unrolls
     (paper Fig. 6: cyclic partition factors match the unroll factors touching
     each array dimension).  Partitions are pure derived state during DSE —
-    recombined from per-statement memoized contributions on every call —
-    so backtracking stays consistent across statements sharing arrays."""
+    recombined from per-statement memoized contributions (or restored from
+    the whole-function memo) on every call — so backtracking stays
+    consistent across statements sharing arrays."""
+    if not caching.ENABLED:
+        _refresh_partitions_compute(fn)
+        return
+    key = tuple((s.uid, s.subst_signature(), tuple(sorted(s.unrolls.items())))
+                for s in fn.statements if s.unrolls)
+    hit = _REFRESH_CACHE.get(key)
+    if hit is not None:
+        for ph, (items, psig) in zip(fn.placeholders.values(), hit):
+            if ph._psig == psig:      # already in this exact state
+                continue
+            ph.partitions = dict(items)
+            ph._psig = psig
+        return
+    _refresh_partitions_compute(fn)
+    if len(_REFRESH_CACHE) >= 8192:
+        _REFRESH_CACHE.clear()
+    _REFRESH_CACHE[key] = tuple(
+        (tuple(ph.partitions.items()), ph.part_sig())
+        for ph in fn.placeholders.values())
+
+
+def _refresh_partitions_compute(fn: Function) -> None:
     for ph in fn.placeholders.values():
         ph.partitions = {}
     for stmt in fn.statements:

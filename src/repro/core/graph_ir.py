@@ -29,6 +29,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .ir import (BinOp, Call, Const, Expr, Function, IterVal, Load, Statement,
                  walk_expr)
+from . import caching
 
 
 class GraphError(Exception):
@@ -405,9 +406,26 @@ class TaskGraphInfo:
         return "\n".join(lines)
 
 
+# Fusion grouping depends only on registration order and the `after`
+# placements — both untouched by the loop transforms DSE sweeps — so one
+# derivation serves every candidate design of a run.  Cleared by
+# ``caching.clear_all``.
+_FUSION_CACHE: Dict[Tuple, List[List[Statement]]] = {}
+
+
 def fusion_tasks(fn: Function) -> List[List[Statement]]:
     """Statements grouped into tasks = fusion groups in program order (the
     same grouping the AST builder opens one top-level nest per)."""
+    from . import caching
+    key = None
+    if caching.ENABLED:
+        key = tuple((s.uid,
+                     None if s.after_spec is None
+                     else (s.after_spec[0].uid, s.after_spec[1]))
+                    for s in fn.statements)
+        hit = _FUSION_CACHE.get(key)
+        if hit is not None:
+            return hit
     from .astbuild import _program_order, _share_with_prev
     order = _program_order(fn)
     share = _share_with_prev(order)
@@ -417,6 +435,10 @@ def fusion_tasks(fn: Function) -> List[List[Statement]]:
             tasks[-1].append(s)
         else:
             tasks.append([s])
+    if key is not None:
+        if len(_FUSION_CACHE) >= 1024:
+            _FUSION_CACHE.clear()
+        _FUSION_CACHE[key] = tasks
     return tasks
 
 
@@ -498,8 +520,37 @@ def _array_bits(fn: Function, array: str) -> float:
     return float(n * ph.dtype.bits)
 
 
+# Per-edge classification memo: an edge's kind/depth/bits depend only on
+# the writer's and readers' (uid, domain, composed accesses) plus the
+# array name and fan-out flag — uid pins the owning function, and the
+# placeholder facts read (dtype bits, shape) are immutable.  A candidate
+# design changes one statement's basis; every channel not touching it
+# re-classifies from here.  Cleared by ``caching.clear_all``.
+_EDGE_CACHE: Dict[Tuple, Tuple[str, int, int, int, float]] = {}
+
+
 def _classify_edge(fn: Function, writer: Statement, readers: List[Statement],
                    array: str, multi_consumer: bool) -> Tuple[str, int, int, int, float]:
+    if not caching.ENABLED:
+        return _classify_edge_compute(fn, writer, readers, array,
+                                      multi_consumer)
+    key = (writer.uid, writer.domain.key(), writer.subst_signature(),
+           tuple((r.uid, r.domain.key(), r.subst_signature())
+                 for r in readers),
+           array, multi_consumer)
+    hit = _EDGE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    out = _classify_edge_compute(fn, writer, readers, array, multi_consumer)
+    if len(_EDGE_CACHE) >= 8192:
+        _EDGE_CACHE.clear()
+    _EDGE_CACHE[key] = out
+    return out
+
+
+def _classify_edge_compute(fn: Function, writer: Statement,
+                           readers: List[Statement], array: str,
+                           multi_consumer: bool) -> Tuple[str, int, int, int, float]:
     """(kind, depth, chunks, fill_chunks, bits) of one producer→consumer
     array edge, weakest kind over all reader access functions."""
     w_arr, w_idx = writer.store_access()
@@ -553,6 +604,25 @@ def _classify_edge(fn: Function, writer: Statement, readers: List[Statement],
     return ("seq", 0, 0, 0, 0.0)
 
 
+# Task-graph memo: the graph reads program order (``after_spec``), the
+# composed access functions (``iter_subst``) and the loop bounds
+# (``domain``) — never unroll factors, pipeline markers, or array
+# partitions, which are exactly what stage-2 DSE candidates mutate.  One
+# derivation therefore serves every candidate of a rung (and, absent
+# fusion changes, the whole search).  Keyed per statement on the state
+# that matters; uids are globally unique, so distinct functions never
+# collide.  Cleared by ``caching.clear_all``.
+_TASKGRAPH_CACHE: Dict[Tuple, "TaskGraphInfo"] = {}
+
+
+def _taskgraph_key(fn: Function) -> Tuple:
+    return tuple(
+        (s.uid, s.domain.key(), s.subst_signature(),
+         None if s.after_spec is None
+         else (s.after_spec[0].uid, s.after_spec[1]))
+        for s in fn.statements)
+
+
 def analyze_task_graph(fn: Function) -> TaskGraphInfo:
     """Build the streaming task graph of ``fn``: fusion groups as tasks,
     classified channels on every cross-task producer→consumer array.
@@ -562,10 +632,59 @@ def analyze_task_graph(fn: Function) -> TaskGraphInfo:
     reads an array a *later* task writes (such an anti-dependence would
     race under concurrent task start — HLS rejects the region, and so do
     we).  Ineligible functions keep the sequential schedule; the info
-    still carries the tasks and the reason for the dump."""
+    still carries the tasks and the reason for the dump.
+
+    Memoized on the schedule state the graph actually reads (see
+    ``_TASKGRAPH_CACHE``): DSE re-queries this for every candidate design,
+    and the answer only changes when fusion or the loop basis changes."""
+    if not caching.ENABLED:
+        return _analyze_task_graph_compute(fn)
+    key = _taskgraph_key(fn)
+    hit = _TASKGRAPH_CACHE.get(key)
+    if hit is not None:
+        return hit
+    info = _analyze_task_graph_compute(fn)
+    if len(_TASKGRAPH_CACHE) >= 2048:
+        _TASKGRAPH_CACHE.clear()
+    _TASKGRAPH_CACHE[key] = info
+    return info
+
+
+# Structure-only skeleton memo: fusion groups, the single-writer map and
+# the per-(array, task) reader lists depend on program order and on which
+# arrays each statement touches — both fixed per uid, untouched by every
+# loop transform DSE applies.  One derivation serves every candidate
+# design of a run; only the per-edge classification (which reads the loop
+# basis) re-runs, and that hits ``_EDGE_CACHE`` for every edge whose two
+# endpoints kept their schedules.  Cleared by ``caching.clear_all``.
+_SKELETON_CACHE: Dict[Tuple, tuple] = {}
+
+
+def _taskgraph_skeleton(fn: Function) -> tuple:
+    if not caching.ENABLED:
+        return _taskgraph_skeleton_compute(fn)
+    key = tuple((s.uid,
+                 None if s.after_spec is None
+                 else (s.after_spec[0].uid, s.after_spec[1]))
+                for s in fn.statements)
+    hit = _SKELETON_CACHE.get(key)
+    if hit is not None:
+        return hit
+    skel = _taskgraph_skeleton_compute(fn)
+    if len(_SKELETON_CACHE) >= 1024:
+        _SKELETON_CACHE.clear()
+    _SKELETON_CACHE[key] = skel
+    return skel
+
+
+def _taskgraph_skeleton_compute(fn: Function) -> tuple:
+    """(tasks, edges, fail_reason): ``edges`` is the classified-channel
+    worklist ``(array, writer, readers, writer_task, reader_task, multi)``
+    in deterministic order; ``fail_reason`` is the eligibility failure or
+    None."""
     tasks = fusion_tasks(fn)
     if len(tasks) < 2:
-        return TaskGraphInfo(tasks, [], False, "single task")
+        return (tasks, (), "single task")
     writer_of: Dict[str, int] = {}
     writer_stmt: Dict[str, Statement] = {}
     for t, grp in enumerate(tasks):
@@ -573,9 +692,8 @@ def analyze_task_graph(fn: Function) -> TaskGraphInfo:
             arr, _ = s.store_access()
             prev = writer_of.get(arr.name)
             if prev is not None and prev != t:
-                return TaskGraphInfo(
-                    tasks, [], False,
-                    f"array {arr.name} written by tasks {prev} and {t}")
+                return (tasks, (),
+                        f"array {arr.name} written by tasks {prev} and {t}")
             writer_of[arr.name] = t
             writer_stmt[arr.name] = s
     readers_of: Dict[Tuple[str, int], List[Statement]] = {}
@@ -587,22 +705,30 @@ def analyze_task_graph(fn: Function) -> TaskGraphInfo:
                 if w is None or w == t:
                     continue
                 if w > t:
-                    return TaskGraphInfo(
-                        tasks, [], False,
-                        f"task {t} reads {a.name} before task {w} writes it")
+                    return (tasks, (),
+                            f"task {t} reads {a.name} before task {w} writes it")
                 lst = readers_of.setdefault((a.name, t), [])
                 if s not in lst:
                     lst.append(s)
                 consumer_tasks.setdefault(a.name, set()).add(t)
+    edges = tuple(
+        (array, writer_stmt[array], tuple(readers), writer_of[array], t,
+         len(consumer_tasks[array]) > 1)
+        for (array, t), readers in sorted(
+            readers_of.items(), key=lambda kv: (kv[0][1], kv[0][0])))
+    return (tasks, edges, None)
+
+
+def _analyze_task_graph_compute(fn: Function) -> TaskGraphInfo:
+    tasks, edges, reason = _taskgraph_skeleton(fn)
+    if reason is not None:
+        return TaskGraphInfo(tasks, [], False, reason)
     channels: List[ChannelSpec] = []
-    for (array, t), readers in sorted(
-            readers_of.items(), key=lambda kv: (kv[0][1], kv[0][0])):
-        w = writer_stmt[array]
-        multi = len(consumer_tasks[array]) > 1
+    for array, w, readers, tw, t, multi in edges:
         kind, depth, chunks, fill, bits = _classify_edge(
             fn, w, readers, array, multi)
         channels.append(ChannelSpec(
-            array, w.name, readers[0].name, writer_of[array], t,
+            array, w.name, readers[0].name, tw, t,
             kind, depth, chunks, fill, bits))
     return TaskGraphInfo(tasks, channels, True)
 
@@ -624,7 +750,6 @@ def share_structural_memos(g: GraphIR, warm: Sequence[str] = ()) -> Dict[Tuple, 
         classes.setdefault(op_structural_key(o.stmt), []).append(o)
     g.cse_classes = {k: [o.name for o in ops] for k, ops in classes.items()}
     if warm:
-        from . import caching
         if caching.ENABLED:
             from .transforms import self_dependences
             for ops in classes.values():

@@ -11,6 +11,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .affine import BasicSet, Constraint, LinExpr, ge, le
+from . import caching
 
 
 # --------------------------------------------------------------------------
@@ -146,7 +147,28 @@ class Placeholder:
         self.shape: Tuple[int, ...] = tuple(int(s) for s in shape)
         self.dtype = dtype
         # HLS array-partition annotation: dim -> (factor, kind)
-        self.partitions: Dict[int, Tuple[int, str]] = {}
+        self._partitions: Dict[int, Tuple[int, str]] = {}
+        # memoized ``part_sig``; rebinding ``partitions`` (the property
+        # setter) or the in-place mutators below reset it
+        self._psig: Optional[Tuple] = None
+
+    @property
+    def partitions(self) -> Dict[int, Tuple[int, str]]:
+        return self._partitions
+
+    @partitions.setter
+    def partitions(self, value: Dict[int, Tuple[int, str]]) -> None:
+        self._partitions = value
+        self._psig = None
+
+    def part_sig(self) -> Tuple:
+        """Sorted structural signature of the partition annotation (what
+        every cost-model / search cache key embeds)."""
+        sig = self._psig
+        if sig is None:
+            sig = tuple(sorted(self.partitions.items()))
+            self._psig = sig
+        return sig
 
     def __call__(self, *idx) -> Load:
         return Load(self, [to_lin(i) for i in idx])
@@ -165,6 +187,7 @@ class Placeholder:
         for dim, f in items:
             if f and f > 1:
                 self.partitions[int(dim)] = (int(f), kind)
+        self._psig = None
         return self
 
     def __repr__(self):
@@ -241,12 +264,23 @@ class Statement:
         self._basis_trace: Dict[Tuple, Tuple] = {}
         self._xfer_keys: Dict[str, set] = {
             "selfdep": set(), "trip": set(), "legal": set()}
+        # lazily rebuilt by ``subst_signature`` / ``schedule_signature``;
+        # every site that mutates a signature component — ``iter_subst``
+        # (the transform primitives, ``search._restore``), the domain,
+        # unrolls, the pipeline marker, or ``after_spec`` — resets the
+        # corresponding slot to None
+        self._subst_sig: Optional[Tuple] = None
 
     # -- schedule signatures ----------------------------------------------------
     def subst_signature(self) -> Tuple:
         """Signature of the change-of-basis map (with the domain, determines
         dependences, legality, and composed access functions)."""
-        return tuple(sorted((k, v.key()) for k, v in self.iter_subst.items()))
+        sig = self._subst_sig
+        if sig is None:
+            sig = tuple(sorted(
+                (k, v.key()) for k, v in self.iter_subst.items()))
+            self._subst_sig = sig
+        return sig
 
     def dep_signature(self) -> Tuple:
         return (self.uid, self.domain.key(), self.subst_signature())
@@ -276,7 +310,6 @@ class Statement:
         per-dim bound extraction holds outer dims symbolic, so a (tile,
         intra) pair's constant bounds survive only while the tile dim
         stays outside the intra dim."""
-        from . import caching
         if not caching.analytic_on():
             return
         new_sig = self.xfer_sig()
@@ -330,7 +363,13 @@ class Statement:
         return None
 
     def schedule_signature(self) -> Tuple:
-        """Cheap structural signature of the full schedule state."""
+        """Cheap structural signature of the full schedule state.
+
+        Built live on every call (so raw writes to ``unrolls`` /
+        ``pipeline_*`` / ``after_spec`` can never observe a stale value);
+        the two expensive components — ``domain.key()`` and
+        ``subst_signature()`` — are memoized on their own objects.
+        """
         after = (None if self.after_spec is None
                  else (self.after_spec[0].uid, self.after_spec[1]))
         return (self.uid, self.domain.key(), self.subst_signature(),
@@ -348,7 +387,6 @@ class Statement:
     def _composed_accesses(self) -> Tuple:
         """(store_access, load_accesses) composed through iter_subst, memoized
         on the substitution signature; LinExprs are interned."""
-        from . import caching
         if not caching.ENABLED:
             caching.COUNTS["access_evals"] += 1
             return ((self.store.array,
@@ -393,7 +431,6 @@ class Statement:
         a DSE hot path, re-queried for every candidate schedule); when the
         domain was produced by a recorded basis step, the bounds are
         *transferred* from the parent state instead of re-projected."""
-        from . import caching
         if not caching.ENABLED:
             caching.COUNTS["trip_evals"] += 1
             return self._dim_bounds_compute()
@@ -439,7 +476,6 @@ class Statement:
         return out
 
     def _bounds_via_transfer(self) -> Optional[Dict[str, Tuple[int, int]]]:
-        from . import caching
         if not caching.analytic_on():
             return None
         walk = self._walk_trace(lambda sig, _orig: sig[0] in self._trip_cache)

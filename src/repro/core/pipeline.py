@@ -341,6 +341,11 @@ def stage2_pass(spec: Optional[str] = None) -> Stage2DSE:
     cls = STAGE2_PASSES[name]
     if cls is Stage2DSE:
         return Stage2DSE(spec)
+    if arg and not arg.lstrip("-").isdigit():
+        # rich parameterization ("beam:scalar", "beam:8:parallel", ...):
+        # the named subclasses only spell the single-int shorthand, so
+        # carry the validated spec through the generic pass
+        return Stage2DSE(spec)
     return cls(int(arg)) if arg else cls()
 
 
@@ -676,6 +681,11 @@ class CompileService:
         desc = strat.describe()
         if desc.split(":")[0] == "parallel":
             desc = "greedy"
+        elif "parallel" in desc.split(":"):
+            # a pooled beam ("beam:8:parallel") produces bit-identical
+            # designs to the serial beam — the pool changes wall-clock
+            # only, so it must not change the content address
+            desc = ":".join(t for t in desc.split(":") if t != "parallel")
         resources = merged.get("resources", XC7Z020)
         opts = {"strategy": desc,
                 "max_parallel": merged.get("max_parallel", 256),

@@ -17,7 +17,18 @@ strategy registry:
   the other ``k-1`` slots explore runner-up candidates and early-exit
   branches.  Beams share the schedule-signature-keyed report caches of
   the incremental engine (PR 1), so revisiting a design another beam
-  already evaluated is a dictionary hit;
+  already evaluated is a dictionary hit.  Each iteration with several
+  live states runs as a **wave**: all rung preambles first, then one
+  evaluation pass, then per-state decisions — and states whose pending
+  rung is identical (same base design, statement, and target
+  parallelism: sibling branches of one rung always are) share a single
+  evaluation (*dedup-and-credit*), so ``beam:8`` costs far less than 8
+  greedy ladders.  ``beam:k:parallel[:n]`` additionally dispatches each
+  wave's deduplicated candidate union to the warm worker pool below,
+  with per-state schedule snapshots and cache deltas primed per worker
+  and the replay merge generalized per state — selected designs,
+  actions, eval counters, and ``CostStats`` stay bit-identical to the
+  serial beam for any worker count;
 * ``parallel`` — the greedy ladder with the per-rung candidate set
   evaluated concurrently by a **supervised pool of warm worker
   processes** (forked once per search, primed per rung with the parent's
@@ -44,8 +55,9 @@ dominated-point pruning, so a DSE run exports the latency/resource
 
 Strategies are selected by ``auto_dse(strategy="beam", beam_width=4)``,
 by the ``POM_DSE_STRATEGY`` environment variable (``greedy`` /
-``beam[:k]`` / ``parallel[:n]``), or by registering the matching stage-2
-pass from ``pipeline.STAGE2_PASSES`` directly.
+``beam[:k][:latency|scalar][:parallel[:n]]`` / ``parallel[:n]``), or by
+registering the matching stage-2 pass from ``pipeline.STAGE2_PASSES``
+directly.
 """
 from __future__ import annotations
 
@@ -71,13 +83,17 @@ from . import transforms as T
 # schedule snapshot / restore (search backtracking)
 # --------------------------------------------------------------------------
 def _snapshot(stmt: Statement):
-    return (stmt.domain.copy(), dict(stmt.iter_subst), dict(stmt.unrolls),
+    # the domain object is shared, not copied: BasicSet is immutable by
+    # convention (every transform builds a fresh set), and sharing keeps
+    # its memoized structural key alive across restore cycles
+    return (stmt.domain, dict(stmt.iter_subst), dict(stmt.unrolls),
             stmt.pipeline_at, stmt.pipeline_ii, stmt.after_spec)
 
 
 def _restore(stmt: Statement, snap) -> None:
     stmt.domain, subst, unrolls, pat, pii, after = snap
     stmt.iter_subst = dict(subst)
+    stmt._subst_sig = None          # rebound in place: drop the memoized sig
     stmt.unrolls = dict(unrolls)
     stmt.pipeline_at, stmt.pipeline_ii, stmt.after_spec = pat, pii, after
 
@@ -159,6 +175,70 @@ def apply_parallel(stmt: Statement, factors: Tuple[int, ...]) -> bool:
     return True
 
 
+# --------------------------------------------------------------------------
+# transformed-node memo (cross-rung / cross-state candidate applies)
+# --------------------------------------------------------------------------
+# (uid, base schedule sig, factors) -> node snapshot with the candidate
+# applied, or None when ``apply_parallel`` rejects the factors.  A rung
+# always restores its node to the state-independent clean base recorded at
+# first visit before splitting, so the transformed schedule is a pure
+# function of this key: distinct beam states re-proposing the same
+# (statement, P) rung — the common case on multi-statement workloads —
+# restore the memoized schedule instead of re-running the split/permute/
+# legality machinery.  Worker processes grow their own (forked) copy from
+# the candidates they evaluate — always a subset of what a serial run has
+# seen at the same point, which keeps the replay-merge premise intact.
+# Cleared by ``caching.clear_all``.
+_APPLY_CACHE: Dict[Tuple, Optional[tuple]] = {}
+_APPLY_MISS = object()
+
+
+def _snap_sched_sig(uid: int, snap) -> Tuple:
+    """``schedule_signature`` of a node snapshot, without restoring it
+    (``after_spec`` is irrelevant to the node-local transform)."""
+    domain, subst, unrolls, pat, pii, _after = snap
+    return (uid, domain.key(),
+            tuple(sorted((k, v.key()) for k, v in subst.items())),
+            tuple(sorted(unrolls.items())), pat, pii)
+
+
+def _apply_candidate(fn: Function, model: HlsModel, s: Statement,
+                     base_snap, base_key: Optional[Tuple], sweep,
+                     factors: Tuple[int, ...]) -> bool:
+    """Restore ``s`` to its rung base and apply ``factors`` — through the
+    transformed-node memo when enabled.  On a memo hit the split/permute
+    work (and the redundant base restore) is skipped; the restored
+    schedule is bit-identical to a fresh apply, and the primed recurrence
+    II plus the partition refresh run either way."""
+    if base_key is None or not caching.ENABLED:
+        _restore_node(fn, s, base_snap)
+        ok = apply_parallel(s, tuple(factors))
+        if ok:
+            model.prime_recurrence_ii(s, sweep, tuple(factors))
+            _refresh_partitions(fn)
+        return ok
+    key = (s.uid, base_key, tuple(factors))
+    hit = _APPLY_CACHE.get(key, _APPLY_MISS)
+    if hit is not _APPLY_MISS:
+        if hit is None:
+            return False
+        _restore(s, hit)
+        model.prime_recurrence_ii(s, sweep, tuple(factors))
+        _refresh_partitions(fn)
+        return True
+    _restore_node(fn, s, base_snap)
+    ok = apply_parallel(s, tuple(factors))
+    if len(_APPLY_CACHE) >= 8192:
+        _APPLY_CACHE.clear()
+    if not ok:
+        _APPLY_CACHE[key] = None
+        return False
+    model.prime_recurrence_ii(s, sweep, tuple(factors))
+    _refresh_partitions(fn)
+    _APPLY_CACHE[key] = _snapshot(s)
+    return True
+
+
 def design_signature(fn: Function) -> Tuple:
     """Structural signature of the whole design (schedules + partitions +
     the effective dataflow toggle); the same shape the cost model keys its
@@ -167,7 +247,7 @@ def design_signature(fn: Function) -> Tuple:
     (same loops, different latency/BRAM point)."""
     from .graph_ir import dataflow_effective
     return (tuple(s.schedule_signature() for s in fn.statements),
-            tuple(sorted((ph.name, tuple(sorted(ph.partitions.items())))
+            tuple(sorted((ph.name, ph.part_sig())
                          for ph in fn.placeholders.values())),
             dataflow_effective(fn))
 
@@ -406,12 +486,11 @@ class SerialEvaluator:
                  uid: int, P: int, sweep=None) -> List[Candidate]:
         out: List[Candidate] = []
         base = st.base_snaps[uid]
+        base_key = _snap_sched_sig(uid, base)
         for factors in unroll_candidates(P):
-            _restore_node(ctx.fn, s, base)
-            if not apply_parallel(s, tuple(factors)):
+            if not _apply_candidate(ctx.fn, ctx.model, s, base, base_key,
+                                    sweep, tuple(factors)):
                 continue
-            ctx.model.prime_recurrence_ii(s, sweep, tuple(factors))
-            _refresh_partitions(ctx.fn)
             rep = ctx.design_report()
             out.append(Candidate(tuple(factors), rep, _snapshot(s)))
         return out
@@ -559,11 +638,9 @@ def _candidate_eval_body(fn: Function, model: HlsModel, s: Statement,
     always a subset of what a serial run would hold at the same point, so
     the merge conversion reproduces serial's counters exactly."""
     cp0 = _checkpoint(fn, model)
-    _restore_node(fn, s, base_snap)
-    ok = apply_parallel(s, tuple(factors))
-    if ok:
-        model.prime_recurrence_ii(s, sweep, factors)
-        _refresh_partitions(fn)
+    ok = _apply_candidate(fn, model, s, base_snap,
+                          _snap_sched_sig(s.uid, base_snap), sweep,
+                          tuple(factors))
     apply_counts, apply_stats, apply_delta = _phase_delta(fn, model, cp0)
     if not ok:
         return _CandidateResult(False, None, None,
@@ -725,6 +802,15 @@ def _ship_fn_snapshot(fn: Function):
             {ph.name: dict(ph.partitions) for ph in fn.placeholders.values()})
 
 
+def _ship_from_snapshot(fn_snap):
+    """Picklable image of a *stored* ``_snapshot_fn`` state (a beam state's
+    ``snap``) — the wave dispatch ships every live state's schedule without
+    restoring any of them on the parent first."""
+    stmts, parts = fn_snap
+    return ({uid: tuple(s6[:5]) for uid, s6 in stmts.items()},
+            {name: dict(p) for name, p in parts.items()})
+
+
 def _apply_shipped_snapshot(fn: Function, shipped) -> None:
     stmts, parts = shipped
     for s in fn.statements:
@@ -779,11 +865,23 @@ def _warm_worker_main(conn, fn: Function, model: HlsModel) -> None:
     injected fault from the parent's ``worker.dispatch`` site — the
     worker SIGKILLs itself, hangs past the deadline, or replies with a
     malformed tuple, exercising each supervision path deterministically.
+
+    Wave mode (parallel beam): ``("wave", delta, states)`` installs the
+    cache delta once and stores, per beam state, the state's full
+    schedule snapshot plus rung header; ``("wcand", sid, idx, factors,
+    poison)`` evaluates one candidate of state ``sid``, switching the
+    worker's live schedule to that state's snapshot on a ``sid`` change.
+    Each state's closed-form sweep is recomputed locally on first touch
+    (cheap integer arithmetic), *outside* the checkpointed eval phases —
+    its cache entries never reach the parent's merge; the parent charges
+    the authoritative sweep at each state's serial position instead.
     """
     import signal
     import time
     signal.signal(signal.SIGINT, signal.SIG_IGN)
     rung = None
+    wave = {}
+    wave_sid = None
     try:
         while True:
             try:
@@ -803,7 +901,38 @@ def _warm_worker_main(conn, fn: Function, model: HlsModel) -> None:
                 s = next(x for x in fn.statements if x.uid == uid)
                 rung = (s, tuple(base5) + (s.after_spec,), sweep)
                 continue
-            _, idx, factors, poison = msg
+            if tag == "wave":
+                _, delta, heads = msg
+                if delta:
+                    _translate_placeholders(fn, delta)
+                    _insert_delta(fn, model, delta)
+                wave = {}
+                for sid, fn_snap, uid, base5, facs in heads:
+                    s = next(x for x in fn.statements if x.uid == uid)
+                    # [snap, stmt, base, factors, sweep, sweep_ready]
+                    wave[sid] = [fn_snap, s,
+                                 tuple(base5) + (s.after_spec,), facs,
+                                 None, False]
+                wave_sid = None
+                continue
+            if tag == "wcand":
+                _, sid, idx, factors, poison = msg
+                ent = wave[sid]
+                if wave_sid != sid:
+                    _apply_shipped_snapshot(fn, ent[0])
+                    wave_sid = sid
+                if not ent[5]:
+                    if caching.analytic_on():
+                        s, base = ent[1], ent[2]
+                        _restore_node(fn, s, base)
+                        sw = model.closed_form_ii(s)
+                        if sw is not None:
+                            sw.prefetch(ent[3])
+                        ent[4] = sw
+                    ent[5] = True
+                rung = (ent[1], ent[2], ent[4])
+            else:
+                _, idx, factors, poison = msg
             if poison == "crash":
                 os.kill(os.getpid(), signal.SIGKILL)
             if poison == "hang":
@@ -877,6 +1006,7 @@ class PoolEvaluator:
         self._pool_fn: Optional[Function] = None
         self._pool_model: Optional[HlsModel] = None
         self._sync_keys: Optional[Dict] = None
+        self._wave_header: Optional[bytes] = None
         self._degraded = False
         self._consec_failures = 0
 
@@ -988,6 +1118,20 @@ class PoolEvaluator:
             self._kill(w)
             self._degrade(ctx, "respawn_sync_failed")
 
+    def _broadcast(self, ctx: SearchContext, header: bytes,
+                   respawn) -> bool:
+        """Send a pickled sync header to every worker, replacing workers
+        whose pipe is already dead.  Returns False once degraded."""
+        for w in list(self._procs):
+            if not self._send_bytes(w, header):
+                self._kill(w)
+                self._consec_failures += 1
+                if self._consec_failures >= self.max_failures:
+                    self._degrade(ctx, "sync_send_failed")
+                    return False
+                respawn()
+        return not self._degraded
+
     def _pooled_results(self, ctx: SearchContext, s: Statement, uid: int,
                         base, sweep, factor_list: List[Tuple[int, ...]]
                         ) -> List[Optional[_CandidateResult]]:
@@ -995,12 +1139,9 @@ class PoolEvaluator:
         supervision; ``None`` slots fall back to in-order serial
         evaluation during the merge."""
         import pickle
-        import time
-        from collections import deque
         n = len(factor_list)
-        results: List[Optional[_CandidateResult]] = [None] * n
         if not self._ensure_pool(ctx, n):
-            return results
+            return [None] * n
         # per-rung sync: the parent's schedule state plus its cache delta
         # since the last sync makes every worker's cache key-set equal the
         # parent's rung-start key-set (fresh-fork semantics, no fork)
@@ -1008,14 +1149,23 @@ class PoolEvaluator:
         self._sync_keys = _cache_key_snapshot(ctx.fn, ctx.model)
         header = pickle.dumps(
             ("rung", _ship_fn_snapshot(ctx.fn), uid, base[:5], sweep, delta))
-        for w in list(self._procs):
-            if not self._send_bytes(w, header):
-                self._kill(w)
-                self._consec_failures += 1
-                if self._consec_failures >= self.max_failures:
-                    self._degrade(ctx, "sync_send_failed")
-                    return results
-                self._respawn(ctx, uid, base, sweep)
+        respawn = lambda: self._respawn(ctx, uid, base, sweep)
+        if not self._broadcast(ctx, header, respawn):
+            return [None] * n
+        msgs = [("cand", i, factor_list[i]) for i in range(n)]
+        return self._collect(ctx, msgs, respawn)
+
+    def _collect(self, ctx: SearchContext, msgs: List[tuple], respawn
+                 ) -> List[Optional[_CandidateResult]]:
+        """Supervised dispatch of prepared candidate messages across the
+        warm pool.  ``msgs[i]`` is the worker message for slot ``i``
+        *without* the trailing poison field; its index field must equal
+        ``i`` (workers echo it back in the reply).  ``respawn()``
+        replaces a killed worker, re-sending whatever header it needs."""
+        import time
+        from collections import deque
+        n = len(msgs)
+        results: List[Optional[_CandidateResult]] = [None] * n
         pending = deque(range(n))
         attempts = [0] * n
         # in-flight candidates per worker, in dispatch order, as
@@ -1041,7 +1191,7 @@ class PoolEvaluator:
                 for i in reversed(retry):
                     pending.appendleft(i)
             # exhausted candidates keep results[i] = None -> serial fill-in
-            self._respawn(ctx, uid, base, sweep)
+            respawn()
 
         while (pending or any(flight.values())) and not self._degraded:
             for w in list(self._procs):
@@ -1052,7 +1202,7 @@ class PoolEvaluator:
                     kind = faultinject.fires("worker.dispatch")
                     poison = kind if kind in ("crash", "hang", "pickle") \
                         else None
-                    if not self._send(w, ("cand", i, factor_list[i], poison)):
+                    if not self._send(w, msgs[i] + (poison,)):
                         q.append((i, 0.0))
                         fail(w, "dispatch_send_failed")
                         break
@@ -1101,21 +1251,18 @@ class PoolEvaluator:
         return results
 
     # -- evaluation ----------------------------------------------------------
-    def evaluate(self, ctx: SearchContext, st: LadderState, s: Statement,
-                 uid: int, P: int, sweep=None) -> List[Candidate]:
-        factor_list = [tuple(f) for f in unroll_candidates(P)]
-        if (self.workers <= 1 or len(factor_list) < self.min_candidates
-                or self._degraded or not self._fork_available()):
-            return self._serial.evaluate(ctx, st, s, uid, P, sweep)
-        base = st.base_snaps[uid]
-        results = self._pooled_results(ctx, s, uid, base, sweep, factor_list)
+    def _merge_results(self, ctx: SearchContext, s: Statement, base, sweep,
+                       factor_list: List[Tuple[int, ...]],
+                       results: List[Optional[_CandidateResult]]
+                       ) -> List[Candidate]:
+        """Merge pooled results **in candidate order**.  A ``None`` slot
+        (failed / degraded candidate) is evaluated serially in place — the
+        merges before it have brought the parent's caches to exactly a
+        serial run's state there, so counters stay exact either way."""
         out: List[Candidate] = []
         for i, factors in enumerate(factor_list):
             res = results[i]
             if res is None:
-                # failed / degraded candidate: evaluate serially, in
-                # candidate order — the merges above have brought the
-                # parent's caches to exactly a serial run's state here
                 _restore_node(ctx.fn, s, base)
                 if not apply_parallel(s, factors):
                     continue
@@ -1128,6 +1275,10 @@ class PoolEvaluator:
             if not res.ok:
                 continue
             out.append(Candidate(factors, res.report, res.snap[:5] + (base[5],)))
+        return out
+
+    def _record_archive(self, ctx: SearchContext, s: Statement,
+                        out: List[Candidate]) -> None:
         if ctx.archive is not None:
             # archive points carry the *candidate's* design signature, so
             # the candidate schedule must be live on ctx.fn when recorded
@@ -1136,6 +1287,99 @@ class PoolEvaluator:
             for c in out:
                 _restore_node(ctx.fn, s, c.snap)
                 ctx.record(c.report)
+
+    def evaluate(self, ctx: SearchContext, st: LadderState, s: Statement,
+                 uid: int, P: int, sweep=None) -> List[Candidate]:
+        factor_list = [tuple(f) for f in unroll_candidates(P)]
+        if (self.workers <= 1 or len(factor_list) < self.min_candidates
+                or self._degraded or not self._fork_available()):
+            return self._serial.evaluate(ctx, st, s, uid, P, sweep)
+        base = st.base_snaps[uid]
+        results = self._pooled_results(ctx, s, uid, base, sweep, factor_list)
+        out = self._merge_results(ctx, s, base, sweep, factor_list, results)
+        self._record_archive(ctx, s, out)
+        return out
+
+    # -- wave evaluation (parallel beam) -------------------------------------
+    def evaluate_wave(self, ctx: SearchContext,
+                      entries: List[Tuple[Any, "_PendingRung"]]
+                      ) -> Dict[int, List[Optional[_CandidateResult]]]:
+        """Dispatch the union of several beam states' rung candidates to
+        the warm pool in one wave.
+
+        ``entries`` holds ``(state_snap, pend)`` pairs, one per *distinct*
+        pending rung (the beam dedups identical rung keys before
+        dispatch).  Returns ``{entry_index: [Optional[_CandidateResult]]}``
+        with one slot per candidate, or ``{}`` when the whole wave falls
+        back to serial evaluation (too few candidates in total, no fork,
+        ``workers <= 1``, degraded) — the beam then evaluates each rung
+        serially in state order, which is the counter-reference path.
+
+        Workers get one ``("wave", delta, states)`` header carrying the
+        parent's cache delta since the last sync plus, per state, the
+        state's full schedule snapshot and rung header; candidates are
+        then ``("wcand", sid, idx, factors)`` messages.  The parent
+        merges results in **state order, candidate order** — never
+        completion order — via :meth:`merge_wave_rung`, so counters and
+        designs replay a serial beam exactly."""
+        import pickle
+        total = sum(len(p.factors) for _, p in entries)
+        if (self.workers <= 1 or self._degraded or not entries
+                or not self._fork_available()
+                or total < self.min_candidates):
+            return {}
+        if not self._ensure_pool(ctx, total):
+            return {}
+        delta = _cache_delta(ctx.fn, ctx.model, self._sync_keys)
+        self._sync_keys = _cache_key_snapshot(ctx.fn, ctx.model)
+        heads = [(sid, _ship_from_snapshot(snap), p.uid, p.base[:5],
+                  list(p.factors))
+                 for sid, (snap, p) in enumerate(entries)]
+        header = pickle.dumps(("wave", delta, heads))
+        # a worker forked mid-wave inherits the parent's caches exactly as
+        # they were at the sync above (results merge only after
+        # collection), but the parent's *live* schedule is whatever state
+        # it keyed last — the per-state snapshots in the header are what
+        # put every wcand on the right beam state, so the respawn header
+        # only drops the (already inherited) delta
+        self._wave_header = pickle.dumps(("wave", {}, heads))
+        respawn = lambda: self._respawn_wave(ctx)
+        if not self._broadcast(ctx, header, respawn):
+            return {}
+        msgs: List[tuple] = []
+        slots: List[Tuple[int, int]] = []
+        for sid, (_, p) in enumerate(entries):
+            for j, factors in enumerate(p.factors):
+                msgs.append(("wcand", sid, len(msgs), factors))
+                slots.append((sid, j))
+        results = self._collect(ctx, msgs, respawn)
+        out = {sid: [None] * len(p.factors)
+               for sid, (_, p) in enumerate(entries)}
+        for (sid, j), r in zip(slots, results):
+            out[sid][j] = r
+        return out
+
+    def _respawn_wave(self, ctx: SearchContext) -> None:
+        """Replace a killed worker mid-wave (see ``_respawn``)."""
+        try:
+            w = self._spawn(ctx)
+        except OSError as e:
+            self._degrade(ctx, f"respawn_failed:{type(e).__name__}")
+            return
+        if not self._send_bytes(w, self._wave_header):
+            self._kill(w)
+            self._degrade(ctx, "respawn_sync_failed")
+
+    def merge_wave_rung(self, ctx: SearchContext, s: Statement,
+                        pend: "_PendingRung", sweep,
+                        results: List[Optional[_CandidateResult]]
+                        ) -> List[Candidate]:
+        """Merge one state's slice of a wave — the wave twin of
+        ``evaluate``'s tail: candidate-order replay merge, serial fill-in
+        for missing slots, archive recording."""
+        out = self._merge_results(ctx, s, pend.base, sweep,
+                                  pend.factors, results)
+        self._record_archive(ctx, s, out)
         return out
 
 
@@ -1145,16 +1389,36 @@ class PoolEvaluator:
 _GUARD_MAX = 64
 
 
-def _rung(ctx: SearchContext, st: LadderState, evaluator) -> bool:
-    """Advance ``st`` by one rung of the bottleneck ladder (the loop body of
-    the pre-subsystem ``stage2``).  Returns False when the ladder is done."""
+@dataclass
+class _PendingRung:
+    """Rung state carried between ``_rung_begin`` and ``_rung_finish``.
+
+    The phase split exists for the wave-parallel beam: a wave runs every
+    live state's ``_rung_begin`` first, dispatches the union of all
+    pending rungs' candidates to the warm pool at once, then finishes
+    each state in state order."""
+    uid: int
+    P: int
+    prev: tuple                       # node snapshot at rung start
+    base: tuple                       # st.base_snaps[uid]
+    factors: List[Tuple[int, ...]]    # the rung's candidate set
+    key: Optional[Tuple] = None       # cross-state dedup key (waves only)
+
+
+def _rung_begin(ctx: SearchContext, st: LadderState,
+                want_key: bool = False) -> Tuple[str, Optional[_PendingRung]]:
+    """Everything a rung does before candidate evaluation: termination
+    checks, bottleneck selection, per-node base recording, and the
+    max-parallelism exit.  Returns ``("done", None)`` when the ladder is
+    finished, ``("exit", None)`` when the bottleneck hit its parallelism
+    cap (state mutated, rung over), or ``("eval", pend)``."""
     st.last_rung = None
     if not st.active or st.guard >= _GUARD_MAX:
-        return False
+        return "done", None
     st.guard += 1
     uid = _critical_bottleneck(ctx, st)
     if uid is None:
-        return False
+        return "done", None
     s = ctx.by_uid[uid]
     if uid not in st.base_snaps:
         st.base_snaps[uid] = _snapshot(s)
@@ -1167,22 +1431,55 @@ def _rung(ctx: SearchContext, st: LadderState, evaluator) -> bool:
     if P > min(ctx.max_parallel, band_cap):
         st.active.remove(uid)
         st.actions.append(f"exit {s.name}: max parallelism")
-        return True
+        return "exit", None
     prev = _snapshot(s)
-    # per-rung closed-form ii(unroll_vector): built once from the rung
-    # *base* (the state candidates re-apply their factors to — the live
-    # state diverges from it once a rung has been accepted), it both
-    # pre-warms the base dependence classes/loop bounds every candidate
-    # transfers from and primes each applied candidate's recurrence II
-    # (see the evaluators), so the design report's II lookup is a hit
-    sweep = None
-    if caching.analytic_on():
-        _restore_node(ctx.fn, s, st.base_snaps[uid])
-        sweep = ctx.model.closed_form_ii(s)
+    pend = _PendingRung(uid, P, prev, st.base_snaps[uid],
+                        [tuple(f) for f in unroll_candidates(P)])
+    if want_key:
+        # cross-state dedup key: the whole-design signature with the rung
+        # node put back on its per-node base.  Candidates re-apply their
+        # factors to that base, so two states with equal keys evaluate
+        # literally identical candidate sets — the beam evaluates once and
+        # credits every state that proposed it.  Signature recomputation
+        # and the restore dance are memo-hit-only here (the state was just
+        # live), so the key costs no counter and no analysis work.
+        _restore_node(ctx.fn, s, pend.base)
+        pend.key = (design_signature(ctx.fn), uid, P)
         _restore_node(ctx.fn, s, prev)
-    cands = evaluator.evaluate(ctx, st, s, uid, P, sweep)
-    # pick the candidate that most improves the bottleneck *node* (first
-    # strict improvement wins ties, matching the pre-subsystem ladder)
+    return "eval", pend
+
+
+def _rung_sweep(ctx: SearchContext, st: LadderState, pend: _PendingRung):
+    """Per-rung closed-form ii(unroll_vector): built once from the rung
+    *base* (the state candidates re-apply their factors to — the live
+    state diverges from it once a rung has been accepted), it both
+    pre-warms the base dependence classes/loop bounds every candidate
+    transfers from and primes each applied candidate's recurrence II
+    (see the evaluators), so the design report's II lookup is a hit."""
+    if not caching.analytic_on():
+        return None
+    s = ctx.by_uid[pend.uid]
+    _restore_node(ctx.fn, s, pend.base)
+    sweep = ctx.model.closed_form_ii(s)
+    _restore_node(ctx.fn, s, pend.prev)
+    if sweep is not None:
+        # POM_II_THREADS > 1 shards the rung's pure-integer II sweep
+        # across threads before the evaluators consume it (memoized, so
+        # every later ii() lookup is a dictionary hit)
+        sweep.prefetch(pend.factors)
+    return sweep
+
+
+def _rung_finish(ctx: SearchContext, st: LadderState, pend: _PendingRung,
+                 cands: List[Candidate], sweep) -> bool:
+    """Accept/reject decision of one rung (the tail of the pre-split
+    ``_rung``): pick the candidate that most improves the bottleneck
+    *node* (first strict improvement wins ties, matching the
+    pre-subsystem ladder) and accept when it does so without regressing
+    the design (paper §VI-B: optimize the bottleneck, switch when it no
+    longer is one)."""
+    uid, P, prev = pend.uid, pend.P, pend.prev
+    s = ctx.by_uid[uid]
     best: Optional[Candidate] = None
     for c in cands:
         if not c.report.feasible:
@@ -1190,9 +1487,6 @@ def _rung(ctx: SearchContext, st: LadderState, evaluator) -> bool:
         if best is None or (c.report.nodes[s.name].latency
                             < best.report.nodes[s.name].latency):
             best = c
-    # accept when the bottleneck *node* improves without regressing the
-    # design (paper §VI-B: optimize the bottleneck, switch when it no
-    # longer is one).
     if (best is not None
             and best.report.nodes[s.name].latency < st.report.nodes[s.name].latency
             and best.report.latency <= st.report.latency):
@@ -1211,6 +1505,20 @@ def _rung(ctx: SearchContext, st: LadderState, evaluator) -> bool:
         st.actions.append(f"exit {s.name}: no feasible improvement at P={P}")
         st.last_rung = RungInfo(uid, P, prev, cands, None, sweep)
     return True
+
+
+def _rung(ctx: SearchContext, st: LadderState, evaluator) -> bool:
+    """Advance ``st`` by one rung of the bottleneck ladder (the loop body of
+    the pre-subsystem ``stage2``).  Returns False when the ladder is done."""
+    kind, pend = _rung_begin(ctx, st)
+    if kind == "done":
+        return False
+    if kind == "exit":
+        return True
+    s = ctx.by_uid[pend.uid]
+    sweep = _rung_sweep(ctx, st, pend)
+    cands = evaluator.evaluate(ctx, st, s, pend.uid, pend.P, sweep)
+    return _rung_finish(ctx, st, pend, cands, sweep)
 
 
 # --------------------------------------------------------------------------
@@ -1282,6 +1590,18 @@ class BeamSearch(SearchStrategy):
     an accepted rung and the early-exit branch (stop optimizing the
     bottleneck node, spend resources elsewhere).  With ``width=1`` the
     search degenerates to exactly the greedy trajectory.
+
+    When several states are live, each iteration runs as a **wave**
+    (``_wave``): all states' rung preambles first, then one pooled
+    dispatch of the union of their candidate sets (when the evaluator is
+    a :class:`PoolEvaluator` — ``beam:k:parallel``), then per-state
+    merge/decide in state order.  States whose pending rung re-evaluates
+    an identical ``(base design, statement, P)`` — sibling branches of
+    one rung always do — share a single evaluation (**dedup-and-credit**,
+    tallied in ``wave_stats``), which is what keeps ``beam:8`` within a
+    small factor of ``greedy`` wall-clock even single-core.  Serial and
+    pooled beams run the same wave code minus the dispatch, so results
+    and counters are bit-identical for any worker count.
     """
 
     def __init__(self, width: int = 2, evaluator=None,
@@ -1294,11 +1614,17 @@ class BeamSearch(SearchStrategy):
                              f"got {self.rank!r} (constructor, 'beam:k:rank' "
                              f"spec, or POM_BEAM_RANK)")
         self._resources: Dict = {}
+        # cross-state dedup accounting, reset per run(): rungs/candidates
+        # actually evaluated vs credited from an identical sibling rung
+        self.wave_stats: Dict[str, int] = {}
 
     def describe(self) -> str:
+        out = f"beam:{self.width}"
         if self.rank != "latency":
-            return f"beam:{self.width}:{self.rank}"
-        return f"beam:{self.width}"
+            out += f":{self.rank}"
+        if isinstance(self.evaluator, PoolEvaluator):
+            out += ":parallel"
+        return out
 
     def _rank_value(self, state: LadderState):
         """Beam-retention rank of a successor state.
@@ -1322,31 +1648,21 @@ class BeamSearch(SearchStrategy):
 
     def run(self, ctx: SearchContext) -> LadderState:
         self._resources = ctx.model.resources
+        self.wave_stats = {"rungs_evaluated": 0, "rungs_credited": 0,
+                           "cands_evaluated": 0, "cands_credited": 0}
         st = _init_ladder(ctx)
         st.lineage = True
         st.snap = _snapshot_fn(ctx.fn)
         st.sig = design_signature(ctx.fn)
         live, done = [st], []
+        pool = (self.evaluator
+                if isinstance(self.evaluator, PoolEvaluator) else None)
         try:
             while live:
-                successors: List[Tuple[int, LadderState]] = []
-                seq = 0
-                for cur in live:
-                    _restore_fn(ctx.fn, cur.snap)
-                    pre = cur.clone()
-                    pre.lineage = False
-                    progressed = _rung(ctx, cur, self.evaluator)
-                    if not progressed:
-                        done.append(cur)
-                        continue
-                    cur.snap = _snapshot_fn(ctx.fn)
-                    cur.sig = design_signature(ctx.fn)
-                    successors.append((seq, cur))
-                    seq += 1
-                    if self.width > 1 and cur.last_rung is not None:
-                        for alt in self._branches(ctx, pre, cur.last_rung):
-                            successors.append((seq, alt))
-                            seq += 1
+                if len(live) == 1:
+                    successors = self._step_single(ctx, live[0], done)
+                else:
+                    successors = self._wave(ctx, live, done, pool)
                 live = self._select(successors)
         finally:
             self.evaluator.close()
@@ -1355,6 +1671,116 @@ class BeamSearch(SearchStrategy):
                                   0 if t[1].lineage else 1, t[0]))[1]
         _restore_fn(ctx.fn, best.snap)
         return best
+
+    def _step_single(self, ctx: SearchContext, cur: LadderState,
+                     done: List[LadderState]
+                     ) -> List[Tuple[int, LadderState]]:
+        """One iteration with a single live state: the plain rung path
+        (with ``width=1`` this is exactly the greedy trajectory; a pooled
+        evaluator parallelizes within the rung as in ``parallel:n``)."""
+        successors: List[Tuple[int, LadderState]] = []
+        _restore_fn(ctx.fn, cur.snap)
+        pre = cur.clone()
+        pre.lineage = False
+        progressed = _rung(ctx, cur, self.evaluator)
+        if not progressed:
+            done.append(cur)
+            return successors
+        ws = self.wave_stats
+        if cur.last_rung is not None:
+            ws["rungs_evaluated"] += 1
+            ws["cands_evaluated"] += len(unroll_candidates(cur.last_rung.P))
+        cur.snap = _snapshot_fn(ctx.fn)
+        cur.sig = design_signature(ctx.fn)
+        successors.append((0, cur))
+        seq = 1
+        if self.width > 1 and cur.last_rung is not None:
+            for alt in self._branches(ctx, pre, cur.last_rung):
+                successors.append((seq, alt))
+                seq += 1
+        return successors
+
+    def _wave(self, ctx: SearchContext, live: List[LadderState],
+              done: List[LadderState], pool: Optional[PoolEvaluator]
+              ) -> List[Tuple[int, LadderState]]:
+        """One beam iteration over several live states, in three phases.
+
+        Phase A (state order): run every state's rung preamble
+        (``_rung_begin``) and compute its cross-state dedup key — all
+        memo-hit work, no counters move.  Phase B: dispatch the union of
+        all *distinct* pending rungs' candidates to the warm pool in one
+        wave (pooled evaluator only).  Phase C (state order): for each
+        state, either **credit** a rung an earlier state in this wave
+        already evaluated (identical key ⇒ literally identical candidate
+        sets, reports and snapshots — sibling branches of one rung always
+        collide here), or charge the authoritative sweep and merge that
+        rung's results at its serial position; then decide accept/reject
+        and branch exactly as the single-state path does.  A serial
+        evaluator runs the same phases minus the dispatch, so pooled and
+        serial beams are bit-identical — counters, reports, actions —
+        for any worker count."""
+        successors: List[Tuple[int, LadderState]] = []
+        seq = 0
+        plans = []
+        for cur in live:
+            _restore_fn(ctx.fn, cur.snap)
+            pre = cur.clone()
+            kind, pend = _rung_begin(ctx, cur, want_key=True)
+            plans.append((cur, pre, kind, pend))
+        wave_results: Dict = {}
+        if pool is not None:
+            entries = []
+            keyed = {}
+            for cur, _, kind, pend in plans:
+                if kind == "eval" and pend.key not in keyed:
+                    keyed[pend.key] = len(entries)
+                    entries.append((cur.snap, pend))
+            by_sid = pool.evaluate_wave(ctx, entries)
+            wave_results = {entries[sid][1].key: res
+                            for sid, res in by_sid.items()}
+        ws = self.wave_stats
+        shared: Dict = {}
+        for cur, pre, kind, pend in plans:
+            if kind == "done":
+                done.append(cur)
+                continue
+            if kind == "exit":
+                # schedule untouched: keep snap/sig; no last_rung, so no
+                # branches — same successor the single-state path yields
+                successors.append((seq, cur))
+                seq += 1
+                continue
+            _restore_fn(ctx.fn, cur.snap)
+            s = ctx.by_uid[pend.uid]
+            hit = shared.get(pend.key)
+            if hit is not None:
+                sweep, cands = hit
+                ws["rungs_credited"] += 1
+                ws["cands_credited"] += len(pend.factors)
+            else:
+                sweep = _rung_sweep(ctx, cur, pend)
+                res_list = wave_results.get(pend.key)
+                if res_list is None:
+                    serial = pool._serial if pool is not None \
+                        else self.evaluator
+                    cands = serial.evaluate(ctx, cur, s, pend.uid, pend.P,
+                                            sweep)
+                else:
+                    cands = pool.merge_wave_rung(ctx, s, pend, sweep,
+                                                 res_list)
+                shared[pend.key] = (sweep, cands)
+                ws["rungs_evaluated"] += 1
+                ws["cands_evaluated"] += len(pend.factors)
+            _rung_finish(ctx, cur, pend, cands, sweep)
+            cur.snap = _snapshot_fn(ctx.fn)
+            cur.sig = design_signature(ctx.fn)
+            successors.append((seq, cur))
+            seq += 1
+            if self.width > 1 and cur.last_rung is not None:
+                for alt in self._branches(ctx, pre, cur.last_rung):
+                    successors.append((seq, alt))
+                    seq += 1
+        return successors
 
     # -- branching ----------------------------------------------------------
     def _branches(self, ctx: SearchContext, pre: LadderState,
@@ -1442,8 +1868,15 @@ def resolve_strategy(spec=None, beam_width: Optional[int] = None,
     """Turn a strategy spec into a strategy instance.
 
     ``spec`` may be a :class:`SearchStrategy`, a registered name
-    (``"greedy"``, ``"beam"``, ``"parallel"``), or a parameterized name
-    (``"beam:4"``, ``"parallel:8"``).
+    (``"greedy"``, ``"beam"``, ``"parallel"``), or a parameterized name.
+    The beam grammar is ``beam[:k][:latency|scalar][:parallel[:n]]`` with
+    the segments in any order — ``"beam:4"``, ``"beam:scalar"``,
+    ``"beam:4:scalar"``, ``"beam:8:parallel"``, ``"beam:parallel:4"`` are
+    all valid; a duplicate or unknown segment is a ``ValueError`` naming
+    the original spec.  ``parallel`` puts the beam's rung waves on the
+    warm worker pool (``:n`` workers; default ``os.cpu_count()``) —
+    results are identical for any ``n`` by construction, so the token
+    changes wall-clock only.
 
     Precedence when ``spec`` is None: a strategy-selecting keyword wins
     over the ambient environment — ``beam_width`` selects ``beam``, else
@@ -1451,8 +1884,12 @@ def resolve_strategy(spec=None, beam_width: Optional[int] = None,
     ``POM_DSE_STRATEGY``); otherwise the ``POM_DSE_STRATEGY`` environment
     variable (same syntax) decides; otherwise ``greedy``.  When both a
     spec and a matching keyword are given, the keyword overrides the
-    spec's ``:k`` suffix.  A ``:k`` suffix on a strategy that takes no
-    parameter is an error, reported against the original spec.
+    matching spec segment: ``beam_width`` overrides the beam's ``:k``,
+    and ``workers`` sizes the beam's pool (making a ``beam`` spec pooled
+    if it wasn't — ``auto_dse(strategy="beam:8", workers=4)`` is the
+    kwargs spelling of ``"beam:8:parallel:4"``).  A ``:k`` suffix on a
+    strategy that takes no parameter is an error, reported against the
+    original spec.
     """
     if isinstance(spec, SearchStrategy):
         return spec
@@ -1470,14 +1907,42 @@ def resolve_strategy(spec=None, beam_width: Optional[int] = None,
         raise ValueError(f"unknown DSE strategy {name!r} "
                          f"(registered: {sorted(STRATEGIES)})")
     if name == "beam":
-        rank = None
-        if arg and ":" in arg:
-            arg, rank = arg.split(":", 1)
-        if arg and not arg.lstrip("-").isdigit():
-            # "beam:scalar" — a rank without a width
-            arg, rank = "", arg
-        width = beam_width if beam_width is not None else int(arg or 2)
-        return BeamSearch(width=width, rank=rank)
+        width = rank = pool_workers = None
+        pooled = False
+        toks = [t for t in arg.split(":") if t] if arg else []
+        i = 0
+        while i < len(toks):
+            t = toks[i]
+            if t.lstrip("-").isdigit():
+                if width is not None:
+                    raise ValueError(f"duplicate beam width {t!r} in "
+                                     f"{spec!r}")
+                width = int(t)
+            elif t in ("latency", "scalar"):
+                if rank is not None:
+                    raise ValueError(f"duplicate beam rank {t!r} in "
+                                     f"{spec!r}")
+                rank = t
+            elif t == "parallel":
+                if pooled:
+                    raise ValueError(f"duplicate 'parallel' in {spec!r}")
+                pooled = True
+                if i + 1 < len(toks) and toks[i + 1].lstrip("-").isdigit():
+                    i += 1
+                    pool_workers = int(toks[i])
+            else:
+                raise ValueError(
+                    f"bad beam spec segment {t!r} in {spec!r} (want "
+                    f"beam[:k][:latency|scalar][:parallel[:n]])")
+            i += 1
+        if beam_width is not None:
+            width = beam_width
+        if workers is not None:
+            pooled = True
+            pool_workers = workers
+        evaluator = PoolEvaluator(pool_workers) if pooled else None
+        return BeamSearch(width=2 if width is None else width,
+                          rank=rank, evaluator=evaluator)
     if name == "parallel":
         w = workers if workers is not None else (int(arg) if arg else None)
         return ParallelSearch(workers=w)

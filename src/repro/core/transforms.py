@@ -14,6 +14,7 @@ from .affine import (BasicSet, BasisMap, Constraint, LinExpr,
                      dependence_vector, eq, ge, le, transfer_dependences,
                      transfer_legality)
 from .ir import Statement
+from . import caching
 
 
 class IllegalTransform(Exception):
@@ -28,13 +29,16 @@ class IllegalTransform(Exception):
 # next dependence/trip/legality query *inherits* the parent state's facts
 # through the change-of-basis algebra instead of re-running FM.
 def _pre_step(stmt: Statement):
-    from . import caching
     if not caching.analytic_on():
         return None
     return (stmt.xfer_sig(), stmt.is_original_order())
 
 def _post_step(stmt: Statement, pre, dep_step: Tuple,
                trip_op: Optional[Tuple]) -> None:
+    # every transform primitive mutates ``iter_subst``/``domain`` in place
+    # before calling here; drop the memoized subst signature before anything
+    # (the basis trace below included) reads them
+    stmt._subst_sig = None
     if pre is not None:
         stmt.record_basis_step(pre[0], pre[1], dep_step, trip_op)
 
@@ -56,7 +60,6 @@ def self_dependences(stmt: Statement):
     ``selfdep_transfers``.  The returned list is shared — callers must
     treat it as read-only.
     """
-    from . import caching
     if not caching.ENABLED:
         caching.COUNTS["selfdep_evals"] += 1
         return _self_dependences_compute(stmt)
@@ -91,7 +94,6 @@ def _steps_transferable(steps) -> bool:
 
 def _self_dependences_transfer(stmt: Statement):
     """Transferred self-dependence list, or None (fall back to FM)."""
-    from . import caching
     if not caching.analytic_on():
         return None
     walk = stmt._walk_trace(
@@ -142,7 +144,6 @@ def _legal(stmt: Statement) -> bool:
     statements identical modulo dim/array renaming (3MM's three matmuls,
     repeated conv layers) share one legality verdict.
     """
-    from . import caching
     if not caching.ENABLED:
         caching.COUNTS["legal_evals"] += 1
         return _legal_compute(stmt)
@@ -184,7 +185,6 @@ def _legal_transfer(stmt: Statement) -> Optional[bool]:
     ancestor plus an order-preserving basis change is legal, and an exact
     transfer that reverses a class exhibits an integer dependence pair
     whose execution order flips."""
-    from . import caching
     if not caching.analytic_on():
         return None
 

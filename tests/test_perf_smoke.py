@@ -41,3 +41,48 @@ def test_3mm_ladder_eval_counts_stay_incremental():
     # caches must actually be getting hits, not just low traffic
     assert model.stats.node_cache_hits + model.stats.design_cache_hits > 0
     assert c["selfdep_hits"] > 0 and c["trip_hits"] > c["trip_evals"]
+
+
+# measured baseline: beam:8 on gemm evaluates exactly the greedy
+# trajectory's 24 candidates (sibling states collapse onto shared rungs),
+# vs a naive 8x fan-out of 192 — budget with 50% headroom
+BEAM8_GEMM_CAND_BUDGET = 36
+
+
+def test_beam8_gemm_dedup_beats_naive_fanout():
+    from benchmarks.workloads import gemm
+    from repro.core.search import resolve_strategy
+
+    strat = resolve_strategy("beam:1")
+    caching.clear_all()
+    caching.reset_counts()
+    auto_dse(gemm(64).fn, model=HlsModel(), strategy=strat)
+    per_state = strat.wave_stats["cands_evaluated"]
+
+    strat8 = resolve_strategy("beam:8")
+    caching.clear_all()
+    caching.reset_counts()
+    res = auto_dse(gemm(64).fn, model=HlsModel(), strategy=strat8)
+    assert res.report.feasible
+    ws = strat8.wave_stats
+    assert ws["cands_evaluated"] < 8 * per_state, (
+        f"beam:8 evaluated {ws['cands_evaluated']} candidates — the naive "
+        f"k-times fan-out of the {per_state}-candidate trajectory; "
+        f"cross-state dedup is not firing")
+    assert ws["cands_evaluated"] <= BEAM8_GEMM_CAND_BUDGET, (
+        f"beam:8 candidate evaluations regressed: "
+        f"{ws['cands_evaluated']} > {BEAM8_GEMM_CAND_BUDGET}")
+
+
+def test_beam8_blur_credits_shared_rungs():
+    from benchmarks.workloads import blur
+    from repro.core.search import resolve_strategy
+
+    strat = resolve_strategy("beam:8")
+    caching.clear_all()
+    caching.reset_counts()
+    auto_dse(blur(14).fn, max_parallel=16, model=HlsModel(), strategy=strat)
+    ws = strat.wave_stats
+    assert ws["cands_credited"] > 0, (
+        "sibling beam states never shared a rung evaluation "
+        f"(wave_stats: {ws})")

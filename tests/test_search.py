@@ -22,8 +22,8 @@ from repro.core import caching
 from repro.core.cost_model import HlsModel
 from repro.core.dse import auto_dse
 from repro.core.search import (BeamSearch, DesignPoint, GreedySearch,
-                               ParallelSearch, ParetoArchive, STRATEGIES,
-                               resolve_strategy)
+                               ParallelSearch, ParetoArchive, PoolEvaluator,
+                               STRATEGIES, resolve_strategy)
 
 # every workload family, sized to keep the suite quick (polyhedral work is
 # extent-independent)
@@ -248,6 +248,53 @@ def test_resolve_strategy_kwarg_env_precedence(monkeypatch):
     # explicit spec + matching kwarg: kwarg overrides the :k suffix
     s = resolve_strategy("beam:3", beam_width=5)
     assert isinstance(s, BeamSearch) and s.width == 5
+    # workers on a beam spec makes it pooled (kwargs spelling of
+    # beam:3:parallel:2)
+    s = resolve_strategy("beam:3", workers=2)
+    assert isinstance(s, BeamSearch) and s.width == 3
+    assert isinstance(s.evaluator, PoolEvaluator) and s.evaluator.workers == 2
+
+
+def test_resolve_strategy_beam_grammar():
+    # width-less rank segments: beam:scalar keeps the default width
+    s = resolve_strategy("beam:scalar")
+    assert isinstance(s, BeamSearch) and s.width == 2 and s.rank == "scalar"
+    s = resolve_strategy("beam:4:scalar")
+    assert s.width == 4 and s.rank == "scalar"
+    # segments compose in any order
+    s = resolve_strategy("beam:scalar:4")
+    assert s.width == 4 and s.rank == "scalar"
+    s = resolve_strategy("beam:latency")
+    assert s.width == 2 and s.rank == "latency"
+    # beam_width kwarg still overrides a width-less rank spec
+    s = resolve_strategy("beam:scalar", beam_width=6)
+    assert s.width == 6 and s.rank == "scalar"
+
+
+def test_resolve_strategy_beam_parallel_grammar():
+    s = resolve_strategy("beam:parallel")
+    assert isinstance(s, BeamSearch) and s.width == 2
+    assert isinstance(s.evaluator, PoolEvaluator)
+    assert s.evaluator.workers == (os.cpu_count() or 1)
+    s = resolve_strategy("beam:parallel:3")
+    assert isinstance(s.evaluator, PoolEvaluator) and s.evaluator.workers == 3
+    s = resolve_strategy("beam:8:parallel")
+    assert s.width == 8 and isinstance(s.evaluator, PoolEvaluator)
+    s = resolve_strategy("beam:8:scalar:parallel:2")
+    assert (s.width == 8 and s.rank == "scalar"
+            and isinstance(s.evaluator, PoolEvaluator)
+            and s.evaluator.workers == 2)
+    # a serial beam never carries a pool
+    s = resolve_strategy("beam:8")
+    assert not isinstance(s.evaluator, PoolEvaluator)
+
+
+def test_resolve_strategy_beam_grammar_errors():
+    # duplicate / unknown segments are rejected and name the original spec
+    for bad in ("beam:4:2", "beam:scalar:latency", "beam:parallel:2:parallel",
+                "beam:fast", "beam:4:bogus"):
+        with pytest.raises(ValueError, match="beam"):
+            resolve_strategy(bad)
 
 
 def test_env_var_selects_strategy(monkeypatch):
