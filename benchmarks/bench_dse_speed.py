@@ -150,7 +150,13 @@ def _measure_strategies(builders: List[Callable],
     ``STRATEGY_REPEATS`` times with cold caches each (``clear_all`` per
     repeat), reporting the **minimum** wall across repeats — the min is
     the standard noise filter on shared hardware — plus best design cost
-    (identical across repeats by the determinism invariants)."""
+    (identical across repeats by the determinism invariants).
+
+    Each strategy row also carries a ``telemetry`` column summed from the
+    per-run ``report.telemetry`` snapshots (see ``dse.auto_dse``): fresh
+    analysis evals, cross-state dedup credits, and pool retry count.
+    Counters are deterministic across cold-cache repeats, so the last
+    repeat's sums stand for all of them."""
     out: Dict[str, Dict] = {}
     walls: Dict[str, List[float]] = {label: [] for label, _ in STRATEGY_SPECS}
     # repeats are interleaved round-robin across strategies (repeat 1 of
@@ -163,16 +169,25 @@ def _measure_strategies(builders: List[Callable],
             caching.reset_counts()
             cost = 0
             resources: Dict[str, float] = {}
+            tel = {"analysis_evals": 0, "dedup_credits": 0,
+                   "pool_retries": 0}
             t0 = time.perf_counter()
             for build in builders:
                 res = auto_dse(build(), max_parallel=max_parallel, **kw)
                 cost += res.report.latency
                 for k, v in res.report.resource_totals().items():
                     resources[k] = resources.get(k, 0) + v
+                t = res.report.telemetry or {}
+                tel["analysis_evals"] += t.get("analysis_evals", 0)
+                tel["dedup_credits"] += (t.get("wave") or {}).get(
+                    "cands_credited", 0)
+                tel["pool_retries"] += (t.get("pool") or {}).get(
+                    "retries", 0)
             walls[label].append(time.perf_counter() - t0)
             out[label] = {"seconds": 0.0,
                           "repeats": STRATEGY_REPEATS,
-                          "best_cost": cost, "resources": resources}
+                          "best_cost": cost, "resources": resources,
+                          "telemetry": tel}
     for label, _ in STRATEGY_SPECS:
         out[label]["seconds"] = round(min(walls[label]), 3)
     out["beam_cost_le_greedy"] = (

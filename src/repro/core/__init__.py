@@ -24,6 +24,8 @@ from .ir import (Placeholder, p_bfloat16, p_float32, p_float64, p_int8, p_int16,
                  p_int32, p_int64, p_uint8, p_uint16, p_uint32, p_uint64)
 from .pipeline import (CompileService, PassManager, ServiceResult, VerifyError,
                        compile, compile_many, serve)
+from .telemetry import metrics
+from . import telemetry
 
 # NOTE: `compile` is importable explicitly (`from repro.core import compile`)
 # but deliberately left out of __all__ so `import *` never shadows the builtin.
@@ -31,6 +33,7 @@ __all__ = [
     "function", "var", "placeholder", "compute", "PomFunction", "ComputeHandle",
     "Var", "Placeholder", "PassManager", "VerifyError",
     "serve", "compile_many", "CompileService", "ServiceResult",
+    "telemetry", "metrics",
     "PomError", "PomUserError", "PomWarning",
     "p_int8", "p_int16", "p_int32", "p_int64",
     "p_uint8", "p_uint16", "p_uint32", "p_uint64",

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence, Set
 
+from . import telemetry
 from .affine import Bound, LinExpr
 from .ir import (BinOp, Call, Const, Expr, Function, IterVal, Load,
                  Placeholder, loads_of)
@@ -104,6 +105,16 @@ def emit_hls(fn: Function, ast: ProgramAST, top_name: Optional[str] = None,
     ``outputs`` names the externally observable arrays; inter-task channel
     arrays outside it become function-local stream/PIPO buffers.  Without
     it every array stays a top-level argument (conservative)."""
+    with telemetry.span("backend.lower", _cat="backend", backend="hls",
+                        fn=fn.name) as sp:
+        text = _emit_hls_impl(fn, ast, top_name, outputs)
+        sp.add(chars=len(text))
+    return text
+
+
+def _emit_hls_impl(fn: Function, ast: ProgramAST,
+                   top_name: Optional[str] = None,
+                   outputs: Optional[Sequence[str]] = None) -> str:
     top = top_name or fn.name
     region = _find_region(ast)
     fsuf = _float_suffix(fn)

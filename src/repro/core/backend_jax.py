@@ -12,6 +12,7 @@ from typing import Callable, Dict
 
 import numpy as np
 
+from . import telemetry
 from .ir import BinOp, Call, Const, Expr, Function, IterVal, Load, Statement
 from .loop_ir import (DataflowRegion, ForNode, IfNode, Node, ProgramAST,
                       StmtNode, TaskNode)
@@ -93,7 +94,11 @@ def compile_jax(fn: Function, ast: ProgramAST) -> Callable[[Dict[str, np.ndarray
             else:
                 raise TypeError(n)
 
-        exec_node(ast)
+        # ``span`` consults the live tracer at call time, so a runner that
+        # outlives the trace session simply records nothing
+        with telemetry.span("backend.execute", _cat="backend",
+                            backend="jax", fn=fn.name):
+            exec_node(ast)
         return bufs
 
     return run

@@ -36,7 +36,7 @@ from .affine import LinExpr
 from .errors import warn_structured
 from .ir import BinOp, Call, Const, Expr, Function, IterVal, Load, Placeholder, Statement
 from .ir import loads_of
-from . import faultinject
+from . import faultinject, telemetry
 
 
 class PallasLowerError(Exception):
@@ -171,7 +171,10 @@ def lower_stmt_pallas(stmt: Statement, interpret: Optional[bool] = None) -> Call
         hit = _LOWER_CACHE.get(key)
         if hit is not None:
             return hit
-    run = _lower_stmt_pallas_compute(stmt, interpret)
+    # span covers only the actual lowering work; memoized hits return above
+    with telemetry.span("backend.lower", _cat="backend", backend="pallas",
+                        statement=stmt.name, interpret=interpret):
+        run = _lower_stmt_pallas_compute(stmt, interpret)
     if key is not None:
         if len(_LOWER_CACHE) >= _LOWER_CACHE_MAX:
             _LOWER_CACHE.clear()

@@ -66,6 +66,15 @@ def reset_counts() -> None:
         COUNTS[k] = 0
 
 
+def analysis_evals(counts: Dict[str, int] = None) -> int:
+    """The headline incremental-analysis work metric: polyhedral
+    self-dependence + legality + trip-count evaluations (cache hits and
+    analytic transfers excluded).  One definition shared by the perf-smoke
+    budgets, ``bench_dse_speed --check``, and telemetry snapshots."""
+    c = COUNTS if counts is None else counts
+    return c["selfdep_evals"] + c["legal_evals"] + c["trip_evals"]
+
+
 def clear_all() -> None:
     """Empty every process-global memo table (benchmark hygiene: measure a
     workload from a cold cache).  Per-statement / per-model caches die with

@@ -153,6 +153,14 @@ class DesignReport:
     bram_bits: float
     feasible: bool
     dataflow: Optional[DataflowReport] = None
+    # Per-run telemetry snapshot attached by ``dse.auto_dse`` (analysis
+    # evals, cost-model counters, wave/pool deltas — see
+    # ``telemetry.metrics``).  Observational only: excluded from equality
+    # so every bit-identity invariant (serial vs pooled, cached vs
+    # uncached, traced vs untraced) compares reports unchanged, and not
+    # serialized into the design database.
+    telemetry: Optional[Dict] = field(default=None, compare=False,
+                                      repr=False)
 
     @property
     def parallelism(self) -> float:
@@ -201,6 +209,20 @@ class CostStats:
     design_evals: int = 0        # design_report calls
     design_cache_hits: int = 0   # ... served entirely from cache
     analytic_node_evals: int = 0  # closed-form (transfer-fed) recurrence IIs
+
+    def as_dict(self) -> Dict[str, int]:
+        """JSON-ready counter dict (the telemetry/metrics schema)."""
+        return {"node_evals": self.node_evals,
+                "node_cache_hits": self.node_cache_hits,
+                "full_node_evals": self.full_node_evals,
+                "design_evals": self.design_evals,
+                "design_cache_hits": self.design_cache_hits,
+                "analytic_node_evals": self.analytic_node_evals}
+
+    def delta(self, since: "CostStats") -> Dict[str, int]:
+        """Counter movement since a snapshot (``copy.copy(stats)``)."""
+        now, then = self.as_dict(), since.as_dict()
+        return {k: now[k] - then[k] for k in now}
 
 
 # name-canonical (schedule, pipeline pos, unrolls, body latency) -> II;

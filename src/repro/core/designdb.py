@@ -37,7 +37,7 @@ import tempfile
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
 
-from . import faultinject
+from . import faultinject, telemetry
 from .cost_model import DataflowReport, DesignReport, NodeReport
 from .errors import warn_structured
 
@@ -226,6 +226,7 @@ class DesignDB:
         way)."""
         self.stats.quarantined += 1
         self._quarantine_n += 1
+        telemetry.REGISTRY.counter("designdb.quarantines").inc()
         dest = os.path.join(
             self.path, "quarantine",
             f"{os.path.basename(path)}.{os.getpid()}.{self._quarantine_n}")
@@ -241,17 +242,25 @@ class DesignDB:
     # -- designs -------------------------------------------------------------
     def get(self, key: str) -> Optional[Dict[str, Any]]:
         """Verified payload for ``key``, or None (miss / quarantined)."""
+        with telemetry.span("designdb.get", _cat="designdb",
+                            key=key[:12]) as sp:
+            out, outcome = self._get(key)
+            sp.add(outcome=outcome)
+        telemetry.REGISTRY.counter(f"designdb.{outcome}").inc()
+        return out
+
+    def _get(self, key: str):
         hit = self._hot.get(key)
         if hit is not None:
             self.stats.hits += 1
-            return hit
+            return hit, "hit_hot"
         if not self.path:
             self.stats.misses += 1
-            return None
+            return None, "miss"
         path = self._entry_path(key)
         if not os.path.exists(path):
             self.stats.misses += 1
-            return None
+            return None, "miss"
         kind = faultinject.fires("designdb.read")
         if kind in ("truncate", "bitflip"):
             faultinject.corrupt_file(path, kind)
@@ -264,19 +273,21 @@ class DesignDB:
         except (OSError, ValueError, json.JSONDecodeError) as e:
             self._quarantine(path, f"{type(e).__name__}: {e}")
             self.stats.misses += 1
-            return None
+            return None, "quarantined"
         self._hot[key] = payload
         self.stats.hits += 1
-        return payload
+        return payload, "hit_disk"
 
     def put(self, key: str, payload: Dict[str, Any]) -> None:
         """Store a payload under ``key`` — atomic, checksummed."""
         self._hot[key] = payload
         self.stats.writes += 1
+        telemetry.REGISTRY.counter("designdb.writes").inc()
         if not self.path:
             return
-        path = self._entry_path(key)
-        atomic_write_json(path, self._envelope(key, payload))
+        with telemetry.span("designdb.put", _cat="designdb", key=key[:12]):
+            path = self._entry_path(key)
+            atomic_write_json(path, self._envelope(key, payload))
         kind = faultinject.fires("designdb.write")
         if kind in ("truncate", "bitflip"):
             # simulate the crash window of a non-atomic writer: the entry

@@ -54,6 +54,7 @@ measured counts live in ``HlsModel.stats`` / ``DseResult.cost_stats``.
 """
 from __future__ import annotations
 
+import copy
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -341,7 +342,8 @@ def auto_dse(fn: Function, target: str = "fpga", max_parallel: int = 256,
              workers: Optional[int] = None,
              archive=None, graph_passes: Sequence[str] = (),
              outputs: Optional[Sequence[str]] = None,
-             dataflow: Optional[bool] = None) -> DseResult:
+             dataflow: Optional[bool] = None,
+             trace_path: Optional[str] = None) -> DseResult:
     """Run both DSE stages as a ``pipeline.PassManager`` pipeline:
 
         build graph → verify graph → [dce if outputs narrow the graph]
@@ -365,7 +367,14 @@ def auto_dse(fn: Function, target: str = "fpga", max_parallel: int = 256,
     inserts extra named graph passes (e.g. ``("fuse",)``) ahead of the
     polyhedral stages.  ``dataflow`` pins the task-level-pipelining toggle
     on the function (True/False; None keeps the ``POM_DATAFLOW``-defaulted
-    stage-2 on/off search — see ``search._dataflow_step``)."""
+    stage-2 on/off search — see ``search._dataflow_step``).
+
+    ``trace_path`` (or ``POM_TRACE``) opens a telemetry trace session for
+    this run — Chrome trace-event JSON to a path, a compact tree summary
+    to stdout for ``"-"``.  The returned ``report.telemetry`` carries the
+    per-run metrics snapshot (analysis evals, cost-model counters,
+    wave/pool deltas) whether or not tracing was on."""
+    from . import caching, telemetry
     from .pipeline import (GRAPH_PASSES, BuildGraph, GraphCSE, GraphDCE,
                            LowerToPoly, PassManager, PipelineContext,
                            Stage1DSE, Stage2DSE, VerifyGraph, VerifyPoly)
@@ -393,7 +402,13 @@ def auto_dse(fn: Function, target: str = "fpga", max_parallel: int = 256,
         passes.append(GRAPH_PASSES[name]())
     passes += [LowerToPoly(), Stage1DSE(), VerifyPoly(),
                Stage2DSE(), VerifyPoly()]
-    PassManager(passes).run(ctx)
+    counts0 = dict(caching.COUNTS)
+    stats0 = copy.copy(model.stats)
+    pool0 = telemetry.REGISTRY.counter_values("pool.")
+    with telemetry.maybe_trace(trace_path):
+        with telemetry.span("auto_dse", _cat="dse", fn=fn.name,
+                            target=target):
+            PassManager(passes).run(ctx)
     log = ctx.records["stage1"]
     report = ctx.records["stage2"]["report"]
     actions = ctx.records["stage2"]["actions"]
@@ -406,5 +421,21 @@ def auto_dse(fn: Function, target: str = "fpga", max_parallel: int = 256,
     for s in ctx.fn.statements:
         # report unroll factor per current loop dim (1 when untouched)
         tiles[s.name] = [s.unrolls.get(d, 1) for d in s.dims]
+    # per-run metrics snapshot (the bench/CI telemetry schema): counter
+    # *movement* over this run, never perturbing anything it reads
+    counts = caching.counts_delta(counts0)
+    pool1 = telemetry.REGISTRY.counter_values("pool.")
+    strat_obj = ctx.records["stage2"].get("strategy_obj")
+    wave = dict(getattr(strat_obj, "wave_stats", None) or {})
+    report.telemetry = {
+        "strategy": strat,
+        "analysis_evals": caching.analysis_evals(counts),
+        "caching": counts,
+        "cost": model.stats.delta(stats0),
+        "wave": wave or None,
+        "pool": {k[len("pool."):]: pool1.get(k, 0) - pool0.get(k, 0)
+                 for k in sorted(set(pool0) | set(pool1))},
+        "dse_seconds": dt,
+    }
     return DseResult(report, log, actions, dt, tiles, model.stats,
                      archive, strat, ctx.fn.dataflow)

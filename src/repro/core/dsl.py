@@ -29,6 +29,8 @@ from .errors import PomError, PomUserError, PomWarning
 from .ir import (DType, Expr, Function, IterVal, Load, Placeholder, Statement,
                  loads_of, p_float32, walk_expr, wrap)
 from .pipeline import CompileService, ServiceResult, compile_many, serve
+from .telemetry import metrics
+from . import telemetry
 from . import transforms as T
 
 

@@ -16,6 +16,7 @@ The engine distinguishes three failure surfaces:
 """
 from __future__ import annotations
 
+import time
 import warnings
 
 
@@ -46,7 +47,17 @@ def format_structured(component: str, event: str, **fields) -> str:
 
 def warn_structured(component: str, event: str, **fields) -> str:
     """Emit a :class:`PomWarning` with the structured one-line format;
-    returns the message (callers may also log it)."""
-    msg = format_structured(component, event, **fields)
+    returns the message (callers may also log it).
+
+    The single emission path for recovered faults: the warning carries a
+    monotonic ``ts=`` field (seconds, comparable across one process and
+    its forked workers), and the same component/event/fields land in the
+    telemetry layer — a named counter always, plus a timeline instant
+    when a trace session is active — so injected failures are visible in
+    the very trace they perturb."""
+    msg = f"{format_structured(component, event, **fields)}" \
+          f" ts={time.monotonic():.6f}"
+    from . import telemetry
+    telemetry.warning(component, event, msg, fields)
     warnings.warn(msg, PomWarning, stacklevel=2)
     return msg

@@ -140,6 +140,10 @@ def fires(site: str) -> Optional[str]:
         return None
     for spec in list(_SPECS) + _env_specs():
         if spec.site == site and spec.roll():
+            from . import telemetry
+            telemetry.REGISTRY.counter(f"fault.fired.{site}").inc()
+            telemetry.event("fault.fired", _cat="fault", site=site,
+                            kind=spec.kind, fires=spec.fires, p=spec.p)
             return spec.kind
     return None
 

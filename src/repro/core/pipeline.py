@@ -24,7 +24,7 @@ the incremental engine's evaluation counters (the DSE benchmarks are
 count-based).
 
 Debugging (the paper's "streamlined debugging" claim): set
-``POM_DUMP_IR=graph|poly|loops|backend|all`` to dump the IR after every
+``POM_DUMP_IR=graph|poly|loops|taskgraph|backend|all`` to dump the IR after every
 pass that produces that stage.
 
 ``compile(fn, target=...)`` is the single entry point; the three backends
@@ -38,6 +38,8 @@ import sys
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from . import telemetry
+from .errors import warn_structured
 from .ir import Function
 from .graph_ir import (GraphError, GraphIR, eliminate_dead_ops, fuse_ops,
                        share_structural_memos)
@@ -71,20 +73,58 @@ class Pass:
         raise NotImplementedError
 
 
+def _count_ast(node) -> int:
+    """Loop-IR node count (per-pass span IR-size argument)."""
+    n = 1
+    for c in getattr(node, "body", ()) or ():
+        n += _count_ast(c)
+    return n
+
+
+def _ir_sizes(ctx: PipelineContext) -> Dict[str, int]:
+    """Sizes of whatever IR levels exist right now — attached to each
+    pipeline-pass span so a trace shows the program growing/shrinking
+    through DCE, fusion, and lowering."""
+    sizes = {"statements": len(ctx.fn.statements)}
+    if ctx.graph is not None:
+        sizes["graph_ops"] = len(ctx.graph.ops)
+    if ctx.ast is not None:
+        sizes["ast_nodes"] = _count_ast(ctx.ast)
+    return sizes
+
+
+# the stage artifacts POM_DUMP_IR knows how to print (+ "all")
+KNOWN_DUMP_STAGES: Tuple[str, ...] = ("graph", "poly", "loops", "taskgraph",
+                                      "backend", "all")
+
+
 class PassManager:
     """Runs passes in order; honors ``POM_DUMP_IR``.
 
     ``dump`` overrides the env toggle; pass ``"all"`` to dump every stage.
+    An unknown stage name warns (``pipeline.unknown_dump_stage``) instead
+    of silently dumping nothing.  With a trace session active, every pass
+    runs under a ``pass.<name>`` span carrying the post-pass IR sizes.
     """
 
     def __init__(self, passes: Sequence[Pass], dump: Optional[str] = None):
         self.passes: List[Pass] = list(passes)
         self.dump = dump if dump is not None else os.environ.get("POM_DUMP_IR")
+        if self.dump and self.dump not in KNOWN_DUMP_STAGES:
+            warn_structured("pipeline", "unknown_dump_stage",
+                            stage=self.dump,
+                            known="|".join(KNOWN_DUMP_STAGES))
 
     def run(self, ctx: PipelineContext) -> PipelineContext:
         ctx.options.setdefault("_dump", self.dump)
         for p in self.passes:
-            p.run(ctx)
+            if telemetry.on():
+                with telemetry.span(f"pass.{p.name}", _cat="pipeline",
+                                    stage=p.stage) as sp:
+                    p.run(ctx)
+                    sp.add(**_ir_sizes(ctx))
+            else:
+                p.run(ctx)
             if p.dumps and self.dump and self.dump in (p.dumps, "all"):
                 self._dump(p, ctx)
         return ctx
@@ -295,6 +335,7 @@ class Stage2DSE(Pass):
                             strategy=strategy, archive=archive)
         ctx.records["stage2"] = {"report": report, "actions": actions,
                                  "strategy": strategy.describe(),
+                                 "strategy_obj": strategy,
                                  "archive": archive}
         if dump_pareto and archive is not None:
             archive.dump(dump_pareto)
@@ -577,7 +618,8 @@ def compile(fn, target: str = "hls",
             dse: bool = False, max_parallel: int = 256,
             model=None, dump: Optional[str] = None,
             strategy=None, archive=None,
-            dataflow: Optional[bool] = None, **backend_kw):
+            dataflow: Optional[bool] = None,
+            trace_path: Optional[str] = None, **backend_kw):
     """Compile a POM function through the full three-level pipeline.
 
     ``fn`` is an ``ir.Function`` or a DSL ``PomFunction``.  ``target``
@@ -599,7 +641,10 @@ def compile(fn, target: str = "hls",
     (True/False override the ``POM_DATAFLOW`` environment default; None
     keeps the function's current setting) — with it on, an eligible
     multi-task function is emitted as a dataflow region (HLS) or an
-    annotation-only region (JAX/Pallas — numerics unchanged).  Backend
+    annotation-only region (JAX/Pallas — numerics unchanged).
+    ``trace_path`` (or ``POM_TRACE``) opens a telemetry trace session for
+    this compile and exports it on return — Chrome trace-event JSON to a
+    path, or a compact tree summary to stdout for ``"-"``.  Backend
     keyword arguments (``top_name``, ``interpret``, …) pass through.
     """
     real_fn = fn if isinstance(fn, Function) else fn.fn
@@ -622,7 +667,10 @@ def compile(fn, target: str = "hls",
     ctx = PipelineContext(fn=real_fn, target=target,
                           options={"max_parallel": max_parallel, "model": model,
                                    "archive": archive})
-    PassManager(passes, dump=dump).run(ctx)
+    with telemetry.maybe_trace(trace_path):
+        with telemetry.span("compile", _cat="pipeline",
+                            fn=real_fn.name, target=target):
+            PassManager(passes, dump=dump).run(ctx)
     return ctx.artifact
 
 
@@ -658,12 +706,27 @@ class CompileService:
     address space.  The db stores the *outcome* (report, action log,
     tile sizes) — backend artifacts are still emitted by ``compile``;
     what the service removes is the search, which is where the time is.
+
+    Observability: every request runs under a ``service.request`` span
+    and feeds live hit/miss latency histograms (p50/p99 via
+    :meth:`metrics`).  ``trace_path`` opens a telemetry session for the
+    service's lifetime and re-exports the (cumulative) trace after every
+    request, so the file on disk is always a valid Chrome trace even if
+    the process dies mid-session.
     """
 
-    def __init__(self, db=None, path: Optional[str] = None, **dse_defaults):
+    def __init__(self, db=None, path: Optional[str] = None,
+                 trace_path: Optional[str] = None, **dse_defaults):
         from . import designdb
         self.db = db if db is not None else designdb.open_db(path)
         self.defaults = dse_defaults
+        self.trace_path = trace_path
+        if trace_path and not telemetry.on():
+            telemetry.start_trace(trace_path)
+        # live request-latency distributions, split by outcome (the db-hit
+        # path is O(lookup); mixing it with misses would make p50 useless)
+        self._latency = {"hit": telemetry.Histogram(),
+                         "miss": telemetry.Histogram()}
 
     # -- request normalization ----------------------------------------------
     def _normalize(self, kw: Dict[str, Any]) -> Tuple[Dict, Dict]:
@@ -700,6 +763,20 @@ class CompileService:
     def compile_one(self, f, **kw) -> ServiceResult:
         """Serve one function: db hit → the stored outcome (the input
         function is left unscheduled); miss → full ``auto_dse`` + store."""
+        with telemetry.span("service.request", _cat="service") as sp:
+            res = self._compile_one(f, **kw)
+            sp.add(key=res.key[:12], from_db=res.from_db,
+                   strategy=res.strategy, seconds=res.seconds)
+        kind = "hit" if res.from_db else "miss"
+        self._latency[kind].observe(res.seconds)
+        telemetry.REGISTRY.histogram(f"service.{kind}_seconds") \
+            .observe(res.seconds)
+        telemetry.REGISTRY.counter(f"service.requests_{kind}").inc()
+        if self.trace_path:
+            telemetry.export_trace()
+        return res
+
+    def _compile_one(self, f, **kw) -> ServiceResult:
         import time
         from . import designdb
         from .ir import Function
@@ -742,14 +819,27 @@ class CompileService:
         """The underlying db's hit/miss/write/quarantine counters."""
         return self.db.stats
 
+    def metrics(self) -> Dict[str, Any]:
+        """Live service metrics: db counters plus per-request latency
+        distributions (count/sum/min/max/p50/p99, split hit vs miss) —
+        maintained on every request, snapshot-cheap."""
+        s = self.db.stats
+        return {"db": {"hits": s.hits, "misses": s.misses,
+                       "writes": s.writes, "quarantined": s.quarantined},
+                "requests": {kind: h.to_json()
+                             for kind, h in self._latency.items()}}
 
-def serve(db=None, path: Optional[str] = None, **dse_defaults
+
+def serve(db=None, path: Optional[str] = None,
+          trace_path: Optional[str] = None, **dse_defaults
           ) -> CompileService:
     """Open the compile service: ``pom.serve()`` (the ROADMAP's
     many-users entry point).  ``path`` (or ``POM_DESIGN_DB``) selects the
     persistent database; with neither set the service is a per-process
-    memo — same API, no disk."""
-    return CompileService(db=db, path=path, **dse_defaults)
+    memo — same API, no disk.  ``trace_path`` traces the whole service
+    session (re-exported after every request)."""
+    return CompileService(db=db, path=path, trace_path=trace_path,
+                          **dse_defaults)
 
 
 def compile_many(fns: Sequence, service: Optional[CompileService] = None,

@@ -72,6 +72,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from . import caching
 from . import faultinject
+from . import telemetry
 from .errors import warn_structured
 from .cost_model import CostStats, DesignReport, HlsModel
 from .depgraph import DepGraph, build_depgraph
@@ -347,14 +348,12 @@ class ParetoArchive:
         }
 
     def dump(self, dest: str = "-") -> None:
-        """Write the frontier as JSON to ``dest`` (a path, or ``-`` /
-        ``stderr`` for standard error) — the ``POM_DUMP_PARETO`` hook."""
-        payload = json.dumps(self.to_json(), indent=2)
-        if dest in ("-", "stderr", ""):
-            print(payload, file=sys.stderr)
-        else:
-            with open(dest, "w") as fh:
-                fh.write(payload + "\n")
+        """Write the frontier as JSON to ``dest`` — the ``POM_DUMP_PARETO``
+        hook.  ``-`` means stdout, ``stderr`` standard error, anything
+        else a path; the stream cases flush explicitly
+        (``telemetry.dump_stream``, shared with ``POM_TRACE=-``) so dumps
+        interleave correctly with pytest capture and service logs."""
+        telemetry.dump_stream(json.dumps(self.to_json(), indent=2), dest)
 
 
 # --------------------------------------------------------------------------
@@ -487,11 +486,22 @@ class SerialEvaluator:
         out: List[Candidate] = []
         base = st.base_snaps[uid]
         base_key = _snap_sched_sig(uid, base)
+        t_on = telemetry.on()
         for factors in unroll_candidates(P):
             if not _apply_candidate(ctx.fn, ctx.model, s, base, base_key,
                                     sweep, tuple(factors)):
+                if t_on:
+                    telemetry.event("stage2.candidate_illegal", _cat="dse",
+                                    statement=s.name, factors=str(factors))
                 continue
-            rep = ctx.design_report()
+            if t_on:
+                with telemetry.span("stage2.candidate", _cat="dse",
+                                    statement=s.name,
+                                    factors=str(factors)) as sp:
+                    rep = ctx.design_report()
+                    sp.add(feasible=rep.feasible, latency=rep.latency)
+            else:
+                rep = ctx.design_report()
             out.append(Candidate(tuple(factors), rep, _snapshot(s)))
         return out
 
@@ -625,6 +635,11 @@ class _CandidateResult:
     report_counts: Optional[Dict[str, int]] = None
     report_stats: Optional[CostStats] = None
     report_delta: Optional[Dict] = None
+    # telemetry events recorded worker-side during this evaluation (the
+    # trace twin of the cache deltas above): shipped back on the same
+    # reply and absorbed by the parent's tracer, where the recording pid
+    # separates them into per-worker lanes.  None when tracing is off.
+    trace: Optional[List[dict]] = None
 
 
 def _candidate_eval_body(fn: Function, model: HlsModel, s: Statement,
@@ -938,7 +953,19 @@ def _warm_worker_main(conn, fn: Function, model: HlsModel) -> None:
             if poison == "hang":
                 time.sleep(3600.0)
             s, base, sweep = rung
-            res = _candidate_eval_body(fn, model, s, base, sweep, factors)
+            if telemetry.on():
+                # the tracer was inherited across the fork; ship this
+                # evaluation's events back on the reply (worker lane)
+                mark = telemetry.buffer_mark()
+                with telemetry.span("worker.candidate", _cat="pool",
+                                    statement=s.name, idx=idx,
+                                    factors=str(factors)):
+                    res = _candidate_eval_body(fn, model, s, base, sweep,
+                                               factors)
+                res.trace = telemetry.buffer_delta(mark)
+            else:
+                res = _candidate_eval_body(fn, model, s, base, sweep,
+                                           factors)
             if poison == "pickle":
                 conn.send(("garbled", idx, "<malformed-reply>"))
             else:
@@ -1024,6 +1051,8 @@ class PoolEvaluator:
         child_conn.close()
         w = _WarmWorker(proc, parent_conn)
         self._procs.append(w)
+        telemetry.REGISTRY.counter("pool.spawns").inc()
+        telemetry.event("pool.spawn", _cat="pool", worker=proc.pid)
         return w
 
     def _ensure_pool(self, ctx: SearchContext, n_cands: int) -> bool:
@@ -1050,6 +1079,8 @@ class PoolEvaluator:
     def _kill(self, w: _WarmWorker) -> None:
         if w in self._procs:
             self._procs.remove(w)
+        telemetry.REGISTRY.counter("pool.kills").inc()
+        telemetry.event("pool.kill", _cat="pool", worker=w.proc.pid)
         try:
             w.proc.kill()
         except OSError:
@@ -1085,6 +1116,7 @@ class PoolEvaluator:
         consec = self._consec_failures
         self.close()
         self._degraded = True   # close() must not clear the degrade flag
+        telemetry.REGISTRY.counter("pool.degrades").inc()
         warn_structured("search.pool", "degraded_to_serial", reason=reason,
                         consecutive_failures=consec,
                         max_failures=self.max_failures)
@@ -1178,6 +1210,7 @@ class PoolEvaluator:
             lost = [i for i, _ in flight.pop(w, ())]
             self._kill(w)
             self._consec_failures += 1
+            telemetry.REGISTRY.counter("pool.worker_failures").inc()
             warn_structured("search.pool", "worker_failed", reason=reason,
                             candidates=",".join(map(str, lost)) or "-",
                             consecutive_failures=self._consec_failures)
@@ -1186,6 +1219,10 @@ class PoolEvaluator:
                 return
             retry = [i for i in lost if attempts[i] < _CAND_ATTEMPTS_MAX]
             if retry:
+                telemetry.REGISTRY.counter("pool.retries").inc(len(retry))
+                telemetry.event("pool.retry", _cat="pool",
+                                candidates=",".join(map(str, retry)),
+                                reason=reason)
                 time.sleep(self.backoff_s
                            * max(attempts[i] for i in retry))
                 for i in reversed(retry):
@@ -1199,6 +1236,7 @@ class PoolEvaluator:
                 while pending and len(q) < _PIPELINE_DEPTH:
                     i = pending.popleft()
                     attempts[i] += 1
+                    telemetry.REGISTRY.counter("pool.dispatches").inc()
                     kind = faultinject.fires("worker.dispatch")
                     poison = kind if kind in ("crash", "hang", "pickle") \
                         else None
@@ -1236,6 +1274,9 @@ class PoolEvaluator:
                     fail(w, "malformed_reply")
                     continue
                 results[head] = reply[2]
+                # worker-lane trace events ride back on the reply; absorb
+                # immediately (events are timestamped, order irrelevant)
+                telemetry.absorb(reply[2].trace)
                 q.popleft()
                 if q:
                     # the queued-behind candidate only starts running now:
@@ -1507,9 +1548,7 @@ def _rung_finish(ctx: SearchContext, st: LadderState, pend: _PendingRung,
     return True
 
 
-def _rung(ctx: SearchContext, st: LadderState, evaluator) -> bool:
-    """Advance ``st`` by one rung of the bottleneck ladder (the loop body of
-    the pre-subsystem ``stage2``).  Returns False when the ladder is done."""
+def _rung_impl(ctx: SearchContext, st: LadderState, evaluator) -> bool:
     kind, pend = _rung_begin(ctx, st)
     if kind == "done":
         return False
@@ -1519,6 +1558,46 @@ def _rung(ctx: SearchContext, st: LadderState, evaluator) -> bool:
     sweep = _rung_sweep(ctx, st, pend)
     cands = evaluator.evaluate(ctx, st, s, pend.uid, pend.P, sweep)
     return _rung_finish(ctx, st, pend, cands, sweep)
+
+
+def _rung_telemetry(ctx: SearchContext, counts0: Dict[str, int],
+                    stats0: CostStats) -> Dict[str, Any]:
+    """Eval-count / cache-delta span arguments for one rung or wave —
+    read-only counter arithmetic, issued only when a trace is active."""
+    c = caching.counts_delta(counts0)
+    d = ctx.model.stats.delta(stats0)
+    return {"analysis_evals": caching.analysis_evals(c),
+            "cache_hits": (c["selfdep_hits"] + c["legal_hits"]
+                           + c["trip_hits"] + c["access_hits"]),
+            "transfers": (c["selfdep_transfers"] + c["legal_transfers"]
+                          + c["trip_transfers"]),
+            "node_evals": d["node_evals"],
+            "design_evals": d["design_evals"],
+            "design_cache_hits": d["design_cache_hits"]}
+
+
+def _rung(ctx: SearchContext, st: LadderState, evaluator) -> bool:
+    """Advance ``st`` by one rung of the bottleneck ladder (the loop body of
+    the pre-subsystem ``stage2``).  Returns False when the ladder is done.
+
+    With a trace active, the rung runs under a ``stage2.rung`` span
+    carrying the bottleneck statement, target parallelism, accept/reject
+    outcome, and the rung's eval-count / cache-hit deltas — all read from
+    counters the rung moves anyway, never adding queries of its own."""
+    if not telemetry.on():
+        return _rung_impl(ctx, st, evaluator)
+    counts0 = dict(caching.COUNTS)
+    stats0 = copy.copy(ctx.model.stats)
+    with telemetry.span("stage2.rung", _cat="dse") as sp:
+        more = _rung_impl(ctx, st, evaluator)
+        sp.add(**_rung_telemetry(ctx, counts0, stats0))
+        info = st.last_rung
+        if info is not None:
+            s = ctx.by_uid.get(info.uid)
+            sp.add(statement=s.name if s is not None else info.uid,
+                   P=info.P, candidates=len(info.cands),
+                   accepted=info.chosen is not None)
+    return more
 
 
 # --------------------------------------------------------------------------
@@ -1666,6 +1745,8 @@ class BeamSearch(SearchStrategy):
                 live = self._select(successors)
         finally:
             self.evaluator.close()
+        # unify the per-run dedup tallies into the metrics registry
+        telemetry.merge_counters(self.wave_stats, prefix="search.wave.")
         best = min(enumerate(done),
                    key=lambda t: (t[1].report.latency,
                                   0 if t[1].lineage else 1, t[0]))[1]
@@ -1703,6 +1784,25 @@ class BeamSearch(SearchStrategy):
     def _wave(self, ctx: SearchContext, live: List[LadderState],
               done: List[LadderState], pool: Optional[PoolEvaluator]
               ) -> List[Tuple[int, LadderState]]:
+        """Traced wrapper of :meth:`_wave_impl`: a ``stage2.wave`` span
+        carrying live-state count, dedup credits, and eval-count deltas
+        for this wave (read-only; absent overhead when tracing is off)."""
+        if not telemetry.on():
+            return self._wave_impl(ctx, live, done, pool)
+        ws0 = dict(self.wave_stats)
+        counts0 = dict(caching.COUNTS)
+        stats0 = copy.copy(ctx.model.stats)
+        with telemetry.span("stage2.wave", _cat="dse",
+                            states=len(live)) as sp:
+            out = self._wave_impl(ctx, live, done, pool)
+            sp.add(**_rung_telemetry(ctx, counts0, stats0))
+            sp.add(**{k: v - ws0.get(k, 0)
+                      for k, v in self.wave_stats.items()})
+        return out
+
+    def _wave_impl(self, ctx: SearchContext, live: List[LadderState],
+                   done: List[LadderState], pool: Optional[PoolEvaluator]
+                   ) -> List[Tuple[int, LadderState]]:
         """One beam iteration over several live states, in three phases.
 
         Phase A (state order): run every state's rung preamble

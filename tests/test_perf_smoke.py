@@ -86,3 +86,43 @@ def test_beam8_blur_credits_shared_rungs():
     assert ws["cands_credited"] > 0, (
         "sibling beam states never shared a rung evaluation "
         f"(wave_stats: {ws})")
+
+
+# --------------------------------------------------------------------------
+# trace-off overhead budget (the telemetry layer's pay-for-use guarantee)
+# --------------------------------------------------------------------------
+def test_trace_off_overhead_budget():
+    """With no trace session the telemetry layer must cost nothing that a
+    counter can see: identical evaluation counts to a run before the layer
+    existed, a shared null-span singleton (zero allocations per span() on
+    the disabled path), and zero buffered events."""
+    from repro.core import telemetry
+
+    assert not telemetry.on()
+    # disabled span() returns one shared singleton — no per-call object
+    assert telemetry.span("a", _cat="x") is telemetry.span("b", _cat="y")
+
+    caching.clear_all()
+    caching.reset_counts()
+    model = HlsModel()
+    res = auto_dse(mm3(64).fn, model=model)
+    assert res.report.feasible
+    off_counts = dict(caching.COUNTS)
+    off_stats = model.stats.as_dict()
+    # the exact budget of the pre-telemetry engine still holds untraced
+    analysis = (off_counts["selfdep_evals"] + off_counts["legal_evals"]
+                + off_counts["trip_evals"] + model.stats.full_node_evals)
+    assert analysis <= ANALYSIS_EVAL_BUDGET
+
+    # tracing on: counters that drive search decisions must not move —
+    # telemetry only *reads* them (deltas), never issues analyses
+    import tempfile
+    caching.clear_all()
+    caching.reset_counts()
+    model_on = HlsModel()
+    with tempfile.TemporaryDirectory() as d:
+        res_on = auto_dse(mm3(64).fn, model=model_on,
+                          trace_path=f"{d}/t.json")
+    assert res_on.report == res.report
+    assert dict(caching.COUNTS) == off_counts
+    assert model_on.stats.as_dict() == off_stats

@@ -178,6 +178,33 @@ def test_dump_hook_single_stage(capsys):
     assert "[loops]" in err and "[poly]" not in err
 
 
+@pytest.mark.parametrize("stage", ["graph", "poly", "loops", "taskgraph",
+                                   "backend"])
+def test_dump_hook_selects_exactly_one_stage(capsys, stage):
+    # bicg is multi-statement, so even the taskgraph dump has a region
+    # analysis to print; every other stage tag must stay silent
+    compile(WORKLOADS["bicg"]().fn, target="hls", dump=stage)
+    err = capsys.readouterr().err
+    assert f"POM_DUMP_IR [{stage}]" in err
+    for other in ("graph", "poly", "loops", "taskgraph", "backend"):
+        if other != stage:
+            assert f"[{other}]" not in err
+
+
+def test_dump_hook_unknown_stage_warns(capsys):
+    with pytest.warns(pom.PomWarning, match="unknown_dump_stage"):
+        compile(WORKLOADS["gemm"]().fn, target="hls", dump="loopz")
+    # nothing dumped for the unknown name — it warns instead of silence
+    assert "POM_DUMP_IR" not in capsys.readouterr().err
+
+
+def test_dump_hook_env_toggle(capsys, monkeypatch):
+    monkeypatch.setenv("POM_DUMP_IR", "graph")
+    compile(WORKLOADS["gemm"]().fn, target="hls")
+    err = capsys.readouterr().err
+    assert "POM_DUMP_IR [graph]" in err and "[loops]" not in err
+
+
 # --------------------------------------------------------------------------
 # verification is counter-neutral
 # --------------------------------------------------------------------------
