@@ -28,6 +28,13 @@ Counters, unlike wall time, are stable on shared hardware; both engines
 must produce identical action logs and DesignReports (checked here and in
 ``tests/test_incremental_dse.py``).
 
+Bound-and-confirm columns: ``incremental_confirmed_evals`` /
+``incremental_pruned_candidates`` count the rung candidates that reached
+a full ``node_report`` confirmation vs those the admissible closed-form
+latency lower bound pruned (``POM_BOUND_PRUNE``); each strategy row's
+telemetry carries the same pair.  The ``--check`` gate fails on a >10%
+confirmed-eval regression alongside the analysis-eval gate.
+
 The ``conv_stack`` workload mirrors ``bench_apps.run_dnn``'s per-layer
 pattern (unoptimized report + full-budget DSE + split-budget DSE over a
 ResNet-style stack with repeated layer shapes) — the exact load that made
@@ -99,6 +106,8 @@ def _run_workload(builders: List[Callable], max_parallel: int,
     t0 = time.perf_counter()
     full_evals = 0
     analytic_evals = 0
+    confirmed = 0
+    pruned = 0
     actions: List[List[str]] = []
     latencies: List[int] = []
     for build in builders:
@@ -117,6 +126,8 @@ def _run_workload(builders: List[Callable], max_parallel: int,
                 latencies.append(model.design_report(fn).latency)
             full_evals += model.stats.full_node_evals
             analytic_evals += model.stats.analytic_node_evals
+            confirmed += model.stats.confirmed_evals
+            pruned += model.stats.pruned_candidates
     seconds = time.perf_counter() - t0
     c = caching.COUNTS
     analysis = (c["selfdep_evals"] + c["legal_evals"] + c["trip_evals"]
@@ -125,6 +136,7 @@ def _run_workload(builders: List[Callable], max_parallel: int,
                  + c["trip_transfers"] + analytic_evals)
     return {"seconds": seconds, "full_node_evals": full_evals,
             "analysis_evals": analysis, "transfers": transfers,
+            "confirmed_evals": confirmed, "pruned_candidates": pruned,
             "actions": actions, "latencies": latencies}
 
 
@@ -170,7 +182,8 @@ def _measure_strategies(builders: List[Callable],
             cost = 0
             resources: Dict[str, float] = {}
             tel = {"analysis_evals": 0, "dedup_credits": 0,
-                   "pool_retries": 0}
+                   "pool_retries": 0, "confirmed_evals": 0,
+                   "pruned_candidates": 0}
             t0 = time.perf_counter()
             for build in builders:
                 res = auto_dse(build(), max_parallel=max_parallel, **kw)
@@ -183,6 +196,10 @@ def _measure_strategies(builders: List[Callable],
                     "cands_credited", 0)
                 tel["pool_retries"] += (t.get("pool") or {}).get(
                     "retries", 0)
+                tel["confirmed_evals"] += (t.get("cost") or {}).get(
+                    "confirmed_evals", 0)
+                tel["pruned_candidates"] += (t.get("cost") or {}).get(
+                    "pruned_candidates", 0)
             walls[label].append(time.perf_counter() - t0)
             out[label] = {"seconds": 0.0,
                           "repeats": STRATEGY_REPEATS,
@@ -258,6 +275,8 @@ def measure(name: str, builders: List[Callable], max_parallel: int = 256,
         "analysis_eval_reduction": round(
             base["analysis_evals"] / max(inc["analysis_evals"], 1), 2),
         "incremental_transfers": inc["transfers"],
+        "incremental_confirmed_evals": inc["confirmed_evals"],
+        "incremental_pruned_candidates": inc["pruned_candidates"],
         "identical_results": identical,
         "strategies": _measure_strategies(builders, max_parallel),
         "dataflow": _measure_dataflow(builders, max_parallel),
@@ -321,13 +340,19 @@ def counters_only() -> List[Dict]:
         out.append({"workload": name,
                     "incremental_analysis_evals": inc["analysis_evals"],
                     "incremental_full_node_evals": inc["full_node_evals"],
-                    "incremental_transfers": inc["transfers"]})
+                    "incremental_transfers": inc["transfers"],
+                    "incremental_confirmed_evals": inc["confirmed_evals"],
+                    "incremental_pruned_candidates":
+                        inc["pruned_candidates"]})
     return out
 
 
 def check_against_snapshot(path: str, tolerance: float = 0.10) -> int:
-    """Fail (non-zero) if any workload's ``incremental_analysis_evals``
-    regresses more than ``tolerance`` above the committed snapshot."""
+    """Fail (non-zero) if any workload's ``incremental_analysis_evals`` or
+    ``incremental_confirmed_evals`` regresses more than ``tolerance`` above
+    the committed snapshot.  Snapshots written before bound-and-confirm
+    pruning existed lack the confirmed-eval column; those skip that gate
+    (regenerating the snapshot arms it)."""
     with open(path) as fh:
         snap = {r["workload"]: r for r in json.load(fh)["results"]}
     failures = 0
@@ -338,15 +363,63 @@ def check_against_snapshot(path: str, tolerance: float = 0.10) -> int:
             print(f"{name}: not in snapshot, measured "
                   f"{row['incremental_analysis_evals']} (new workload?)")
             continue
-        committed = ref["incremental_analysis_evals"]
-        measured = row["incremental_analysis_evals"]
-        limit = int(committed * (1 + tolerance))
-        status = "OK" if measured <= limit else "REGRESSED"
-        if measured > limit:
-            failures += 1
-        print(f"{name}: analysis_evals {measured} vs committed {committed} "
-              f"(limit {limit}) {status}")
+        for col, short in (("incremental_analysis_evals", "analysis_evals"),
+                           ("incremental_confirmed_evals",
+                            "confirmed_evals")):
+            committed = ref.get(col)
+            if committed is None:
+                print(f"{name}: {short} not in snapshot (pre-pruning "
+                      f"snapshot?), measured {row[col]}")
+                continue
+            measured = row[col]
+            limit = int(committed * (1 + tolerance))
+            status = "OK" if measured <= limit else "REGRESSED"
+            if measured > limit:
+                failures += 1
+            print(f"{name}: {short} {measured} vs committed {committed} "
+                  f"(limit {limit}) {status}")
     return failures
+
+
+def beam_microbench(repeats: int = 3) -> Dict:
+    """Multi-core beam validation: wall-clock of the pooled wave beam
+    (``beam:4:parallel:2``) against the serial greedy ladder on the two
+    divergent-state workloads, on whatever host runs it.
+
+    Emits ``BENCH_beam_multicore.json`` (atomic) with the per-workload
+    ``beam_scaling`` ratio and the host ``cpus`` — the CI artifact the
+    ROADMAP's "multi-core validation" item asks for.  On a single-core
+    host the pooled wave degrades to the bit-identical serial wave, so
+    the ratio there measures algorithmic dedup only; with >= 2 cores the
+    wave dispatch should pull divergent-state workloads (3mm, conv_chain)
+    toward 1x."""
+    cases = [("gemm", [lambda: gemm(64).fn], 256),
+             ("3mm", [lambda: mm3(64).fn], 256),
+             ("conv_chain", [lambda: conv_chain(20, (3, 8, 8)).fn], 16)]
+    rows = []
+    for name, builders, mp in cases:
+        walls = {"greedy": [], "beam4_parallel2": []}
+        for _ in range(repeats):
+            for label, kw in (("greedy", {}),
+                              ("beam4_parallel2",
+                               {"strategy": "beam:4:parallel:2"})):
+                caching.clear_all()
+                caching.reset_counts()
+                t0 = time.perf_counter()
+                for build in builders:
+                    auto_dse(build(), max_parallel=mp, **kw)
+                walls[label].append(time.perf_counter() - t0)
+        g = min(walls["greedy"])
+        b = min(walls["beam4_parallel2"])
+        rows.append({"workload": name, "greedy_seconds": round(g, 3),
+                     "beam4_parallel2_seconds": round(b, 3),
+                     "beam_scaling": round(b / max(g, 1e-9), 2)})
+    snap = {"suite": "beam_multicore", "cpus": os.cpu_count(),
+            "results": rows}
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_beam_multicore.json")
+    atomic_write_json(path, snap)
+    return snap
 
 
 def main() -> None:
@@ -355,7 +428,12 @@ def main() -> None:
     ap.add_argument("--check", action="store_true",
                     help="counter-only run, compared against the committed "
                          "BENCH_dse_speed.json; exits non-zero on a >10%% "
-                         "analysis-eval regression")
+                         "analysis-eval or confirmed-eval regression")
+    ap.add_argument("--microbench", action="store_true",
+                    help="multi-core beam wall-clock microbench "
+                         "(beam:4:parallel:2 vs greedy); writes "
+                         "BENCH_beam_multicore.json with beam_scaling + "
+                         "host cpus")
     ap.add_argument("--snapshot", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_dse_speed.json"))
@@ -364,6 +442,10 @@ def main() -> None:
     if args.check:
         failures = check_against_snapshot(args.snapshot, args.tolerance)
         raise SystemExit(1 if failures else 0)
+    if args.microbench:
+        snap = beam_microbench()
+        print(json.dumps(snap, indent=2))
+        return
     for line in csv_rows():
         print(line)
 
@@ -399,6 +481,8 @@ def csv_rows() -> List[str]:
             f"({r['analysis_eval_reduction']}x);"
             f"full_node_evals={r['baseline_full_node_evals']}->"
             f"{r['incremental_full_node_evals']};"
+            f"confirmed_evals={r['incremental_confirmed_evals']}"
+            f"(+{r['incremental_pruned_candidates']} pruned);"
             f"identical={r['identical_results']};"
             f"greedy_cost={strat['greedy']['best_cost']};"
             f"beam2_cost={strat['beam2']['best_cost']};"

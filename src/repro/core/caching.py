@@ -38,6 +38,17 @@ ENABLED: bool = True
 # bit-identical.
 ANALYTIC: bool = os.environ.get("POM_ANALYTIC_TRANSFER", "1") != "0"
 
+# Bound-and-confirm rung evaluation (branch-and-bound over a rung's
+# candidate set): when on, the evaluators order candidates by an admissible
+# closed-form latency lower bound and confirm with a full ``node_report``
+# only those whose bound could still beat the best confirmed bottleneck
+# latency.  The bound rides on the same ``ClosedFormII`` sweep the analytic
+# layer builds per rung, so pruning is only active when ``analytic_on()``;
+# ``POM_BOUND_PRUNE=0`` restores exhaustive per-candidate evaluation.
+# Selected designs/actions/reports are bit-identical either way — pruning
+# only skips candidates whose bound proves they cannot win the rung.
+BOUND_PRUNE: bool = os.environ.get("POM_BOUND_PRUNE", "1") != "0"
+
 COUNTS: Dict[str, int] = {
     "selfdep_evals": 0, "selfdep_hits": 0, "selfdep_transfers": 0,
     "legal_evals": 0, "legal_hits": 0, "legal_transfers": 0,
@@ -59,6 +70,16 @@ def set_analytic(value: bool) -> None:
 def analytic_on() -> bool:
     """Analytic transfer is layered on the incremental caches."""
     return ENABLED and ANALYTIC
+
+
+def set_bound_prune(value: bool) -> None:
+    global BOUND_PRUNE
+    BOUND_PRUNE = bool(value)
+
+
+def bound_prune_on() -> bool:
+    """Bound-and-confirm pruning is layered on the analytic sweep."""
+    return analytic_on() and BOUND_PRUNE
 
 
 def reset_counts() -> None:
@@ -251,6 +272,20 @@ def analytic_disabled():
         yield
     finally:
         ANALYTIC = prev
+
+
+@contextmanager
+def bound_prune_disabled():
+    """Run a block with exhaustive rung evaluation: every candidate gets a
+    full ``node_report``, no bound ordering, no early stop — the reference
+    engine the bound-and-confirm bit-identity tests compare against."""
+    global BOUND_PRUNE
+    prev = BOUND_PRUNE
+    BOUND_PRUNE = False
+    try:
+        yield
+    finally:
+        BOUND_PRUNE = prev
 
 
 @contextmanager

@@ -209,6 +209,12 @@ class CostStats:
     design_evals: int = 0        # design_report calls
     design_cache_hits: int = 0   # ... served entirely from cache
     analytic_node_evals: int = 0  # closed-form (transfer-fed) recurrence IIs
+    # bound-and-confirm rung evaluation (POM_BOUND_PRUNE): candidates whose
+    # full design report was actually computed vs candidates whose latency
+    # lower bound proved they could not win the rung.  With pruning off,
+    # confirmed_evals counts every applied candidate and pruned stays 0.
+    confirmed_evals: int = 0
+    pruned_candidates: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         """JSON-ready counter dict (the telemetry/metrics schema)."""
@@ -217,7 +223,9 @@ class CostStats:
                 "full_node_evals": self.full_node_evals,
                 "design_evals": self.design_evals,
                 "design_cache_hits": self.design_cache_hits,
-                "analytic_node_evals": self.analytic_node_evals}
+                "analytic_node_evals": self.analytic_node_evals,
+                "confirmed_evals": self.confirmed_evals,
+                "pruned_candidates": self.pruned_candidates}
 
     def delta(self, since: "CostStats") -> Dict[str, int]:
         """Counter movement since a snapshot (``copy.copy(stats)``)."""
@@ -520,8 +528,37 @@ class HlsModel:
         bounds = stmt.dim_bounds()
         if any(d not in bounds for d in stmt.dims):
             return None
+        st = self._expr_stats(stmt)
         return ClosedFormII(list(stmt.dims), dict(bounds), list(deps),
-                            _link_latency(stmt, self._expr_stats(stmt)))
+                            _link_latency(stmt, st),
+                            st.latency + STORE_LATENCY)
+
+    def latency_lower_bound(self, sweep: Optional["ClosedFormII"],
+                            factors: Tuple[int, ...]) -> Optional[int]:
+        """Admissible latency lower bound for one rung candidate.
+
+        ``node_report``'s pipelined-node latency is
+        ``outer_trip * (depth + ii * max(band_seq_trip - 1, 0))
+        + LOOP_OVERHEAD * outer_trip`` — monotone in ``ii`` at fixed trip
+        counts.  ``depth`` and the trip products are exact functions of the
+        candidate's split shape (``sweep.shape``), and the achieved II is
+        ``max(recurrence II, memory-port II, ...) >= sweep.ii(factors)``,
+        so substituting the closed-form recurrence II never over-estimates:
+        bound <= true node latency for every candidate.  Returns ``None``
+        (no bound — always confirm) when the rung has no sweep or this
+        candidate's transfer/shape is unavailable."""
+        if sweep is None:
+            return None
+        key = tuple(factors)
+        ii = sweep.ii(key)
+        if ii is None:
+            return None
+        shape = sweep.shape(key)
+        if shape is None:
+            return None
+        outer_trip, band_seq_trip = shape
+        return (outer_trip * (sweep.depth + ii * max(band_seq_trip - 1, 0))
+                + LOOP_OVERHEAD * outer_trip)
 
     def _ref_dims(self, s: Statement) -> Tuple:
         """Per access ref of ``s``: (array name, frozenset of loop dims its
@@ -835,7 +872,10 @@ class ClosedFormII:
     bounds: Dict[str, Tuple[int, int]]
     deps: List
     link: int
+    depth: int = 0               # pipeline depth (iter latency) of the body
     _memo: Dict[Tuple[int, ...], Optional[int]] = field(
+        default_factory=dict, repr=False, compare=False)
+    _shape_memo: Dict[Tuple[int, ...], Optional[Tuple[int, int]]] = field(
         default_factory=dict, repr=False, compare=False)
 
     def ii(self, factors: Tuple[int, ...]) -> Optional[int]:
@@ -846,6 +886,55 @@ class ClosedFormII:
         val = self._compute_ii(key)
         self._memo[key] = val
         return val
+
+    def shape(self, factors: Tuple[int, ...]
+              ) -> Optional[Tuple[int, int]]:
+        """(outer_trip, band_seq_trip) of the candidate's pipelined node —
+        the exact trip products ``_node_report_compute`` aggregates, derived
+        by replaying the candidate's splits on the rung-base loop bounds
+        (no dependence transfer involved).  ``None`` for candidates the
+        ladder would reject; memoized per rung like ``ii``."""
+        key = tuple(factors)
+        hit = self._shape_memo.get(key, _II_MISS)
+        if hit is not _II_MISS:
+            return hit
+        val = self._compute_shape(key)
+        self._shape_memo[key] = val
+        return val
+
+    def _compute_shape(self, factors: Tuple[int, ...]
+                       ) -> Optional[Tuple[int, int]]:
+        from .ir import _apply_trip_op
+        dims = list(self.dims)
+        k = len(factors)
+        if k > len(dims):
+            return None
+        trips0 = {d: up - lo + 1 for d, (lo, up) in self.bounds.items()}
+        targets = dims[-k:]
+        for d, f in zip(targets, factors):
+            if f > trips0.get(d, 1):
+                return None
+        bounds = dict(self.bounds)
+        new_inner: List[str] = []
+        for d, f in zip(targets, factors):
+            if f <= 1:
+                continue
+            d0, d1 = d + "_o", d + "_u"
+            pos = dims.index(d)
+            bounds = _apply_trip_op(bounds, ("split", d, f, d0, d1))
+            dims[pos:pos + 1] = [d0, d1]
+            new_inner.append(d1)
+        outer = [x for x in dims if x not in new_inner]
+        if not outer:
+            return None
+        trips = {d: max(0, up - lo + 1) for d, (lo, up) in bounds.items()}
+        # the pipeline sits at outer[-1]: the band is [outer[-1]] + the
+        # unrolled intra-tile dims, whose unroll factor equals their trip
+        # (each contributes ceil(t/f) == 1 initiation)
+        outer_trip = 1
+        for d in outer[:-1]:
+            outer_trip *= trips.get(d, 1)
+        return outer_trip, trips.get(outer[-1], 1)
 
     def prefetch(self, factor_lists, threads: Optional[int] = None) -> None:
         """Fill the memo for ``factor_lists`` (a rung's candidate set).

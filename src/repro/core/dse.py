@@ -432,6 +432,7 @@ def auto_dse(fn: Function, target: str = "fpga", max_parallel: int = 256,
         "analysis_evals": caching.analysis_evals(counts),
         "caching": counts,
         "cost": model.stats.delta(stats0),
+        "bound_prune": caching.bound_prune_on(),
         "wave": wave or None,
         "pool": {k[len("pool."):]: pool1.get(k, 0) - pool0.get(k, 0)
                  for k in sorted(set(pool0) | set(pool1))},

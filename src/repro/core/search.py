@@ -62,6 +62,7 @@ directly.
 from __future__ import annotations
 
 import copy
+import functools
 import json
 import multiprocessing
 import os
@@ -115,10 +116,8 @@ def _restore_fn(fn: Function, snap) -> None:
 # --------------------------------------------------------------------------
 # candidate generation
 # --------------------------------------------------------------------------
-def unroll_candidates(P: int) -> List[Tuple[int, ...]]:
-    """Factor splits of P over the two innermost dims (innermost-only,
-    mixed, and outer-only — the outer-only shape parallelises independent
-    recurrence chains, e.g. BICG's row dimension)."""
+@functools.lru_cache(maxsize=None)
+def _unroll_candidates_cached(P: int) -> Tuple[Tuple[int, ...], ...]:
     out = [(P,)]
     f = 2
     while f * f <= P * 2 and f <= P:
@@ -127,7 +126,17 @@ def unroll_candidates(P: int) -> List[Tuple[int, ...]]:
         f *= 2
     if P > 1:
         out.append((P, 1))
-    return out
+    return tuple(out)
+
+
+def unroll_candidates(P: int) -> List[Tuple[int, ...]]:
+    """Factor splits of P over the two innermost dims (innermost-only,
+    mixed, and outer-only — the outer-only shape parallelises independent
+    recurrence chains, e.g. BICG's row dimension).  A pure function of
+    ``P``, recomputed several times per rung (generation, dispatch,
+    wave tallies) — memoized, returning a fresh list per call so callers
+    may mutate their copy."""
+    return list(_unroll_candidates_cached(P))
 
 
 def apply_parallel(stmt: Statement, factors: Tuple[int, ...]) -> bool:
@@ -467,6 +476,102 @@ def _critical_bottleneck(ctx: SearchContext, st: LadderState) -> Optional[int]:
 
 
 # --------------------------------------------------------------------------
+# bound-and-confirm rung planning (POM_BOUND_PRUNE)
+# --------------------------------------------------------------------------
+# A rung's closed-form sweep yields an *admissible latency lower bound*
+# per candidate (``HlsModel.latency_lower_bound``): the exact pipelined-
+# node latency formula with the closed-form recurrence II substituted for
+# the achieved II (achieved = max(recurrence, memory-port, ...) >= it).
+# The evaluators use it in two ways, both preserving bit-identity with
+# exhaustive evaluation:
+#
+# * **static rule** (branching beams): confirm exactly the candidates
+#   whose bound could still beat the rung's pre-evaluation bottleneck
+#   latency (``bound is None or bound < cutoff``).  A pruned candidate
+#   has node latency >= bound >= cutoff, so it can neither win
+#   ``_rung_finish``'s strict-improvement accept nor pass ``_branches``'s
+#   strict-improvement filter — the full candidate list minus provable
+#   losers.
+# * **two-round rule** (single-trajectory ladders, where only the argmin
+#   matters): round 1 confirms every unbounded candidate plus the lowest-
+#   bounded one; round 2 confirms only candidates whose bound could still
+#   beat round 1's best confirmed node latency (generation-order tiebreak:
+#   an equal bound survives only if it precedes the incumbent, since the
+#   argmin's first-strict-improvement rule lets an earlier equal-latency
+#   candidate win).  Both the serial and pooled evaluators run this same
+#   deterministic plan, so merged counters stay equal to serial's.
+def _bound_plan(model: HlsModel, sweep,
+                factor_list: Sequence[Tuple[int, ...]], cutoff: int
+                ) -> Tuple[List[Optional[int]], List[int]]:
+    """Per-candidate latency lower bounds + the static confirm frontier
+    (generation-order indices).  Charges ``pruned_candidates`` for the
+    statically excluded ones."""
+    bounds = [model.latency_lower_bound(sweep, f) for f in factor_list]
+    frontier = [i for i, b in enumerate(bounds) if b is None or b < cutoff]
+    dropped = len(factor_list) - len(frontier)
+    if dropped:
+        model.stats.pruned_candidates += dropped
+        telemetry.REGISTRY.counter("dse.pruned_candidates").inc(dropped)
+    return bounds, frontier
+
+
+def _round_one(bounds: List[Optional[int]], frontier: List[int]
+               ) -> Tuple[List[int], List[int]]:
+    """Split the frontier into round 1 (all unbounded candidates + the
+    lowest-bounded one, in generation order) and the remaining bounded
+    candidates in (bound, generation index) order."""
+    bounded = sorted((i for i in frontier if bounds[i] is not None),
+                     key=lambda i: (bounds[i], i))
+    first = [i for i in frontier if bounds[i] is None]
+    if bounded:
+        first = sorted(first + bounded[:1])
+    return first, bounded[1:]
+
+
+def _round_two(model: HlsModel, bounds: List[Optional[int]],
+               rest: List[int], best: Optional[Tuple[int, int]]
+               ) -> List[int]:
+    """Candidates of ``rest`` whose bound could still beat round 1's best
+    confirmed ``(node latency, generation index)``; the others are pruned.
+    With no feasible round-1 candidate every remaining one is confirmed."""
+    if best is None:
+        keep = sorted(rest)
+    else:
+        lat1, i1 = best
+        keep = sorted(j for j in rest
+                      if bounds[j] < lat1 or (bounds[j] == lat1 and j < i1))
+    dropped = len(rest) - len(keep)
+    if dropped:
+        model.stats.pruned_candidates += dropped
+        telemetry.REGISTRY.counter("dse.pruned_candidates").inc(dropped)
+    return keep
+
+
+def _best_candidate(s: Statement, cands: Sequence["Candidate"]
+                    ) -> Optional["Candidate"]:
+    """The rung argmin: feasible candidate with the lowest bottleneck-node
+    latency, first strict improvement winning ties (shared by
+    ``_rung_finish`` and the two-round confirm plan)."""
+    best = None
+    for c in cands:
+        if not c.report.feasible:
+            continue
+        if best is None or (c.report.nodes[s.name].latency
+                            < best.report.nodes[s.name].latency):
+            best = c
+    return best
+
+
+def _round_best(s: Statement, cands: Sequence["Candidate"],
+                pos: Dict[Tuple[int, ...], int]
+                ) -> Optional[Tuple[int, int]]:
+    best = _best_candidate(s, cands)
+    if best is None:
+        return None
+    return best.report.nodes[s.name].latency, pos[best.factors]
+
+
+# --------------------------------------------------------------------------
 # candidate evaluation (serial / worker pool)
 # --------------------------------------------------------------------------
 class SerialEvaluator:
@@ -474,7 +579,9 @@ class SerialEvaluator:
     exactly the inner loop of the pre-subsystem greedy ladder.  When the
     rung has a closed-form sweep, each applied candidate's recurrence II
     is primed from it (``prime_recurrence_ii``), so the design report's
-    II lookup is a dictionary hit."""
+    II lookup is a dictionary hit; with bound pruning on
+    (``POM_BOUND_PRUNE``) the sweep additionally prunes candidates whose
+    latency lower bound proves they cannot win the rung."""
 
     workers = 1
 
@@ -482,12 +589,38 @@ class SerialEvaluator:
         """Evaluators own no resources by default (pool symmetry)."""
 
     def evaluate(self, ctx: SearchContext, st: LadderState, s: Statement,
-                 uid: int, P: int, sweep=None) -> List[Candidate]:
+                 uid: int, P: int, sweep=None, cutoff: Optional[int] = None,
+                 branching: bool = False) -> List[Candidate]:
+        factor_list = [tuple(f) for f in unroll_candidates(P)]
+        if not (caching.bound_prune_on() and sweep is not None):
+            return self.evaluate_factors(ctx, st, s, uid, factor_list, sweep)
+        if cutoff is None:
+            cutoff = st.report.nodes[s.name].latency
+        bounds, frontier = _bound_plan(ctx.model, sweep, factor_list, cutoff)
+        if branching:
+            return self.evaluate_factors(
+                ctx, st, s, uid, [factor_list[i] for i in frontier], sweep)
+        first, rest = _round_one(bounds, frontier)
+        pre = self.evaluate_factors(
+            ctx, st, s, uid, [factor_list[i] for i in first], sweep)
+        pos = {f: i for i, f in enumerate(factor_list)}
+        confirm = _round_two(ctx.model, bounds, rest,
+                             _round_best(s, pre, pos))
+        out = self.evaluate_factors(
+            ctx, st, s, uid, [factor_list[i] for i in confirm], sweep)
+        return sorted(pre + out, key=lambda c: pos[c.factors])
+
+    def evaluate_factors(self, ctx: SearchContext, st: LadderState,
+                         s: Statement, uid: int,
+                         factor_list: Sequence[Tuple[int, ...]],
+                         sweep) -> List[Candidate]:
+        """Confirm an explicit candidate subset with full design reports,
+        in the given (generation) order — the pre-pruning evaluator loop."""
         out: List[Candidate] = []
         base = st.base_snaps[uid]
         base_key = _snap_sched_sig(uid, base)
         t_on = telemetry.on()
-        for factors in unroll_candidates(P):
+        for factors in factor_list:
             if not _apply_candidate(ctx.fn, ctx.model, s, base, base_key,
                                     sweep, tuple(factors)):
                 if t_on:
@@ -502,6 +635,7 @@ class SerialEvaluator:
                     sp.add(feasible=rep.feasible, latency=rep.latency)
             else:
                 rep = ctx.design_report()
+            ctx.model.stats.confirmed_evals += 1
             out.append(Candidate(tuple(factors), rep, _snapshot(s)))
         return out
 
@@ -606,15 +740,12 @@ def _checkpoint(fn: Function, model: HlsModel) -> _Checkpoint:
 
 def _phase_delta(fn: Function, model: HlsModel, cp: _Checkpoint
                  ) -> Tuple[Dict[str, int], CostStats, Dict]:
+    import dataclasses
     counts = caching.counts_delta(cp.counts)
     st = model.stats
-    stats = CostStats(
-        st.node_evals - cp.stats.node_evals,
-        st.node_cache_hits - cp.stats.node_cache_hits,
-        st.full_node_evals - cp.stats.full_node_evals,
-        st.design_evals - cp.stats.design_evals,
-        st.design_cache_hits - cp.stats.design_cache_hits,
-        st.analytic_node_evals - cp.stats.analytic_node_evals)
+    stats = CostStats(**{f.name: getattr(st, f.name)
+                         - getattr(cp.stats, f.name)
+                         for f in dataclasses.fields(CostStats)})
     return counts, stats, _cache_delta(fn, model, cp.keys)
 
 
@@ -744,6 +875,10 @@ def _merge_phase(ctx: SearchContext, delta: Dict,
     ms.analytic_node_evals += stats.analytic_node_evals - rec_ii_xfer
     ms.design_evals += stats.design_evals
     ms.design_cache_hits += stats.design_cache_hits + conv["design"]
+    # bound-and-confirm counters are charged parent-side only (workers
+    # never move them); the pass-through keeps the merge future-proof
+    ms.confirmed_evals += stats.confirmed_evals
+    ms.pruned_candidates += stats.pruned_candidates
 
 
 def _merge_candidate_result(ctx: SearchContext, res: _CandidateResult) -> None:
@@ -1310,11 +1445,13 @@ class PoolEvaluator:
                 ctx.model.prime_recurrence_ii(s, sweep, factors)
                 _refresh_partitions(ctx.fn)
                 rep = ctx.model.design_report(ctx.fn)
+                ctx.model.stats.confirmed_evals += 1
                 out.append(Candidate(factors, rep, _snapshot(s)))
                 continue
             _merge_candidate_result(ctx, res)
             if not res.ok:
                 continue
+            ctx.model.stats.confirmed_evals += 1
             out.append(Candidate(factors, res.report, res.snap[:5] + (base[5],)))
         return out
 
@@ -1329,21 +1466,62 @@ class PoolEvaluator:
                 _restore_node(ctx.fn, s, c.snap)
                 ctx.record(c.report)
 
+    def _pool_worth_it(self, n: int) -> bool:
+        return not (self.workers <= 1 or n < self.min_candidates
+                    or self._degraded or not self._fork_available())
+
     def evaluate(self, ctx: SearchContext, st: LadderState, s: Statement,
-                 uid: int, P: int, sweep=None) -> List[Candidate]:
+                 uid: int, P: int, sweep=None, cutoff: Optional[int] = None,
+                 branching: bool = False) -> List[Candidate]:
         factor_list = [tuple(f) for f in unroll_candidates(P)]
-        if (self.workers <= 1 or len(factor_list) < self.min_candidates
-                or self._degraded or not self._fork_available()):
-            return self._serial.evaluate(ctx, st, s, uid, P, sweep)
+        if not (caching.bound_prune_on() and sweep is not None):
+            if not self._pool_worth_it(len(factor_list)):
+                return self._serial.evaluate(ctx, st, s, uid, P, sweep,
+                                             cutoff=cutoff,
+                                             branching=branching)
+            base = st.base_snaps[uid]
+            results = self._pooled_results(ctx, s, uid, base, sweep,
+                                           factor_list)
+            out = self._merge_results(ctx, s, base, sweep, factor_list,
+                                      results)
+            self._record_archive(ctx, s, out)
+            return out
+        # bound-and-confirm: same deterministic plan as the serial
+        # evaluator (the counter-parity reference); each confirmation
+        # round of the bound-sorted frontier goes to the pool.  The
+        # worth-it gate counts the rung's *full* candidate set, not the
+        # round's subset, so whether a rung dispatches to the pool never
+        # depends on the prune mode (fault-injection and degrade paths
+        # pin dispatch behavior).
+        if cutoff is None:
+            cutoff = st.report.nodes[s.name].latency
         base = st.base_snaps[uid]
-        results = self._pooled_results(ctx, s, uid, base, sweep, factor_list)
-        out = self._merge_results(ctx, s, base, sweep, factor_list, results)
-        self._record_archive(ctx, s, out)
-        return out
+        bounds, frontier = _bound_plan(ctx.model, sweep, factor_list, cutoff)
+        pos = {f: i for i, f in enumerate(factor_list)}
+
+        def _round(idxs: List[int]) -> List[Candidate]:
+            sub = [factor_list[i] for i in idxs]
+            if not sub or not self._pool_worth_it(len(factor_list)):
+                return self._serial.evaluate_factors(ctx, st, s, uid, sub,
+                                                     sweep)
+            results = self._pooled_results(ctx, s, uid, base, sweep, sub)
+            out = self._merge_results(ctx, s, base, sweep, sub, results)
+            self._record_archive(ctx, s, out)
+            return out
+
+        if branching:
+            return _round(list(frontier))
+        first, rest = _round_one(bounds, frontier)
+        pre = _round(first)
+        confirm = _round_two(ctx.model, bounds, rest,
+                             _round_best(s, pre, pos))
+        out = _round(confirm)
+        return sorted(pre + out, key=lambda c: pos[c.factors])
 
     # -- wave evaluation (parallel beam) -------------------------------------
     def evaluate_wave(self, ctx: SearchContext,
-                      entries: List[Tuple[Any, "_PendingRung"]]
+                      entries: List[Tuple[Any, "_PendingRung"]],
+                      factors: Optional[List[List[Tuple[int, ...]]]] = None
                       ) -> Dict[int, List[Optional[_CandidateResult]]]:
         """Dispatch the union of several beam states' rung candidates to
         the warm pool in one wave.
@@ -1362,8 +1540,18 @@ class PoolEvaluator:
         then ``("wcand", sid, idx, factors)`` messages.  The parent
         merges results in **state order, candidate order** — never
         completion order — via :meth:`merge_wave_rung`, so counters and
-        designs replay a serial beam exactly."""
+        designs replay a serial beam exactly.
+
+        ``factors`` (bound-and-confirm pruning) optionally narrows each
+        entry's dispatched candidate set to its confirmed frontier — the
+        protocol is unchanged, workers simply receive the subset."""
         import pickle
+        eff = ([list(f) for f in factors] if factors is not None
+               else [list(p.factors) for _, p in entries])
+        # the worth-it gate counts the rung's *full* candidate sets, not
+        # the confirmed frontier: pruning shrinks the payload, but whether
+        # a wave goes to the pool must not depend on the prune mode (the
+        # fault-injection and degrade paths pin dispatch behavior)
         total = sum(len(p.factors) for _, p in entries)
         if (self.workers <= 1 or self._degraded or not entries
                 or not self._fork_available()
@@ -1374,7 +1562,7 @@ class PoolEvaluator:
         delta = _cache_delta(ctx.fn, ctx.model, self._sync_keys)
         self._sync_keys = _cache_key_snapshot(ctx.fn, ctx.model)
         heads = [(sid, _ship_from_snapshot(snap), p.uid, p.base[:5],
-                  list(p.factors))
+                  list(eff[sid]))
                  for sid, (snap, p) in enumerate(entries)]
         header = pickle.dumps(("wave", delta, heads))
         # a worker forked mid-wave inherits the parent's caches exactly as
@@ -1389,13 +1577,12 @@ class PoolEvaluator:
             return {}
         msgs: List[tuple] = []
         slots: List[Tuple[int, int]] = []
-        for sid, (_, p) in enumerate(entries):
-            for j, factors in enumerate(p.factors):
-                msgs.append(("wcand", sid, len(msgs), factors))
+        for sid in range(len(entries)):
+            for j, facs in enumerate(eff[sid]):
+                msgs.append(("wcand", sid, len(msgs), facs))
                 slots.append((sid, j))
         results = self._collect(ctx, msgs, respawn)
-        out = {sid: [None] * len(p.factors)
-               for sid, (_, p) in enumerate(entries)}
+        out = {sid: [None] * len(eff[sid]) for sid in range(len(entries))}
         for (sid, j), r in zip(slots, results):
             out[sid][j] = r
         return out
@@ -1413,13 +1600,17 @@ class PoolEvaluator:
 
     def merge_wave_rung(self, ctx: SearchContext, s: Statement,
                         pend: "_PendingRung", sweep,
-                        results: List[Optional[_CandidateResult]]
+                        results: List[Optional[_CandidateResult]],
+                        factors: Optional[List[Tuple[int, ...]]] = None
                         ) -> List[Candidate]:
         """Merge one state's slice of a wave — the wave twin of
         ``evaluate``'s tail: candidate-order replay merge, serial fill-in
-        for missing slots, archive recording."""
+        for missing slots, archive recording.  ``factors`` narrows the
+        slice to the rung's confirmed frontier when pruning dispatched a
+        subset."""
         out = self._merge_results(ctx, s, pend.base, sweep,
-                                  pend.factors, results)
+                                  pend.factors if factors is None
+                                  else factors, results)
         self._record_archive(ctx, s, out)
         return out
 
@@ -1521,13 +1712,7 @@ def _rung_finish(ctx: SearchContext, st: LadderState, pend: _PendingRung,
     longer is one)."""
     uid, P, prev = pend.uid, pend.P, pend.prev
     s = ctx.by_uid[uid]
-    best: Optional[Candidate] = None
-    for c in cands:
-        if not c.report.feasible:
-            continue
-        if best is None or (c.report.nodes[s.name].latency
-                            < best.report.nodes[s.name].latency):
-            best = c
+    best = _best_candidate(s, cands)
     if (best is not None
             and best.report.nodes[s.name].latency < st.report.nodes[s.name].latency
             and best.report.latency <= st.report.latency):
@@ -1548,7 +1733,8 @@ def _rung_finish(ctx: SearchContext, st: LadderState, pend: _PendingRung,
     return True
 
 
-def _rung_impl(ctx: SearchContext, st: LadderState, evaluator) -> bool:
+def _rung_impl(ctx: SearchContext, st: LadderState, evaluator,
+               branching: bool = False) -> bool:
     kind, pend = _rung_begin(ctx, st)
     if kind == "done":
         return False
@@ -1556,7 +1742,8 @@ def _rung_impl(ctx: SearchContext, st: LadderState, evaluator) -> bool:
         return True
     s = ctx.by_uid[pend.uid]
     sweep = _rung_sweep(ctx, st, pend)
-    cands = evaluator.evaluate(ctx, st, s, pend.uid, pend.P, sweep)
+    cands = evaluator.evaluate(ctx, st, s, pend.uid, pend.P, sweep,
+                               branching=branching)
     return _rung_finish(ctx, st, pend, cands, sweep)
 
 
@@ -1573,23 +1760,30 @@ def _rung_telemetry(ctx: SearchContext, counts0: Dict[str, int],
                           + c["trip_transfers"]),
             "node_evals": d["node_evals"],
             "design_evals": d["design_evals"],
-            "design_cache_hits": d["design_cache_hits"]}
+            "design_cache_hits": d["design_cache_hits"],
+            "confirmed_evals": d["confirmed_evals"],
+            "pruned_candidates": d["pruned_candidates"]}
 
 
-def _rung(ctx: SearchContext, st: LadderState, evaluator) -> bool:
+def _rung(ctx: SearchContext, st: LadderState, evaluator,
+          branching: bool = False) -> bool:
     """Advance ``st`` by one rung of the bottleneck ladder (the loop body of
     the pre-subsystem ``stage2``).  Returns False when the ladder is done.
+
+    ``branching`` tells the evaluator whether runner-up candidates feed
+    beam branching (static bound pruning only) or only the argmin matters
+    (two-round pruning).
 
     With a trace active, the rung runs under a ``stage2.rung`` span
     carrying the bottleneck statement, target parallelism, accept/reject
     outcome, and the rung's eval-count / cache-hit deltas — all read from
     counters the rung moves anyway, never adding queries of its own."""
     if not telemetry.on():
-        return _rung_impl(ctx, st, evaluator)
+        return _rung_impl(ctx, st, evaluator, branching)
     counts0 = dict(caching.COUNTS)
     stats0 = copy.copy(ctx.model.stats)
     with telemetry.span("stage2.rung", _cat="dse") as sp:
-        more = _rung_impl(ctx, st, evaluator)
+        more = _rung_impl(ctx, st, evaluator, branching)
         sp.add(**_rung_telemetry(ctx, counts0, stats0))
         info = st.last_rung
         if info is not None:
@@ -1763,7 +1957,8 @@ class BeamSearch(SearchStrategy):
         _restore_fn(ctx.fn, cur.snap)
         pre = cur.clone()
         pre.lineage = False
-        progressed = _rung(ctx, cur, self.evaluator)
+        progressed = _rung(ctx, cur, self.evaluator,
+                           branching=self.width > 1)
         if not progressed:
             done.append(cur)
             return successors
@@ -1827,15 +2022,46 @@ class BeamSearch(SearchStrategy):
             pre = cur.clone()
             kind, pend = _rung_begin(ctx, cur, want_key=True)
             plans.append((cur, pre, kind, pend))
+        # bound-and-confirm: sibling states sharing a rung key may sit at
+        # different pre-rung bottleneck latencies; the shared evaluation
+        # must confirm the union of what every proposer needs, so the
+        # per-key cutoff is the MAX over proposing states (a superset
+        # frontier — still only provable losers are pruned)
+        prune = caching.bound_prune_on()
+        key_cutoff: Dict = {}
+        if prune:
+            for cur, _, kind, pend in plans:
+                if kind != "eval":
+                    continue
+                s = ctx.by_uid[pend.uid]
+                c = cur.report.nodes[s.name].latency
+                old = key_cutoff.get(pend.key)
+                key_cutoff[pend.key] = c if old is None or c > old else old
         wave_results: Dict = {}
+        wave_plans: Dict = {}
         if pool is not None:
             entries = []
             keyed = {}
+            sub_lists: Optional[List] = [] if prune else None
             for cur, _, kind, pend in plans:
                 if kind == "eval" and pend.key not in keyed:
                     keyed[pend.key] = len(entries)
                     entries.append((cur.snap, pend))
-            by_sid = pool.evaluate_wave(ctx, entries)
+                    if sub_lists is not None:
+                        # plan the confirmed frontier before dispatch (in
+                        # first-proposer order — the serial beam's sweep
+                        # order, so counters replay identically)
+                        sweep = _rung_sweep(ctx, cur, pend)
+                        if sweep is None:
+                            sub = list(pend.factors)
+                        else:
+                            _, frontier = _bound_plan(
+                                ctx.model, sweep, pend.factors,
+                                key_cutoff[pend.key])
+                            sub = [pend.factors[i] for i in frontier]
+                        wave_plans[pend.key] = (sweep, sub)
+                        sub_lists.append(sub)
+            by_sid = pool.evaluate_wave(ctx, entries, factors=sub_lists)
             wave_results = {entries[sid][1].key: res
                             for sid, res in by_sid.items()}
         ws = self.wave_stats
@@ -1858,16 +2084,31 @@ class BeamSearch(SearchStrategy):
                 ws["rungs_credited"] += 1
                 ws["cands_credited"] += len(pend.factors)
             else:
-                sweep = _rung_sweep(ctx, cur, pend)
-                res_list = wave_results.get(pend.key)
-                if res_list is None:
-                    serial = pool._serial if pool is not None \
-                        else self.evaluator
-                    cands = serial.evaluate(ctx, cur, s, pend.uid, pend.P,
-                                            sweep)
+                plan = wave_plans.get(pend.key)
+                if plan is not None:
+                    # pooled + pruning: sweep and confirmed frontier were
+                    # computed at dispatch time; never re-plan (the
+                    # pruned-candidate charge already happened there)
+                    sweep, sub = plan
+                    res_list = wave_results.get(pend.key)
+                    if res_list is None:
+                        cands = pool._serial.evaluate_factors(
+                            ctx, cur, s, pend.uid, sub, sweep)
+                    else:
+                        cands = pool.merge_wave_rung(ctx, s, pend, sweep,
+                                                     res_list, factors=sub)
                 else:
-                    cands = pool.merge_wave_rung(ctx, s, pend, sweep,
-                                                 res_list)
+                    sweep = _rung_sweep(ctx, cur, pend)
+                    res_list = wave_results.get(pend.key)
+                    if res_list is None:
+                        serial = pool._serial if pool is not None \
+                            else self.evaluator
+                        cands = serial.evaluate(
+                            ctx, cur, s, pend.uid, pend.P, sweep,
+                            cutoff=key_cutoff.get(pend.key), branching=True)
+                    else:
+                        cands = pool.merge_wave_rung(ctx, s, pend, sweep,
+                                                     res_list)
                 shared[pend.key] = (sweep, cands)
                 ws["rungs_evaluated"] += 1
                 ws["cands_evaluated"] += len(pend.factors)
