@@ -235,7 +235,8 @@ def conv_nest(name: str, oc: int, ic: int, oh: int, ow: int, kh: int = 3,
     return f
 
 
-def conv_chain(hw: int = 12, chans: Sequence[int] = (3, 4, 4)):
+def conv_chain(hw: int = 12, chans: Sequence[int] = (3, 4, 4),
+               scan_tail: int = 0):
     """Multi-statement conv stack in ONE function: conv -> relu per layer,
     plus a final elementwise rescale — the task-level-pipelining flagship.
 
@@ -245,6 +246,13 @@ def conv_chain(hw: int = 12, chans: Sequence[int] = (3, 4, 4)):
     relu and relu -> conv hand-offs are order-mismatched (sequential
     edges after stage 1's interchange), while relu -> rescale is a pure
     in-order elementwise chain (FIFO).
+
+    ``scan_tail`` appends that many *isomorphic* 1x1-conv -> relu layers
+    (channel count and spatial extent held fixed) before the rescale — the
+    3x3 body shrinks spatially each layer, so its blocks can never be
+    structurally equal, while the tail blocks are exactly the repeated-
+    layer shape ``graph_ir.detect_scan_chains`` compiles once and
+    ``lax.scan``s over stacked weights (the deep-model serving idiom).
     """
     with pom.function("conv_chain", outputs=["out"]) as f:
         img = pom.placeholder("img", (chans[0], hw, hw))
@@ -273,6 +281,25 @@ def conv_chain(hw: int = 12, chans: Sequence[int] = (3, 4, 4)):
                         Call("max", (wrap(t(ro, ry, rx)), wrap(0.0))),
                         r_arr(ro, ry, rx))
             cur, cur_hw = r_arr, oh
+        for l in range(scan_tail):
+            nc = chans[-1]
+            w = pom.placeholder(f"tw{l}", (nc, nc))
+            t = pom.placeholder(f"tt{l}", (nc, cur_hw, cur_hw))
+            r_arr = pom.placeholder(f"tr{l}", (nc, cur_hw, cur_hw))
+            o = pom.var(f"to{l}", 0, nc)
+            y = pom.var(f"ty{l}", 0, cur_hw)
+            x = pom.var(f"tx{l}", 0, cur_hw)
+            c = pom.var(f"tc{l}", 0, nc)
+            pom.compute(f"tconv{l}", [o, y, x, c],
+                        t(o, y, x) + cur(c, y, x) * w(o, c),
+                        t(o, y, x))
+            ro = pom.var(f"tro{l}", 0, nc)
+            ry = pom.var(f"try{l}", 0, cur_hw)
+            rx = pom.var(f"trx{l}", 0, cur_hw)
+            pom.compute(f"trelu{l}", [ry, rx, ro],
+                        Call("max", (wrap(t(ro, ry, rx)), wrap(0.0))),
+                        r_arr(ro, ry, rx))
+            cur = r_arr
         out = pom.placeholder("out", (chans[-1], cur_hw, cur_hw))
         so = pom.var("so", 0, chans[-1])
         sy = pom.var("sy", 0, cur_hw)

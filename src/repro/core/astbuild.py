@@ -107,7 +107,8 @@ def _in_same_run(order, i, target, share) -> bool:
     return False
 
 
-def build_ast(fn: Function, dataflow: Optional[bool] = None) -> ProgramAST:
+def build_ast(fn: Function, dataflow: Optional[bool] = None,
+              scan: Optional[bool] = None) -> ProgramAST:
     """Build the annotated loop IR of ``fn``.
 
     With dataflow enabled (``dataflow=True``, or None + an effective
@@ -117,18 +118,51 @@ def build_ast(fn: Function, dataflow: Optional[bool] = None) -> ProgramAST:
     a ``DataflowRegion`` carrying the classified channels.  The region is
     annotation-only: its task bodies are exactly the nodes a sequential
     build produces, in the same order.
+
+    With scan enabled (``scan=True``, or None + ``POM_PALLAS_SCAN`` unset
+    or truthy) runs of isomorphic task blocks detected by
+    ``graph_ir.detect_scan_chains`` are wrapped into ``ScanRegion`` nodes
+    — also annotation-only: every unrolled node is kept inside the region
+    in program order, so backends that ignore the annotation execute the
+    exact sequential schedule.
     """
     order = _program_order(fn)
     share = _share_with_prev(order)
     used_names: set = set()
     body = _build_level(order, share, 0, {}, [], used_names)
-    from .graph_ir import dataflow_effective
+    from .graph_ir import dataflow_effective, scan_default
     effective = dataflow_effective(fn) if dataflow is None else dataflow
-    if effective:
-        region = _dataflow_region(fn, body)
-        if region is not None:
-            body = [region]
+    scan_on = scan_default() if scan is None else scan
+    region = _dataflow_region(fn, body) if effective else None
+    if region is not None:
+        if scan_on:
+            region.body = _wrap_scan(fn, region.body)
+        body = [region]
+    elif scan_on:
+        body = _wrap_scan(fn, body)
     return ProgramAST(body)
+
+
+def _wrap_scan(fn: Function, nodes: List[Node]) -> List[Node]:
+    """Replace each detected chain's node span with a ``ScanRegion``.
+
+    ``nodes`` must be 1:1 with the fusion task list (one top-level nest or
+    ``TaskNode`` per task) — when grouping diverged, the AST is returned
+    unchanged rather than guessed at.
+    """
+    from .graph_ir import detect_scan_chains, fusion_tasks
+    from .loop_ir import ScanRegion
+    chains = detect_scan_chains(fn)
+    if not chains or len(nodes) != len(fusion_tasks(fn)):
+        return nodes
+    out = list(nodes)
+    for c in sorted(chains, key=lambda ch: ch.start, reverse=True):
+        span = c.n * c.period
+        out[c.start:c.start + span] = [ScanRegion(
+            out[c.start:c.start + span], c.n, c.period,
+            c.carry_in, c.carry_out,
+            dict(c.reads), {k: v for k, v in c.writes})]
+    return out
 
 
 def _dataflow_region(fn: Function, body: List[Node]) -> Optional[DataflowRegion]:

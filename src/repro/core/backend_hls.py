@@ -23,7 +23,7 @@ from .affine import Bound, LinExpr
 from .ir import (BinOp, Call, Const, Expr, Function, IterVal, Load,
                  Placeholder, loads_of)
 from .loop_ir import (Channel, DataflowRegion, ForNode, IfNode, LoopBound,
-                      Node, ProgramAST, StmtNode, TaskNode)
+                      Node, ProgramAST, ScanRegion, StmtNode, TaskNode)
 
 
 def _c_lin(e: LinExpr) -> str:
@@ -184,6 +184,14 @@ def _emit_hls_impl(fn: Function, ast: ProgramAST,
                 emit(c, ind)
         elif isinstance(n, TaskNode):
             lines.append(f"{pad}// dataflow task: {n.name}")
+            for c in n.body:
+                emit(c, ind)
+        elif isinstance(n, ScanRegion):
+            carry = (f", carry {n.carry_in} -> {n.carry_out}"
+                     if n.carry_in else "")
+            lines.append(f"{pad}// scan region: {n.n} isomorphic blocks x "
+                         f"{n.template_len} nests{carry} (compiled once + "
+                         f"scanned on the Pallas serving path)")
             for c in n.body:
                 emit(c, ind)
         elif isinstance(n, ForNode):

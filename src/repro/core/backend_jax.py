@@ -15,7 +15,7 @@ import numpy as np
 from . import telemetry
 from .ir import BinOp, Call, Const, Expr, Function, IterVal, Load, Statement
 from .loop_ir import (DataflowRegion, ForNode, IfNode, Node, ProgramAST,
-                      StmtNode, TaskNode)
+                      ScanRegion, StmtNode, TaskNode)
 
 _CALLS = {
     "exp": math.exp, "sqrt": math.sqrt, "abs": abs,
@@ -72,9 +72,11 @@ def compile_jax(fn: Function, ast: ProgramAST) -> Callable[[Dict[str, np.ndarray
             bufs[arr.name][idx] = val
 
         def exec_node(n: Node):
-            if isinstance(n, (ProgramAST, DataflowRegion, TaskNode)):
-                # a dataflow region is annotation-only: running its tasks
-                # in program order is a correct schedule of the region
+            if isinstance(n, (ProgramAST, DataflowRegion, TaskNode,
+                              ScanRegion)):
+                # dataflow and scan regions are annotation-only: running
+                # their bodies in program order is a correct schedule (a
+                # scan region keeps all unrolled blocks in ``body``)
                 for c in n.body:
                     exec_node(c)
             elif isinstance(n, ForNode):

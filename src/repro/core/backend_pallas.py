@@ -26,7 +26,7 @@ import functools
 import math
 import os
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -134,17 +134,57 @@ def _match_contraction(stmt: Statement) -> Optional[Tuple[Load, Load, Load]]:
     return None
 
 
+# Once-per-process probe of compiled (Mosaic/XLA) pallas_call support.
+# CPU-only jax builds raise on ``interpret=False``; TPU hosts compile.
+_MOSAIC_PROBE: Optional[bool] = None
+
+
+def mosaic_supported() -> bool:
+    """Probe (once per process) whether ``pl.pallas_call`` lowers and runs
+    *compiled* on this host.  Silent on failure — the answer just decides
+    the ``interpret`` default; callers that explicitly request compiled
+    mode still get the per-runner one-failure interpret fallback."""
+    global _MOSAIC_PROBE
+    if _MOSAIC_PROBE is None:
+        try:
+            def _probe_kernel(x_ref, o_ref):
+                o_ref[...] = x_ref[...] + 1.0
+
+            out = pl.pallas_call(
+                _probe_kernel,
+                out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+                interpret=False)(jnp.zeros((8,), jnp.float32))
+            jax.block_until_ready(out)
+            _MOSAIC_PROBE = True
+        except Exception:
+            _MOSAIC_PROBE = False
+    return _MOSAIC_PROBE
+
+
 def _interpret_default() -> bool:
-    """Default for ``interpret``: the POM_PALLAS_INTERPRET env toggle
-    (truthy unless set to 0/false — interpret mode is the safe default on
-    hosts without a TPU; flip it off to compile with Mosaic)."""
-    return os.environ.get("POM_PALLAS_INTERPRET", "1").lower() not in (
-        "0", "false", "no")
+    """Default for ``interpret``: compiled Mosaic wherever the host
+    supports it (probed once per process), interpret everywhere else.
+    ``POM_PALLAS_INTERPRET`` overrides both ways: truthy forces interpret,
+    ``0``/``false`` forces compiled (with the runtime fallback intact)."""
+    v = os.environ.get("POM_PALLAS_INTERPRET")
+    if v is None:
+        return not mosaic_supported()
+    return v.lower() not in ("0", "false", "no")
 
 
-# (stmt uid, schedule signature, array shapes/dtypes, interpret) -> runner
-_LOWER_CACHE: Dict[Tuple, Callable] = {}
-_LOWER_CACHE_MAX = 1024
+# (schedule signature, array shapes/dtypes, mode) -> runner.  ``mode`` is
+# "interpret" or "compiled"; a runner that pins itself to interpret after a
+# Mosaic failure *evicts* its "compiled" entry, so a later request for a
+# compiled runner rebuilds fresh instead of being served the pinned one —
+# a transient failure cannot poison subsequent compiles.
+_PALLAS_RUNNER_CACHE: Dict[Tuple, Callable] = {}
+_PALLAS_RUNNER_CACHE_MAX = 1024
+# statement uids whose mosaic_fallback_interpret warning already fired —
+# at most one structured warning per statement per process
+_FALLBACK_WARNED: set = set()
+
+# backward-compat alias (caching.clear_all reaches in by the old name)
+_LOWER_CACHE = _PALLAS_RUNNER_CACHE
 
 
 def lower_stmt_pallas(stmt: Statement, interpret: Optional[bool] = None) -> Callable:
@@ -154,10 +194,11 @@ def lower_stmt_pallas(stmt: Statement, interpret: Optional[bool] = None) -> Call
     updated destination array.
 
     Lowerings are memoized on (statement schedule signature, array
-    shapes/dtypes, interpret flag), and the returned runner builds its
+    shapes/dtypes, requested mode), and the returned runner builds its
     ``pl.pallas_call`` once per observed output shape/dtype — repeated
     ``run()`` calls reuse the compiled callable instead of rebuilding it.
-    ``interpret=None`` defers to the ``POM_PALLAS_INTERPRET`` env toggle.
+    ``interpret=None`` defers to ``_interpret_default()`` (compiled where
+    the Mosaic probe succeeds, ``POM_PALLAS_INTERPRET`` overriding).
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -167,22 +208,25 @@ def lower_stmt_pallas(stmt: Statement, interpret: Optional[bool] = None) -> Call
         arrays_sig = tuple((a.name, a.shape, a.dtype.name) for a in
                            [stmt.store.array] + [ld.array
                                                  for ld in loads_of(stmt.body)])
-        key = (stmt.schedule_signature(), arrays_sig, interpret)
-        hit = _LOWER_CACHE.get(key)
+        key = (stmt.schedule_signature(), arrays_sig,
+               "interpret" if interpret else "compiled")
+        hit = _PALLAS_RUNNER_CACHE.get(key)
         if hit is not None:
             return hit
     # span covers only the actual lowering work; memoized hits return above
     with telemetry.span("backend.lower", _cat="backend", backend="pallas",
                         statement=stmt.name, interpret=interpret):
-        run = _lower_stmt_pallas_compute(stmt, interpret)
+        run = _lower_stmt_pallas_compute(stmt, interpret, cache_key=key)
     if key is not None:
-        if len(_LOWER_CACHE) >= _LOWER_CACHE_MAX:
-            _LOWER_CACHE.clear()
-        _LOWER_CACHE[key] = run
+        if len(_PALLAS_RUNNER_CACHE) >= _PALLAS_RUNNER_CACHE_MAX:
+            _PALLAS_RUNNER_CACHE.clear()
+        _PALLAS_RUNNER_CACHE[key] = run
     return run
 
 
-def _lower_stmt_pallas_compute(stmt: Statement, interpret: bool) -> Callable:
+def _lower_stmt_pallas_compute(stmt: Statement, interpret: bool,
+                               cache_key: Optional[Tuple] = None,
+                               pure: bool = False) -> Callable:
     grid_dims, block_dims = _classify_dims(stmt)
     trips = _dim_extents(stmt)
     lbs = _lower_bounds(stmt)
@@ -302,6 +346,18 @@ def _lower_stmt_pallas_compute(stmt: Statement, interpret: bool) -> Callable:
             call_cache[ck] = fn
         return fn
 
+    if pure:
+        # trace-friendly variant (no try/except, no fault injection): the
+        # caller fixed the mode statically, e.g. inside a jit-traced
+        # program where a runtime fallback could not fire anyway
+        def run_pure(arrays: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+            x = jnp.asarray(arrays[x_arr.name])
+            y = jnp.asarray(arrays[y_arr.name])
+            o = jnp.asarray(arrays[store_arr.name])
+            return _call_for(o.shape, o.dtype, interpret)(x, y, o)
+
+        return run_pure
+
     def run(arrays: Dict[str, jnp.ndarray]) -> jnp.ndarray:
         x = jnp.asarray(arrays[x_arr.name])
         y = jnp.asarray(arrays[y_arr.name])
@@ -312,9 +368,16 @@ def _lower_stmt_pallas_compute(stmt: Statement, interpret: bool) -> Callable:
                     raise RuntimeError("injected Mosaic lowering failure")
                 return _call_for(o.shape, o.dtype, False)(x, y, o)
             except Exception as e:  # Mosaic/XLA raise backend-specific types
-                warn_structured("backend_pallas", "mosaic_fallback_interpret",
-                                stmt=stmt.name, error=type(e).__name__)
+                if stmt.uid not in _FALLBACK_WARNED:
+                    _FALLBACK_WARNED.add(stmt.uid)
+                    warn_structured("backend_pallas",
+                                    "mosaic_fallback_interpret",
+                                    stmt=stmt.name, error=type(e).__name__)
                 state["interpret"] = True
+                # the pinned runner must not keep serving the "compiled"
+                # cache slot: evict so the next compiled request retries
+                if cache_key is not None:
+                    _PALLAS_RUNNER_CACHE.pop(cache_key, None)
         return _call_for(o.shape, o.dtype, True)(x, y, o)
 
     return run
@@ -329,3 +392,539 @@ def _match_contraction_composed(stmt: Statement):
     x_idx = tuple(stmt.subst_lin(e) for e in xl.idx)
     y_idx = tuple(stmt.subst_lin(e) for e in yl.idx)
     return (xl.array, x_idx), (yl.array, y_idx)
+
+
+# ==========================================================================
+# Compiled serving path: whole-program tracing, batching, scan-over-layers
+# ==========================================================================
+# The per-statement ``pallas_call`` wrappers above execute eagerly, one
+# dispatch per statement per run.  The serving path instead *traces* the
+# whole loop AST into one JAX computation (``_build_step``): vectorizable
+# statement nests become gather/scatter + reductions, sequential loops
+# become ``lax.fori_loop``, guards become ``lax.cond``, and ``ScanRegion``
+# nodes (repeated isomorphic blocks, detected at the Graph IR level)
+# compile one block body and ``lax.scan`` over the stacked per-block
+# arrays.  The traced step is then jit'd for single-invocation serving and
+# ``vmap``'d (+ ``shard_map`` across local devices) for batched serving.
+
+from jax import lax
+
+
+class TraceError(Exception):
+    """The program cannot be traced into a single JAX computation; the
+    serving path falls back to the per-statement/oracle runner."""
+
+
+_JNP_CALLS = {
+    "exp": jnp.exp, "sqrt": jnp.sqrt, "abs": jnp.abs,
+    "max": jnp.maximum, "min": jnp.minimum,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "tanh": jnp.tanh,
+}
+
+
+def _lin_val(e: LinExpr, env: Dict):
+    """Evaluate a LinExpr over an env of ints / traced scalars / grid
+    arrays (broadcasting makes the mixed cases just work)."""
+    v = e.const
+    for k, c in e.coeffs.items():
+        if c:
+            v = v + env[k] * c
+    return v
+
+
+def _tdiv(a, d: int, is_lower: bool):
+    """ceil_div (lower bounds) / floor_div (upper bounds) over ints or
+    traced scalars — ``//`` matches python floor semantics in jnp."""
+    if d == 1:
+        return a
+    return -((-a) // d) if is_lower else a // d
+
+
+def _bound_val(lb, env: Dict):
+    vals = [_tdiv(_lin_val(b.expr, env), b.div, lb.is_lower)
+            for b in lb.bounds]
+    if len(vals) == 1:
+        return vals[0]
+    acc = vals[0]
+    for v in vals[1:]:
+        acc = (jnp.maximum(acc, v) if lb.is_lower else jnp.minimum(acc, v)) \
+            if not (isinstance(acc, int) and isinstance(v, int)) \
+            else (max(acc, v) if lb.is_lower else min(acc, v))
+    return acc
+
+
+def _stmt_accesses(sn) -> Tuple:
+    """(store_arr, store_idx, load_idx_by_id) with every index expression
+    composed through ``iter_subst`` and renamed into loop-var space."""
+    s = sn.stmt
+    ren = sn.dim_map
+    arr, sidx = s.store_access()
+    store_idx = tuple(e.rename(ren) for e in sidx)
+    by_id = {}
+    for ld, (a, idx) in zip(loads_of(s.body), s.load_accesses()):
+        by_id[id(ld)] = (a, tuple(e.rename(ren) for e in idx))
+    return arr, store_idx, by_id
+
+
+def _eval_body(sn, env: Dict, bufs: Dict, by_id: Dict):
+    """Evaluate the statement body over an env of scalars or grid arrays."""
+    s = sn.stmt
+    ren = sn.dim_map
+
+    def ev(e: Expr):
+        if isinstance(e, Const):
+            return e.value
+        if isinstance(e, IterVal):
+            return _lin_val(s.subst_lin(e.expr).rename(ren), env)
+        if isinstance(e, Load):
+            _, idx = by_id[id(e)]
+            return bufs[e.array.name][tuple(_lin_val(x, env) for x in idx)]
+        if isinstance(e, BinOp):
+            a, b = ev(e.lhs), ev(e.rhs)
+            if e.op == "+":
+                return a + b
+            if e.op == "-":
+                return a - b
+            if e.op == "*":
+                return a * b
+            if e.op == "/":
+                return a / b
+            raise TraceError(f"unknown op {e.op}")
+        if isinstance(e, Call):
+            fn = _JNP_CALLS.get(e.fn)
+            if fn is None:
+                raise TraceError(f"unknown call {e.fn}")
+            return fn(*[ev(a) for a in e.args])
+        raise TraceError(f"unknown expr {e!r}")
+
+    return ev(s.body)
+
+
+def _vec_plan(node) -> Optional[Tuple]:
+    """Whole-nest vectorization plan for a single-statement ForNode chain.
+
+    Returns ``(chain, sn, kept, red, rest_body)`` when the remaining nest
+    can be evaluated all-iterations-at-once: constant bounds, one straight
+    StmtNode leaf, an injective store over the kept dims (each kept var in
+    exactly one store position, coefficient ±1), and no load of the stored
+    array except the accumulator pattern ``D = D + rest`` (reduction dims)
+    or a same-index read (pure map).  ``None`` → execute sequentially.
+    """
+    from .loop_ir import ForNode, StmtNode
+    chain: List[Tuple[str, int, int]] = []
+    n = node
+    while isinstance(n, ForNode):
+        if not (n.lo.is_constant() and n.hi.is_constant()):
+            return None
+        chain.append((n.var, n.lo.const_value(), n.hi.const_value()))
+        if len(n.body) != 1:
+            return None
+        n = n.body[0]
+    if not isinstance(n, StmtNode) or not chain:
+        return None
+    sn = n
+    s = sn.stmt
+    remaining = {v for v, _, _ in chain}
+    arr, store_idx, _ = _stmt_accesses(sn)
+    kept: Dict[str, int] = {}          # var -> store position
+    for p, e in enumerate(store_idx):
+        vs = [v for v in e.vars() if v in remaining]
+        if len(vs) > 1:
+            return None
+        if vs:
+            v = vs[0]
+            if v in kept or abs(e.coeff(v)) != 1:
+                return None
+            kept[v] = p
+    red = [v for v, _, _ in chain if v not in kept]
+
+    # loads of the stored array: allowed only at exactly the store index
+    acc_load = None
+    rest_body = s.body
+    if red:
+        b = s.body
+        if not (isinstance(b, BinOp) and b.op == "+"):
+            return None
+        for acc, rest in ((b.lhs, b.rhs), (b.rhs, b.lhs)):
+            if (isinstance(acc, Load) and acc.array.name == arr.name
+                    and all((a - b_).key() == ((), 0)
+                            for a, b_ in zip(acc.idx, s.store.idx))):
+                acc_load, rest_body = acc, rest
+                break
+        if acc_load is None:
+            return None
+        if any(ld.array.name == arr.name for ld in loads_of(rest_body)):
+            return None
+    else:
+        for ld in loads_of(s.body):
+            if ld.array.name == arr.name:
+                if not all((a - b_).key() == ((), 0)
+                           for a, b_ in zip(ld.idx, s.store.idx)):
+                    return None
+    return chain, sn, kept, red, rest_body
+
+
+def _run_vectorized(plan, bufs: Dict, env: Dict) -> Dict:
+    """Execute a ``_vec_plan`` nest: build per-dim index grids, evaluate
+    the body as one broadcasted expression, reduce over the reduction
+    axes, and scatter into the destination."""
+    chain, sn, kept, red, rest_body = plan
+    arr, store_idx, by_id = _stmt_accesses(sn)
+    shape = tuple(hi - lo + 1 for _, lo, hi in chain)
+    nd = len(chain)
+    grids = dict(env)
+    for ax, (v, lo, hi) in enumerate(chain):
+        g = lo + jnp.arange(hi - lo + 1)
+        grids[v] = g.reshape((1,) * ax + (len(g),) + (1,) * (nd - 1 - ax))
+
+    # store index arrays over the *kept* axes only
+    kvars = [v for v, _, _ in chain if v in kept]
+    kenv = dict(env)
+    for ax, v in enumerate(kvars):
+        lo = next(l for vv, l, _ in chain if vv == v)
+        hi = next(h for vv, _, h in chain if vv == v)
+        g = lo + jnp.arange(hi - lo + 1)
+        kenv[v] = g.reshape((1,) * ax + (len(g),) + (1,) * (len(kvars) - 1 - ax))
+    sidx = tuple(_lin_val(e, kenv) for e in store_idx)
+
+    bufs = dict(bufs)
+    if red:
+        # D = D + sum(rest) over the reduction axes
+        val = _eval_rest(sn, rest_body, grids, bufs, by_id)
+        val = jnp.broadcast_to(val, shape)
+        red_axes = tuple(ax for ax, (v, _, _) in enumerate(chain) if v in red)
+        reduced = val.sum(axis=red_axes)
+        bufs[arr.name] = bufs[arr.name].at[sidx].add(
+            reduced.astype(bufs[arr.name].dtype))
+    else:
+        val = _eval_body(sn, grids, bufs, by_id)
+        val = jnp.broadcast_to(val, shape)
+        bufs[arr.name] = bufs[arr.name].at[sidx].set(
+            val.astype(bufs[arr.name].dtype))
+    return bufs
+
+
+def _eval_rest(sn, rest: Expr, env: Dict, bufs: Dict, by_id: Dict):
+    """Evaluate the non-accumulator side of ``D = D + rest``."""
+    s = sn.stmt
+    ren = sn.dim_map
+
+    def ev(e: Expr):
+        if isinstance(e, Const):
+            return e.value
+        if isinstance(e, IterVal):
+            return _lin_val(s.subst_lin(e.expr).rename(ren), env)
+        if isinstance(e, Load):
+            _, idx = by_id[id(e)]
+            return bufs[e.array.name][tuple(_lin_val(x, env) for x in idx)]
+        if isinstance(e, BinOp):
+            a, b = ev(e.lhs), ev(e.rhs)
+            return {"+": lambda: a + b, "-": lambda: a - b,
+                    "*": lambda: a * b, "/": lambda: a / b}[e.op]()
+        if isinstance(e, Call):
+            fn = _JNP_CALLS.get(e.fn)
+            if fn is None:
+                raise TraceError(f"unknown call {e.fn}")
+            return fn(*[ev(a) for a in e.args])
+        raise TraceError(f"unknown expr {e!r}")
+
+    return ev(rest)
+
+
+def _exec_stmt_scalar(sn, bufs: Dict, env: Dict) -> Dict:
+    """One statement instance with every loop var bound to a scalar."""
+    arr, store_idx, by_id = _stmt_accesses(sn)
+    val = _eval_body(sn, env, bufs, by_id)
+    idx = tuple(_lin_val(e, env) for e in store_idx)
+    bufs = dict(bufs)
+    bufs[arr.name] = bufs[arr.name].at[idx].set(val)
+    return bufs
+
+
+def _build_step(fn: Function, ast, interpret: bool):
+    """Trace the loop AST into ``step(bufs) -> bufs`` (pure, jit-able).
+
+    Statement nests are vectorized where legal; with compiled Mosaic
+    available (``interpret=False``) supported contractions use their
+    ``pallas_call`` kernels instead of the generic gather/reduce.  Raises
+    ``TraceError`` (possibly only at trace time) when some construct has
+    no JAX rendition.
+    """
+    from .loop_ir import (DataflowRegion, ForNode, IfNode, ProgramAST,
+                          ScanRegion, StmtNode, TaskNode)
+
+    use_pallas_kernels = not interpret and mosaic_supported()
+
+    def run_nodes(nodes, bufs, env):
+        for n in nodes:
+            bufs = run_node(n, bufs, env)
+        return bufs
+
+    def run_node(node, bufs, env):
+        if isinstance(node, (ProgramAST, DataflowRegion, TaskNode)):
+            return run_nodes(node.body, bufs, env)
+        if isinstance(node, ScanRegion):
+            return run_scan(node, bufs, env)
+        if isinstance(node, ForNode):
+            if use_pallas_kernels:
+                runner = _nest_pallas_runner(node, env)
+                if runner is not None:
+                    dest, run = runner
+                    bufs = dict(bufs)
+                    bufs[dest] = run(bufs)
+                    return bufs
+            plan = _vec_plan(node)
+            if plan is not None:
+                return _run_vectorized(plan, bufs, env)
+            lo = _bound_val(node.lo, env)
+            hi = _bound_val(node.hi, env)
+
+            def body(v, b):
+                return run_nodes(node.body, b, {**env, node.var: v})
+
+            return lax.fori_loop(lo, hi + 1, body, bufs)
+        if isinstance(node, IfNode):
+            preds = []
+            static = True
+            for c in node.conds:
+                v = _lin_val(c.expr, env)
+                p = (v == 0) if c.is_eq else (v >= 0)
+                static = static and isinstance(p, (bool,))
+                preds.append(p)
+            if static:
+                if all(preds):
+                    return run_nodes(node.body, bufs, env)
+                return bufs
+            pred = functools.reduce(lambda a, b: a & b,
+                                    [jnp.asarray(p) for p in preds])
+            return lax.cond(pred,
+                            lambda b: run_nodes(node.body, b, env),
+                            lambda b: b, bufs)
+        if isinstance(node, StmtNode):
+            return _exec_stmt_scalar(node, bufs, env)
+        raise TraceError(f"unknown node {type(node).__name__}")
+
+    def _nest_pallas_runner(node, env):
+        """Compiled pallas_call for a single-statement nest at top level
+        (no outer env) whose schedule the contraction matcher supports."""
+        if env:
+            return None
+        from .loop_ir import ForNode as _F, StmtNode as _S
+        n = node
+        while isinstance(n, _F):
+            if len(n.body) != 1:
+                return None
+            n = n.body[0]
+        if not isinstance(n, _S):
+            return None
+        s = n.stmt
+        try:
+            run = _lower_stmt_pallas_compute(s, interpret=False, pure=True)
+        except PallasLowerError:
+            return None
+        arr, _ = s.store_access()
+        return arr.name, run
+
+    def run_scan(node, bufs, env):
+        if env:  # a scan region nested under live loops: run unrolled
+            return run_nodes(node.body, bufs, env)
+        template = node.body[:node.template_len]
+        xs = {tn: jnp.stack([bufs[c] for c in names])
+              for tn, names in node.reads.items()}
+        for tn, names in node.writes.items():
+            # per-block initial contents of the written buffers (the
+            # accumulation convs start from them)
+            xs["\0init:" + tn] = jnp.stack([bufs[c] for c in names])
+        carry0 = bufs[node.carry_in] if node.carry_in else jnp.zeros((1,))
+
+        def body(carry, x):
+            local = dict(bufs)
+            if node.carry_in:
+                local[node.carry_in] = carry
+            for tn in node.reads:
+                local[tn] = x[tn]
+            for tn in node.writes:
+                local[tn] = x["\0init:" + tn]
+            local = run_nodes(template, local, {})
+            outs = {tn: local[tn] for tn in node.writes}
+            nc = local[node.carry_out] if node.carry_out else carry
+            return nc, outs
+
+        _, ys = lax.scan(body, carry0, xs)
+        bufs = dict(bufs)
+        for tn, names in node.writes.items():
+            for b, cname in enumerate(names):
+                bufs[cname] = ys[tn][b]
+        return bufs
+
+    def step(bufs: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        return run_node(ast, bufs, {})
+
+    return step
+
+
+class BatchedRunner:
+    """``jit(vmap(step))`` over the whole program — one dispatch serves a
+    batch of invocations.  With several local devices and a divisible
+    batch, the vmapped step is ``shard_map``'d across them."""
+
+    def __init__(self, program: "PallasProgram", batch_size: Optional[int],
+                 step):
+        self.program = program
+        self.batch_size = batch_size
+        self._sequential = step is None
+        if step is None:
+            return
+        batched = jax.vmap(step)
+        self.devices = 1
+        ndev = len(jax.local_devices())
+        if ndev > 1 and batch_size and batch_size % ndev == 0:
+            try:
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import Mesh, PartitionSpec as P
+                import numpy as _np
+                mesh = Mesh(_np.array(jax.local_devices()), ("batch",))
+                batched = shard_map(batched, mesh=mesh,
+                                    in_specs=(P("batch"),),
+                                    out_specs=P("batch"))
+                self.devices = ndev
+            except Exception:
+                pass
+        self._fn = jax.jit(batched)
+
+    def _infer_batch(self, arrays: Dict[str, Any]) -> int:
+        if arrays:
+            return next(iter(arrays.values())).shape[0]
+        if self.batch_size is None:
+            raise ValueError(
+                "cannot infer batch size: no input arrays were passed and "
+                "the runner was built with batch_size=None")
+        return self.batch_size
+
+    def __call__(self, arrays: Dict[str, Any]) -> Dict[str, Any]:
+        prog = self.program
+        if self._sequential:
+            b = self._infer_batch(arrays)
+            outs = [prog(dict((k, v[i]) for k, v in arrays.items()))
+                    for i in range(b)]
+            import numpy as _np
+            return {k: _np.stack([_np.asarray(o[k]) for o in outs])
+                    for k in outs[0]}
+        b = self._infer_batch(arrays)
+        if self.batch_size is not None and b != self.batch_size:
+            raise ValueError(
+                f"batched runner built for batch {self.batch_size}, "
+                f"got {b}")
+        bufs = prog._batch_bufs(arrays, b)
+        with telemetry.span("backend.execute", _cat="backend",
+                            backend="pallas_batched", fn=prog.fn.name,
+                            batch=b):
+            return self._fn(bufs)
+
+
+class PallasProgram:
+    """The ``compile(fn, target="pallas")`` artifact.
+
+    Calling it runs the legacy exact path (per-statement ``pallas_call``
+    plan, oracle fallback) — unchanged semantics.  The serving surface on
+    top:
+
+    * ``jitted()``  — the whole program traced + jit'd as one XLA
+      computation (vectorized nests, ``fori_loop`` sequential loops,
+      ``lax.scan`` over detected ``ScanRegion`` blocks);
+    * ``batched(B)`` — ``jit(vmap(step))`` (+ ``shard_map`` across local
+      devices when available), one dispatch per *batch* of invocations.
+
+    Programs the tracer cannot express fall back transparently: calling
+    stays exact, ``batched`` degrades to a sequential per-element loop
+    (with a one-time structured warning).
+    """
+
+    def __init__(self, fn: Function, ast, interpret: bool, legacy,
+                 mode: str):
+        self.fn = fn
+        self.ast = ast
+        self.interpret = interpret
+        self.mode = mode          # "pallas" (per-stmt plan) | "oracle"
+        self._legacy = legacy
+        self._step = None
+        self._step_ok: Optional[bool] = None
+        self._jit = None
+        self._batched: Dict[Optional[int], BatchedRunner] = {}
+
+    # -- legacy exact path --------------------------------------------------
+    def __call__(self, arrays: Dict[str, Any]) -> Dict[str, Any]:
+        return self._legacy(arrays)
+
+    # -- traced serving path ------------------------------------------------
+    def _dtype_of(self, ph) -> Any:
+        return ph.dtype.np or jnp.bfloat16
+
+    def _full_bufs(self, arrays: Dict[str, Any]) -> Dict[str, Any]:
+        bufs = {}
+        for ph in self.fn.placeholders.values():
+            dt = self._dtype_of(ph)
+            if ph.name in arrays:
+                bufs[ph.name] = jnp.asarray(arrays[ph.name], dtype=dt)
+            else:
+                bufs[ph.name] = jnp.zeros(ph.shape, dtype=dt)
+        return bufs
+
+    def _batch_bufs(self, arrays: Dict[str, Any], b: int) -> Dict[str, Any]:
+        bufs = {}
+        for ph in self.fn.placeholders.values():
+            dt = self._dtype_of(ph)
+            if ph.name in arrays:
+                v = jnp.asarray(arrays[ph.name], dtype=dt)
+                if v.shape != (b,) + ph.shape:
+                    raise ValueError(
+                        f"{ph.name}: expected batched shape "
+                        f"{(b,) + ph.shape}, got {v.shape}")
+                bufs[ph.name] = v
+            else:
+                bufs[ph.name] = jnp.zeros((b,) + ph.shape, dtype=dt)
+        return bufs
+
+    def traceable(self) -> bool:
+        """Whether the whole program traces into one JAX computation
+        (checked once, via an abstract evaluation — no FLOPs spent)."""
+        if self._step_ok is None:
+            try:
+                step = _build_step(self.fn, self.ast, self.interpret)
+                spec = {ph.name: jax.ShapeDtypeStruct(ph.shape,
+                                                      self._dtype_of(ph))
+                        for ph in self.fn.placeholders.values()}
+                jax.eval_shape(step, spec)
+                self._step = step
+                self._step_ok = True
+            except Exception as e:
+                warn_structured("backend_pallas",
+                                "pallas_trace_fallback",
+                                fn=self.fn.name, error=type(e).__name__)
+                self._step_ok = False
+        return self._step_ok
+
+    def jitted(self):
+        """Single-invocation jit'd executor: ``run(arrays) -> dict``."""
+        if not self.traceable():
+            return self._legacy
+        if self._jit is None:
+            jfn = jax.jit(self._step)
+
+            def run(arrays: Dict[str, Any]) -> Dict[str, Any]:
+                with telemetry.span("backend.execute", _cat="backend",
+                                    backend="pallas_jit", fn=self.fn.name):
+                    return jfn(self._full_bufs(arrays))
+
+            self._jit = run
+        return self._jit
+
+    def batched(self, batch_size: Optional[int] = None) -> BatchedRunner:
+        """Batched executor: every input carries a leading batch dim."""
+        br = self._batched.get(batch_size)
+        if br is None:
+            step = self._step if self.traceable() else None
+            br = BatchedRunner(self, batch_size, step)
+            self._batched[batch_size] = br
+        return br

@@ -135,6 +135,16 @@ class DataflowReport:
     # (array, producer, consumer, kind, depth) per channel
     channels: Tuple[Tuple[str, str, str, str, int], ...] = ()
     reason: str = ""
+    # Steady-state initiation interval of the *region* under a stream of
+    # invocations: drain of invocation k overlaps fill of k+1.  Channels
+    # with storage (fifo/pipo) double-buffer across invocations, so every
+    # task re-starts as soon as its own previous run finished (bounded by
+    # the slowest task); a ``seq`` edge has no channel storage — the
+    # consumer's read of invocation k must finish before the producer may
+    # overwrite for k+1, serializing that producer/consumer pair.  Always
+    # <= region_latency (the single-shot number includes the one-time
+    # fill/drain the steady state amortizes).  0 = not computed.
+    ii_region: int = 0
 
     @property
     def overlap(self) -> int:
@@ -186,6 +196,18 @@ class DesignReport:
         ``bench_dse_speed`` snapshot these per best design)."""
         return {"dsp": self.dsp, "lut": self.lut, "ff": self.ff,
                 "bram_bits": self.bram_bits, "bram18": self.bram18}
+
+    @property
+    def ii_region(self) -> int:
+        """Per-invocation steady-state initiation interval: cycles between
+        successive invocation starts when the design serves a stream.  With
+        an applied dataflow region, invocation k+1's fill overlaps k's
+        drain (``DataflowReport.ii_region``); a sequential design admits no
+        cross-invocation overlap, so its II is the single-shot latency."""
+        if self.dataflow is not None and self.dataflow.applied \
+                and self.dataflow.ii_region > 0:
+            return self.dataflow.ii_region
+        return self.latency
 
 
 @dataclass
@@ -678,7 +700,8 @@ class HlsModel:
                     dataflow = DataflowReport(
                         False, dataflow.tasks, dataflow.sequential_latency,
                         dataflow.region_latency,
-                        reason="channel storage exceeds device BRAM")
+                        reason="channel storage exceeds device BRAM",
+                        ii_region=dataflow.ii_region)
         feasible = feasible_at(lut, bram, ff)
         return DesignReport(total, nodes, dsp, lut, ff, bram, feasible,
                             dataflow)
@@ -754,17 +777,29 @@ class HlsModel:
                 drain = max(drain, finish[ch.src_task] + tail)
             finish[t] = max(fillpath[t] + lat[t], drain)
         region = max(finish) + DATAFLOW_OVERHEAD
+        # steady-state II under a stream of invocations: fifo/pipo channel
+        # storage double-buffers across invocations, so each task re-starts
+        # at its own pace (bounded by the slowest task); a seq edge has no
+        # storage — its consumer must drain invocation k before the
+        # producer overwrites for k+1, serializing that pair.  Provably
+        # <= region (see the relaxation: finish[dst] >= finish[src] +
+        # tail >= lat[src] + lat[dst] on every seq edge).
+        ii = max(lat) if lat else 0
+        for ch in info.channels:
+            if ch.kind == "seq":
+                ii = max(ii, lat[ch.src_task] + lat[ch.dst_task])
         channels = tuple((ch.array, ch.producer, ch.consumer, ch.kind,
                           ch.depth) for ch in info.channels)
         if region >= sequential:
             rep = DataflowReport(False, n, sequential, region,
                                  channels=channels,
-                                 reason="no latency gain over sequential")
+                                 reason="no latency gain over sequential",
+                                 ii_region=ii)
         else:
             bits = sum(ch.bits for ch in info.channels)
             chan_lut = CHANNEL_LUT * len(info.channels)
             rep = DataflowReport(True, n, sequential, region, bits, chan_lut,
-                                 channels)
+                                 channels, ii_region=ii)
         if memo is not None:
             if len(memo) >= 4096:
                 memo.clear()

@@ -140,7 +140,8 @@ def report_to_json(rep: DesignReport) -> Dict[str, Any]:
             "sequential_latency": f.sequential_latency,
             "region_latency": f.region_latency,
             "channel_bits": f.channel_bits, "channel_lut": f.channel_lut,
-            "channels": [list(c) for c in f.channels], "reason": f.reason}
+            "channels": [list(c) for c in f.channels], "reason": f.reason,
+            "ii_region": f.ii_region}
     return d
 
 

@@ -154,8 +154,26 @@ class PomFunction:
         """Alias of ``codegen`` matching the pipeline entry-point name."""
         return self.codegen(target, **kw)
 
+    def runner(self, batch_size: Optional[int] = None, **kw):
+        """Executable Pallas serving entry point.
+
+        ``batch_size=None`` returns the jit'd single-invocation executor
+        (``run(arrays) -> dict``); an int returns the ``batched(B)``
+        executor (every input carries a leading batch dimension).  Sugar
+        for ``codegen("pallas").jitted()/.batched(B)``."""
+        program = self.codegen("pallas", **kw)
+        return (program.jitted() if batch_size is None
+                else program.batched(batch_size))
+
     def __repr__(self):
         return f"PomFunction({self.fn.name})"
+
+
+def mosaic_supported() -> bool:
+    """Whether this host compiles Pallas kernels with Mosaic (probed once
+    per process; lazy so the base import path stays jax-free)."""
+    from .backend_pallas import mosaic_supported as probe
+    return probe()
 
 
 def function(name: str, outputs: Optional[Sequence[str]] = None,

@@ -759,3 +759,155 @@ def share_structural_memos(g: GraphIR, warm: Sequence[str] = ()) -> Dict[Tuple, 
                 if "selfdep" in warm:
                     self_dependences(rep)
     return g.cse_classes
+
+
+# --------------------------------------------------------------------------
+# scan-over-layers: repeated isomorphic task blocks
+# --------------------------------------------------------------------------
+# Deep models repeat the same layer body N times with different weights
+# (conv→relu chains, transformer blocks).  Unrolling N structurally equal
+# blocks makes the traced program N× bigger for zero information; the
+# Pallas serving path instead compiles ONE block body and ``lax.scan``s it
+# over the per-block arrays (the haliax `Stacked` idiom).  Detection runs
+# here, at the Graph IR level, over the fusion task list: a *chain* is a
+# maximal run of >=2 consecutive task blocks (``period`` tasks each) whose
+# per-task ``op_structural_key`` + array shape/dtype signatures are equal,
+# whose roles derive cleanly:
+#
+#   * **carry** — a template read whose block-*b* array is block-*b-1*'s
+#     write (the activation chain); at most one, same shape both ends;
+#   * **stacked reads** — reads bound to a different external array per
+#     block (the weights), never written inside the chain;
+#   * **writes** — per-block destination arrays, globally distinct;
+#   * **invariant reads** — the same external array in every block.
+#
+# Anything else (a non-carry cross-block read, aliased writes, a name
+# mapping that isn't 1:1) disqualifies the run — correctness beats
+# coverage, the unrolled schedule is always available.
+
+
+def scan_default() -> bool:
+    """Ambient scan-over-layers toggle: ``POM_PALLAS_SCAN=0`` keeps every
+    repeated block unrolled (bit-identical schedules, N× the trace)."""
+    return os.environ.get("POM_PALLAS_SCAN", "1") != "0"
+
+
+@dataclass(frozen=True)
+class ScanChainInfo:
+    """One detected run of isomorphic task blocks (see module comment)."""
+    start: int                 # first task index of the first block
+    period: int                # tasks per block
+    n: int                     # number of blocks (>= 2)
+    carry_in: Optional[str]    # template (block-0) read name of the carry
+    carry_out: Optional[str]   # template write name feeding the next block
+    reads: Tuple[Tuple[str, Tuple[str, ...]], ...]   # tmpl name -> per-block
+    writes: Tuple[Tuple[str, Tuple[str, ...]], ...]  # tmpl name -> per-block
+
+
+def _task_block_key(task: List[Statement]) -> Tuple:
+    """Structural key of one task for block-isomorphism: op structure plus
+    the array shapes/dtypes it touches (``op_structural_key`` canonicalizes
+    names away, so shape agreement must be checked separately)."""
+    parts = []
+    for s in task:
+        arr, _ = s.store_access()
+        loads = tuple((a.shape, a.dtype.name) for a, _ in s.load_accesses())
+        parts.append((op_structural_key(s), arr.shape, arr.dtype.name, loads))
+    return tuple(parts)
+
+
+def _derive_scan_roles(tasks: List[List[Statement]], start: int, p: int,
+                       n: int) -> Optional[ScanChainInfo]:
+    blocks = [[s for t in tasks[start + b * p: start + (b + 1) * p]
+               for s in t] for b in range(n)]
+
+    def sig(blk):
+        reads, writes, shapes = [], [], {}
+        for s in blk:
+            arr, _ = s.store_access()
+            writes.append(arr.name)
+            shapes[arr.name] = arr.shape
+            row = []
+            for a, _ in s.load_accesses():
+                row.append(a.name)
+                shapes[a.name] = a.shape
+            reads.append(tuple(row))
+        return reads, writes, shapes
+
+    t_reads, t_writes, t_shapes = sig(blocks[0])
+    # per-block template-name -> block-name maps (must be functions)
+    maps: List[Dict[str, str]] = []
+    for blk in blocks:
+        r, w, _ = sig(blk)
+        m: Dict[str, str] = {}
+        for pairs in ([list(zip(t_writes, w))]
+                      + [list(zip(tr, br)) for tr, br in zip(t_reads, r)]):
+            for tn, bn in pairs:
+                if m.setdefault(tn, bn) != bn:
+                    return None
+        maps.append(m)
+
+    tw_set = set(t_writes)
+    all_writes = {m[w] for m in maps for w in tw_set}
+    if len(all_writes) != n * len(tw_set):
+        return None                       # aliased writes across blocks
+    writes = tuple((w, tuple(m[w] for m in maps)) for w in sorted(tw_set))
+
+    carry_in = carry_out = None
+    reads = []
+    read_names = sorted({tn for row in t_reads for tn in row} - tw_set)
+    for rn in read_names:
+        per = [m[rn] for m in maps]
+        if all(x == per[0] for x in per):
+            if per[0] in all_writes:
+                return None               # fixed-name read of a block output
+            continue                      # invariant (stays in bufs)
+        carry_w = next(
+            (w for w in tw_set
+             if all(maps[b][rn] == maps[b - 1][w] for b in range(1, n))),
+            None)
+        if carry_w is not None:
+            if carry_in is not None:
+                return None               # multiple carries unsupported
+            if t_shapes.get(rn) != t_shapes.get(carry_w):
+                return None
+            carry_in, carry_out = rn, carry_w
+            continue
+        if any(x in all_writes for x in per):
+            return None                   # non-carry cross-block dependence
+        reads.append((rn, tuple(per)))
+    return ScanChainInfo(start, p, n, carry_in, carry_out,
+                         tuple(reads), writes)
+
+
+def detect_scan_chains(fn: Function) -> List[ScanChainInfo]:
+    """Find non-overlapping scan chains over the fusion task list, smallest
+    period first (a conv→relu pair matches at period 2 before any larger
+    super-period could claim it)."""
+    tasks = fusion_tasks(fn)
+    keys = [_task_block_key(t) for t in tasks]
+    m = len(tasks)
+    chains: List[ScanChainInfo] = []
+    used: set = set()
+    for p in range(1, m // 2 + 1):
+        i = 0
+        while i + 2 * p <= m:
+            if any((i + k) in used for k in range(p)):
+                i += 1
+                continue
+            bk = tuple(keys[i:i + p])
+            n = 1
+            while (i + (n + 1) * p <= m
+                   and tuple(keys[i + n * p: i + (n + 1) * p]) == bk
+                   and not any((i + n * p + k) in used for k in range(p))):
+                n += 1
+            if n >= 2:
+                info = _derive_scan_roles(tasks, i, p, n)
+                if info is not None:
+                    chains.append(info)
+                    used.update(range(i, i + n * p))
+                    i += n * p
+                    continue
+            i += 1
+    chains.sort(key=lambda c: c.start)
+    return chains

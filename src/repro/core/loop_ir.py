@@ -112,6 +112,32 @@ class DataflowRegion(Node):
 
 
 @dataclass
+class ScanRegion(Node):
+    """``n`` consecutive isomorphic task blocks (same ``op_structural_key``
+    chain, e.g. repeated conv→relu layers).  ``body`` keeps ALL unrolled
+    nodes — the first ``template_len`` form the template block — so every
+    backend that ignores the annotation (HLS-C, JAX oracle, sequential
+    Pallas) stays exactly correct by just executing ``body`` in order.
+    The traced Pallas serving path compiles the template once and
+    ``lax.scan``s it over the stacked per-block arrays:
+
+      * ``carry_in``/``carry_out`` — the inter-block activation chain
+        (block *i* reads what block *i-1* wrote);
+      * ``reads``  — template read name -> per-block source array names
+        (stacked into scan ``xs``: the per-layer weights);
+      * ``writes`` — template write name -> per-block dest array names
+        (scan ``ys``, scattered back after the scan).
+    """
+    body: List[Node] = field(default_factory=list)
+    n: int = 0
+    template_len: int = 0
+    carry_in: Optional[str] = None
+    carry_out: Optional[str] = None
+    reads: Dict[str, Tuple[str, ...]] = field(default_factory=dict)
+    writes: Dict[str, Tuple[str, ...]] = field(default_factory=dict)
+
+
+@dataclass
 class ProgramAST(Node):
     body: List[Node] = field(default_factory=list)
 
@@ -159,6 +185,16 @@ def describe(node: Node, indent: int = 0) -> str:
     if isinstance(node, TaskNode):
         return "\n".join([f"{pad}task {node.name}:"]
                          + [describe(c, indent + 1) for c in node.body])
+    if isinstance(node, ScanRegion):
+        carry = (f" carry {node.carry_in}->{node.carry_out}"
+                 if node.carry_in else "")
+        lines = [f"{pad}scan region ({node.n} blocks x "
+                 f"{node.template_len} nodes{carry}):"]
+        lines += [describe(c, indent + 1)
+                  for c in node.body[:node.template_len]]
+        if node.n > 1:
+            lines.append(f"{pad}  ... x{node.n}")
+        return "\n".join(lines)
     raise TypeError(node)
 
 

@@ -424,7 +424,7 @@ def verify_loop_ir(fn: Function, ast) -> None:
     regions/tasks are transparent containers: their bodies are verified in
     place, and a region's channels must name arrays of the function."""
     from .loop_ir import (DataflowRegion, ForNode, IfNode, ProgramAST,
-                          StmtNode, TaskNode)
+                          ScanRegion, StmtNode, TaskNode)
     params = set()
     for s in fn.statements:
         params |= set(s.domain.params)
@@ -441,6 +441,23 @@ def verify_loop_ir(fn: Function, ast) -> None:
                         raise VerifyError(
                             f"loop verifier: dataflow channel names unknown "
                             f"array {ch.array!r}")
+            for c in node.body:
+                rec(c, scope)
+        elif isinstance(node, ScanRegion):
+            if node.n < 2 or len(node.body) != node.n * node.template_len:
+                raise VerifyError(
+                    f"loop verifier: scan region claims {node.n} blocks x "
+                    f"{node.template_len} nodes but holds {len(node.body)}")
+            for tn, per in list(node.reads.items()) + list(node.writes.items()):
+                for a in (tn,) + tuple(per):
+                    if a not in fn.placeholders:
+                        raise VerifyError(
+                            f"loop verifier: scan region names unknown "
+                            f"array {a!r}")
+                if len(per) != node.n:
+                    raise VerifyError(
+                        f"loop verifier: scan region binds {tn!r} to "
+                        f"{len(per)} arrays for {node.n} blocks")
             for c in node.body:
                 rec(c, scope)
         elif isinstance(node, ForNode):
@@ -554,15 +571,23 @@ class LowerPallas(Pass):
 
 def lower_function_pallas(fn: Function, ast=None,
                           interpret: Optional[bool] = None,
-                          fallback: bool = True) -> Callable:
-    """Program-level Pallas runner: ``run(arrays) -> dict`` like the oracle.
+                          fallback: bool = True):
+    """Program-level Pallas artifact: a ``backend_pallas.PallasProgram``.
 
-    Without fusion specs the statements execute whole-nest sequentially,
-    which is exactly the unfused loop IR's instance order, so chaining the
-    per-statement ``pallas_call`` wrappers is semantics-preserving.  Fused
-    programs (shared loops interleave instances of different statements)
-    and unsupported statement shapes use the oracle instead."""
-    from .backend_pallas import PallasLowerError, lower_stmt_pallas
+    Calling the artifact runs the legacy exact path: without fusion specs
+    the statements execute whole-nest sequentially, which is exactly the
+    unfused loop IR's instance order, so chaining the per-statement
+    ``pallas_call`` wrappers is semantics-preserving; fused programs
+    (shared loops interleave instances of different statements) and
+    unsupported statement shapes use the oracle instead.  The serving
+    surface (``.jitted()`` / ``.batched(B)``) traces the whole loop AST —
+    including ``ScanRegion`` scan-over-layers — into one jit'd (and
+    vmapped / shard_mapped) computation."""
+    from .backend_pallas import (PallasLowerError, PallasProgram,
+                                 _interpret_default, lower_stmt_pallas)
+    from .astbuild import build_ast
+    if ast is None:
+        ast = build_ast(fn)
 
     plan = []
     fused = any(s.after_spec is not None for s in fn.statements)
@@ -577,22 +602,24 @@ def lower_function_pallas(fn: Function, ast=None,
         if not fallback:
             raise PallasLowerError(
                 f"{fn.name}: no Pallas lowering and fallback disabled")
-        from .astbuild import build_ast
         from .backend_jax import compile_jax
-        return compile_jax(fn, ast if ast is not None else build_ast(fn))
+        legacy, mode = compile_jax(fn, ast), "oracle"
+    else:
+        def run(arrays: Dict[str, Any]) -> Dict[str, Any]:
+            import jax.numpy as jnp
+            bufs = {k: jnp.asarray(v) for k, v in arrays.items()}
+            for ph in fn.placeholders.values():
+                if ph.name not in bufs:
+                    dt = ph.dtype.np or jnp.bfloat16  # DType.np None for bf16
+                    bufs[ph.name] = jnp.zeros(ph.shape, dtype=dt)
+            for dest, runner in plan:
+                bufs[dest] = runner(bufs)
+            return bufs
 
-    def run(arrays: Dict[str, Any]) -> Dict[str, Any]:
-        import jax.numpy as jnp
-        bufs = {k: jnp.asarray(v) for k, v in arrays.items()}
-        for ph in fn.placeholders.values():
-            if ph.name not in bufs:
-                dt = ph.dtype.np or jnp.bfloat16   # DType.np is None for bf16
-                bufs[ph.name] = jnp.zeros(ph.shape, dtype=dt)
-        for dest, runner in plan:
-            bufs[dest] = runner(bufs)
-        return bufs
+        legacy, mode = run, "pallas"
 
-    return run
+    eff = _interpret_default() if interpret is None else bool(interpret)
+    return PallasProgram(fn, ast, eff, legacy, mode)
 
 
 def backend_pass(target: str, **kw) -> Pass:
@@ -727,6 +754,9 @@ class CompileService:
         # path is O(lookup); mixing it with misses would make p50 useless)
         self._latency = {"hit": telemetry.Histogram(),
                          "miss": telemetry.Histogram()}
+        # served Pallas executors, keyed by (design key, batch size): the
+        # db removes the search, this removes the re-lower + re-jit
+        self._programs: Dict[Tuple[str, Optional[int]], Any] = {}
 
     # -- request normalization ----------------------------------------------
     def _normalize(self, kw: Dict[str, Any]) -> Tuple[Dict, Dict]:
@@ -813,6 +843,27 @@ class CompileService:
     def compile_many(self, fns: Sequence, **kw) -> List[ServiceResult]:
         """Serve a batch of functions through the db (replay traffic)."""
         return [self.compile_one(f, **kw) for f in fns]
+
+    def pallas_runner(self, f, batch_size: Optional[int] = None, **kw):
+        """Serve an *executable*: the DSE outcome via :meth:`compile_one`
+        (db hit → O(lookup)), then the function lowered to the Pallas
+        serving path — ``batch_size=None`` returns the jit'd
+        single-invocation executor, an int the ``batched(B)`` vmapped one.
+        Executors are cached per (design key, batch size), so repeat
+        traffic for the same program re-uses the compiled computation."""
+        res = self.compile_one(f, **kw)
+        ck = (res.key, batch_size)
+        runner = self._programs.get(ck)
+        if runner is None:
+            from .ir import Function
+            fn = f if isinstance(f, Function) else f.fn
+            program = compile(fn, target="pallas",
+                              dataflow=kw.get("dataflow"),
+                              outputs=kw.get("outputs"))
+            runner = (program.jitted() if batch_size is None
+                      else program.batched(batch_size))
+            self._programs[ck] = runner
+        return runner
 
     @property
     def stats(self):

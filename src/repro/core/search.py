@@ -274,6 +274,11 @@ class DesignPoint:
     signature: Tuple
     strategy: str
     feasible: bool
+    # steady-state per-invocation II (DesignReport.ii_region): reported
+    # metadata, NOT an objective axis — it is derived from the same
+    # schedule the latency axis already ranks, so adding it would only
+    # thin the frontier with duplicates of the latency ordering
+    ii_region: int = 0
 
     def objectives(self) -> Tuple[int, int, int]:
         return (self.latency, self.dsp, self.bram18)
@@ -316,7 +321,8 @@ class ParetoArchive:
             return None
         dsp, bram18 = report.resource_vector
         pt = DesignPoint(report.latency, dsp, bram18,
-                         sig, strategy, report.feasible)
+                         sig, strategy, report.feasible,
+                         getattr(report, "ii_region", 0))
         return self._insert(pt)
 
     def _insert(self, pt: DesignPoint) -> Optional[DesignPoint]:
@@ -351,7 +357,7 @@ class ParetoArchive:
             "infeasible": self.infeasible,
             "frontier": [
                 {"latency": p.latency, "dsp": p.dsp, "bram18": p.bram18,
-                 "strategy": p.strategy}
+                 "ii_region": p.ii_region, "strategy": p.strategy}
                 for p in self.frontier()
             ],
         }
